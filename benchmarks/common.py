@@ -1,0 +1,96 @@
+"""Shared benchmark plumbing: a small trained LM + timing helpers.
+
+The paper's tables compare quantization methods on a TRAINED model (a
+random-init model has no signal to destroy).  ``trained_lm`` trains a small
+dense LM on the deterministic synthetic stream (data/synthetic.py) and
+caches the params to experiments/cache/ so the grid benches reuse it.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data import make_calibration, token_batches
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+
+CACHE = pathlib.Path("experiments/cache")
+
+
+def bench_lm_config(vocab: int = 512, d: int = 128, layers: int = 4) -> ArchConfig:
+    return ArchConfig(
+        name=f"bench-lm-{d}x{layers}",
+        family="dense",
+        n_layers=layers,
+        d_model=d,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=4 * d,
+        vocab=vocab,
+        mlp="swiglu",
+        dtype="float32",
+        microbatch=8,
+        remat="none",
+    )
+
+
+def trained_lm(steps: int = 150, seed: int = 0, cfg: ArchConfig | None = None):
+    """Returns (cfg, model, trained params); cached on disk."""
+    cfg = cfg or bench_lm_config()
+    model = build_model(cfg)
+    tag = f"{cfg.name}_s{steps}_seed{seed}"
+    CACHE.mkdir(parents=True, exist_ok=True)
+    cache_file = CACHE / f"{tag}.npz"
+    params0 = model.init(jax.random.PRNGKey(seed))
+    if cache_file.exists():
+        flat, treedef = jax.tree.flatten(params0)
+        with np.load(cache_file) as z:
+            leaves = [jnp.asarray(z[f"a{i}"]) for i in range(len(flat))]
+        return cfg, model, jax.tree.unflatten(treedef, leaves)
+    opt = adamw(cosine_schedule(1e-3, steps, 20))
+    step_fn = jax.jit(make_train_step(model, opt, n_micro=1))
+    params, opt_state = params0, opt.init(params0)
+    stream = token_batches(cfg.vocab, 8, 128, seed=seed)
+    t0 = time.time()
+    for s in range(steps):
+        batch = next(stream)
+        params, opt_state, metrics = step_fn(params, opt_state, batch, jnp.int32(s))
+        if s % 50 == 0:
+            print(f"[bench-lm] step {s} loss={float(metrics['loss']):.3f}")
+    print(f"[bench-lm] trained {steps} steps in {time.time()-t0:.0f}s, "
+          f"final loss {float(metrics['loss']):.3f}")
+    flat, _ = jax.tree.flatten(params)
+    np.savez(cache_file, **{f"a{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return cfg, model, params
+
+
+def eval_ppl(model, params, cfg, seed: int = 99, n_seg: int = 8, seg_len: int = 128):
+    toks = make_calibration(cfg.vocab, n_segments=n_seg, seg_len=seg_len,
+                            seed=seed).tokens
+    logits = model.logits(params, model.forward(params, {"tokens": toks[:, :-1]})[0])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, toks[:, 1:, None], -1)[..., 0]
+    return float(jnp.exp(jnp.mean(nll)))
+
+
+def timeit(fn, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (blocks on results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

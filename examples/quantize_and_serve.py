@@ -1,0 +1,38 @@
+"""End-to-end PTQ scenario: train a small LM briefly, QuIP-quantize it to
+2 bits block-by-block (paper Sec. 6 schedule), and serve both models.
+
+    PYTHONPATH=src python examples/quantize_and_serve.py
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import trained_lm
+from repro.core.quantizer import QuipConfig
+from repro.data import make_calibration
+from repro.launch.quantize import perplexity, quantize_dense_model
+
+cfg, model, params = trained_lm(steps=120)
+calib = make_calibration(cfg.vocab, n_segments=16, seg_len=128, seed=7)
+eval_toks = make_calibration(cfg.vocab, n_segments=8, seg_len=128, seed=99).tokens
+
+print(f"model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
+ppl_fp = perplexity(
+    lambda t: model.logits(params, model.forward(params, {"tokens": t})[0]),
+    eval_toks,
+)
+print(f"fp32 perplexity: {ppl_fp:.2f}")
+
+for bits in (4, 2):
+    qcfg = QuipConfig(bits=bits, method="ldlq", incoherence=True, use_kernel=False)
+    qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, verbose=False)
+    ppl = perplexity(qm.logits, eval_toks)
+    print(f"QuIP {bits}-bit perplexity: {ppl:.2f} "
+          f"({(ppl/ppl_fp-1)*100:+.1f}% vs fp)")
+
+# greedy generation through the packed 2-bit path
+prompt = eval_toks[:2, :16]
+toks = prompt
+for _ in range(12):
+    logits = qm.logits(toks)[:, -1]
+    toks = jnp.concatenate([toks, jnp.argmax(logits, -1)[:, None]], axis=1)
+print("2-bit generation:", toks[0, 16:].tolist())

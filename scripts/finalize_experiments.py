@@ -1,0 +1,204 @@
+"""Splice the live roofline + perf tables into EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+DRY = pathlib.Path("experiments/dryrun")
+
+
+def fmt_s(v):
+    if v >= 1:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v*1e3:.1f}ms"
+    return f"{v*1e6:.0f}us"
+
+
+def row(rec):
+    t = rec["roofline"]
+    step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return (
+        f"| {rec['arch']} | {rec['shape']} | {fmt_s(t['compute_s'])} | "
+        f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+        f"{t['dominant']} | {t['useful_ratio']:.2f} | "
+        f"{t['mfu_bound']*100:.2f}% |"
+    )
+
+
+def baseline_table() -> str:
+    lines = [
+        "| arch | shape | compute | memory | collective | dominant |"
+        " useful | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    skips = []
+    for f in sorted(DRY.glob("*__pod1.json")):
+        if not f.name.endswith("__pod1.json"):
+            continue
+        rec = json.load(open(f))
+        if rec.get("status") == "ok":
+            lines.append(row(rec))
+    # note assigned skips
+    from repro.configs import ARCH_IDS, get_config, shapes_for, SHAPES
+
+    for a in ARCH_IDS:
+        names = {s.name for s in shapes_for(get_config(a))}
+        for s in SHAPES:
+            if s not in names:
+                skips.append(f"| {a} | {s} | — | — | — | skipped (full attention) | — | — |")
+    return "\n".join(lines + skips)
+
+
+def variant_rows(cell_prefix: str, tags: list[str]) -> str:
+    lines = [
+        "| variant | compute | memory | collective | step bound | MFU-bound |",
+        "|---|---|---|---|---|---|",
+    ]
+    for tag in tags:
+        f = DRY / (f"{cell_prefix}.{tag}.json" if tag else f"{cell_prefix}.json")
+        if not f.exists():
+            continue
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            lines.append(f"| {tag or 'baseline'} | ERROR | | | | |")
+            continue
+        t = rec["roofline"]
+        step = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        lines.append(
+            f"| {tag or 'baseline'} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"**{fmt_s(step)}** | {t['mfu_bound']*100:.2f}% |"
+        )
+    return "\n".join(lines)
+
+
+def perf_final() -> str:
+    out = ["### Final measured ladders (post accounting-v3; per-device per step)\n"]
+    out.append("**Cell A — mistral-large-123b decode_32k**\n")
+    out.append(variant_rows(
+        "mistral-large-123b__decode_32k__pod1",
+        ["", "a1_bf16pv", "a2_serving", "a3_int8kv", "a4_w2bit",
+         "a5_tp256", "a6_tp64"],
+    ))
+    out.append(
+        "\nEnd-to-end: step bound 578 ms -> 74 ms (**7.8x**), "
+        "collective-bound -> memory-bound, MFU-bound 0.11% -> 0.84%.  "
+        "a5/a6 re-slice the same 256 chips (decode wants max TP, not FSDP: "
+        "activations are tiny, weights dominate; TP-64 balances weight "
+        "reads against per-layer activation all-reduces).  The remaining "
+        "memory term still includes dequant+weight-dot traffic the Pallas "
+        "quant_matmul keeps in VMEM on TPU — kernel-adjusted step "
+        "~= 45 ms (**~13x** vs baseline).  The paper-faithful ladder is a1 "
+        "(the paper gives no distribution scheme); a2-a6 are beyond-paper "
+        "(serving rules, int8 KV, mesh re-slicing) + the paper's own 2-bit "
+        "weights as a first-class model path (a4).\n")
+    out.append("**Cell B — qwen3-14b train_4k**\n")
+    out.append(variant_rows(
+        "qwen3-14b__train_4k__pod1",
+        ["", "b1_bf16pv", "b2_ctxpar", "b3_remat_dots", "b4_mb32",
+         "b5_mb32_dots", "b6_bf16probs", "b7_fsdp2d", "b8_zero256",
+         "b9_zero256_full", "b10_qc512"],
+    ))
+    out.append(
+        "\nEnd-to-end: step bound 28.5 s -> 7.7 s (**3.7x**), MFU-bound "
+        "8.2% -> **23.9%**.  The decisive iteration is b8/b9: profiling "
+        "showed the dominant collective is the Megatron TP activation "
+        "all-reduce, NOT FSDP weight gathers (b7's 2D-weight hypothesis "
+        "REFUTED) — and a 14B model on 256 chips does not need tensor "
+        "parallelism at all.  Re-slicing the same chips to (data=256, "
+        "model=1) pure-ZeRO removes the TP all-reduces AND the 40-heads-"
+        "on-16 divisibility problem in one move.  b9 swaps to full remat "
+        "to fit HBM (temp 50.8 -> 17.4 GB; ~9% over the 16 GB v5e budget — "
+        "fits v5p trivially; on v5e, host-offload the fp32 master or run "
+        "(data=128, model=2)).  b2 (context parallelism) and b6 (bf16 "
+        "probs) REFUTED as measured; b10 (<5%) hits the stopping rule.  "
+        "Identified next step: Pallas flash attention (scores never reach "
+        "HBM) -> memory term ~3 s, step ~4.4 s (collective-bound), "
+        "MFU-bound ~42%.\n")
+    out.append("**Cell C — rwkv6-1.6b decode_32k**\n")
+    out.append(variant_rows(
+        "rwkv6-1.6b__decode_32k__pod1", ["", "c1_serving"]))
+    out.append(
+        "\nEnd-to-end: 5.2 ms -> 1.8 ms (**2.9x**), collective-bound -> "
+        "memory-bound, MFU-bound 0.14% -> 0.40%.\n")
+    out.append("**Bonus cell D — arctic-480b train_4k (most collective-bound MoE)**\n")
+    out.append(variant_rows(
+        "arctic-480b__train_4k__pod1", ["", "d1_mb64", "d2_ep8", "d3_ep_only"]))
+    out.append(
+        "\nD1 (microbatch 64 + dots remat): confirmed, small (5%).  "
+        "D2 (mesh (32,8), smaller EP groups): REFUTED — shrinking "
+        "attention/dense TP grows data-axis traffic faster than it saves "
+        "dispatch.  D3 (EP-only expert sharding, `expert_embed -> None`): "
+        "the profiled top term IS the per-microbatch (E,C,F) all-reduce "
+        "from FSDP-sharding the expert contraction dim, and removing it "
+        "cuts collectives 24% (MFU 2.33 -> 3.08%) — but leaves arctic's "
+        "457B expert params sharded only 16x: 288 GB/device temp.  "
+        "REFUTED BY CAPACITY: even fully sharded, AdamW fp32 state is "
+        "22.5 GB/device for this model at 256 chips; the honest fixes are "
+        "Adafactor (implemented in optim/) or more chips, not a sharding "
+        "rule.  Default rules keep EP x FSDP; the EP-only axis stays "
+        "available for small-expert MoEs.\n")
+    out.append("**Paper anchor — llama2-70b decode_32k, full QuIP serving stack**\n")
+    out.append(variant_rows(
+        "llama2-70b__decode_32k__pod1", ["paper_w2bit", "paper_best"]))
+    out.append(
+        "\npaper_w2bit = 16x16 mesh + serving rules + int8 KV + the paper's "
+        "2-bit weights; paper_best adds the A6 mesh re-slice (4, 64).  "
+        "54 ms per 128-sequence decode step = 2.4k tok/s/pod for the "
+        "paper's own Table-1 model, with the 2-bit weights contributing "
+        "the 8x weight-byte reduction that makes the step cache- rather "
+        "than weight-bound (the TPU translation of the paper's Table 4).\n")
+    return "\n".join(out)
+
+
+def multipod_table() -> str:
+    lines = [
+        "| arch | pod1 step | pod1 MFU | pod2 step | pod2 MFU | scaling |",
+        "|---|---|---|---|---|---|",
+    ]
+    for f1 in sorted(DRY.glob("*__train_4k__pod1.json")):
+        arch = f1.name.split("__")[0]
+        f2 = DRY / f"{arch}__train_4k__pod2.json"
+        if not f2.exists():
+            continue
+        r1, r2 = json.load(open(f1)), json.load(open(f2))
+        if r1.get("status") != "ok" or r2.get("status") != "ok":
+            continue
+        t1, t2 = r1["roofline"], r2["roofline"]
+        s1 = max(t1["compute_s"], t1["memory_s"], t1["collective_s"])
+        s2 = max(t2["compute_s"], t2["memory_s"], t2["collective_s"])
+        lines.append(
+            f"| {arch} | {fmt_s(s1)} | {t1['mfu_bound']*100:.2f}% | "
+            f"{fmt_s(s2)} | {t2['mfu_bound']*100:.2f}% | {s1/s2:.2f}x |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    md = pathlib.Path("EXPERIMENTS.md").read_text()
+    md = re.sub(
+        r"<!-- ROOFLINE_TABLE -->.*?(?=\n## |\nPer-cell)",
+        "<!-- ROOFLINE_TABLE -->\n" + baseline_table() + "\n\n",
+        md, flags=re.S,
+    ) if "<!-- ROOFLINE_TABLE -->" in md else md
+    md = re.sub(
+        r"<!-- PERF_FINAL -->.*?(?=\n### Stopping)",
+        "<!-- PERF_FINAL -->\n" + perf_final() + "\n",
+        md, flags=re.S,
+    ) if "<!-- PERF_FINAL -->" in md else md
+    md = re.sub(
+        r"<!-- MULTIPOD_TABLE -->.*?(?=\n## |\Z)",
+        "<!-- MULTIPOD_TABLE -->\n" + multipod_table() + "\n\n",
+        md, flags=re.S,
+    ) if "<!-- MULTIPOD_TABLE -->" in md else md
+    pathlib.Path("EXPERIMENTS.md").write_text(md)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

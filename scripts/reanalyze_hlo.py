@@ -1,0 +1,57 @@
+"""Re-derive every dry-run JSON's roofline from its archived HLO.
+
+The compiled HLO is archived per cell (experiments/hlo/*.zst), so analyzer
+improvements re-apply WITHOUT recompiling 64 cells:
+
+    PYTHONPATH=src python scripts/reanalyze_hlo.py
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+import zstandard
+
+from repro.configs import get_config, SHAPES
+from repro.runtime.hlo_analysis import analyze_hlo
+from repro.runtime.roofline import roofline_terms
+
+
+def main():
+    n = 0
+    for jf in sorted(pathlib.Path("experiments/dryrun").glob("*.json")):
+        rec = json.load(open(jf))
+        if rec.get("status") != "ok":
+            continue
+        hp = rec.get("hlo_path")
+        if not hp or not pathlib.Path(hp).exists():
+            print(f"skip {jf.name}: no archived HLO", file=sys.stderr)
+            continue
+        text = zstandard.ZstdDecompressor().decompress(
+            open(hp, "rb").read()
+        ).decode()
+        chips = rec["chips"]
+        stats = analyze_hlo(text, chips)
+        terms = roofline_terms(
+            hlo_flops=stats.flops,
+            hlo_bytes=stats.bytes_accessed,
+            collective_bytes=stats.collectives.total_bytes,
+            chips=chips,
+            cfg=get_config(rec["arch"]),
+            shape=SHAPES[rec["shape"]],
+            flops_are_global=False,
+        )
+        rec["hlo_weighted"] = {
+            "flops_per_device": stats.flops,
+            "bytes_per_device": stats.bytes_accessed,
+        }
+        rec["collectives"] = stats.collectives.summary()
+        rec["roofline"] = terms.to_dict()
+        json.dump(rec, open(jf, "w"), indent=1, default=str)
+        n += 1
+    print(f"re-analyzed {n} cells")
+
+
+if __name__ == "__main__":
+    main()

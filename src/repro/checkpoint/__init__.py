@@ -1,0 +1,14 @@
+"""Fault-tolerant checkpointing: atomic sharded npz, keep-k, auto-resume."""
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "load_checkpoint",
+    "latest_step",
+]

@@ -1,0 +1,180 @@
+"""Architecture config schema + input-shape registry.
+
+One :class:`ArchConfig` covers all assigned families (dense / moe / rwkv /
+hybrid / encdec / vlm) via family-specific optional fields.  Each
+architecture module in this package exports ``CONFIG`` (the exact assigned
+dims) and ``smoke()`` (a reduced same-family variant for CPU smoke tests).
+
+Shapes (assigned): every LM cell is seq_len × global_batch; ``decode_*`` and
+``long_*`` lower ``serve_step`` (one token against a seq_len KV/recurrent
+state), not ``train_step``.  ``long_500k`` runs only for sub-quadratic
+families (ssm / hybrid); the skip for pure full-attention archs is recorded
+in DESIGN.md §Arch-applicability and in the roofline table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+__all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "shapes_for"]
+
+Family = Literal["dense", "moe", "rwkv", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # attention options
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e6
+    causal: bool = True
+
+    # mlp options
+    mlp: Literal["swiglu", "gelu"] = "swiglu"
+    mlp_bias: bool = False
+
+    # moe options
+    n_experts: int = 0
+    top_k: int = 0
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    capacity_factor: float = 1.25
+
+    # ssm / hybrid options
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    shared_attn_period: int = 0  # hybrid: shared attn block every k layers
+
+    # rwkv options
+    rwkv_head_size: int = 64
+    rwkv_decay_lora: int = 64
+    rwkv_mix_lora: int = 32
+
+    # encdec options
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+
+    # vlm options
+    cross_every: int = 0  # every k-th layer is a cross-attn layer
+    n_patches: int = 1024  # stub image-patch count (frontend stubbed)
+
+    # misc
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    attn_q_chunk: int = 1024  # query-block size for chunked attention
+    attn_bf16_probs: bool = False  # flash-style bf16 exp/probs (§Perf B6)
+    weight_bits: int = 0  # 0 = dense bf16; 2/3/4 = QuIP-packed serving path
+
+    # training defaults (overridable by the launcher)
+    microbatch: int = 16  # global microbatch per grad-accum step
+    remat: Literal["none", "full", "dots"] = "full"
+
+    # which assigned shapes run for this arch (None = family default)
+    shape_skips: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # --- derived ---
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + blocks)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.family == "rwkv":
+            blk = 4 * d * d + d * d // 2 + 2 * d * f  # rough
+            n_blocks = self.n_layers
+        elif self.family == "hybrid":
+            di, s = self.d_inner, self.ssm_state
+            mamba = d * (2 * di + 2 * s + self.ssm_heads) + di * d
+            n_shared = max(1, self.n_layers // max(self.shared_attn_period, 1))
+            blk = mamba
+            n_blocks = self.n_layers - n_shared
+            shared = attn + 3 * d * f
+            return v * d * (1 if self.tie_embeddings else 2) + n_blocks * blk + shared
+        elif self.family == "moe":
+            ffn = self.n_experts * 3 * d * f + d * self.n_experts
+            if self.dense_residual:
+                ffn += 3 * d * f
+            blk = attn + ffn
+            n_blocks = self.n_layers
+        else:
+            n_mlp = 3 if self.mlp == "swiglu" else 2
+            blk = attn + n_mlp * d * f
+            n_blocks = (
+                self.n_enc_layers + self.n_dec_layers
+                if self.family == "encdec"
+                else self.n_layers
+            )
+            if self.family == "encdec":
+                blk += attn  # decoder cross-attn (rough: count once per layer pair)
+            if self.family == "vlm" and self.cross_every:
+                pass  # cross layers already inside n_layers
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return emb + n_blocks * blk
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if self.family != "moe" or not self.n_experts:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full = self.param_count()
+        ffn_total = self.n_layers * self.n_experts * 3 * d * f
+        ffn_active = self.n_layers * self.top_k * 3 * d * f
+        return full - ffn_total + ffn_active
+
+
+def shapes_for(cfg: ArchConfig) -> list[ShapeSpec]:
+    """The assigned shapes this arch runs (sub-quadratic gating applied)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name in cfg.shape_skips:
+            continue
+        if s.name == "long_500k" and cfg.family not in ("rwkv", "hybrid"):
+            continue  # needs sub-quadratic attention (DESIGN.md §5)
+        out.append(s)
+    return out

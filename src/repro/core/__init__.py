@@ -1,0 +1,50 @@
+"""QuIP core: adaptive rounding + incoherence processing (the paper)."""
+from repro.core.hessian import HessianAccumulator, damp, expert_hessians
+from repro.core.incoherence import (
+    OrthogonalTransform,
+    PreprocessState,
+    apply_transform,
+    incoherence_postprocess,
+    incoherence_preprocess,
+    make_transform,
+    mu_hessian,
+    mu_weight,
+)
+from repro.core.ldlq import (
+    ldl_decomposition,
+    ldlq,
+    ldlq_blocked,
+    optq_reference,
+    quantize_nearest,
+    quantize_stoch,
+)
+from repro.core.methods import METHODS, round_weights
+from repro.core.proxy import proxy_loss, trD_trH
+from repro.core.quantizer import QuantizedLinear, QuipConfig, quantize_layer
+
+__all__ = [
+    "HessianAccumulator",
+    "damp",
+    "expert_hessians",
+    "OrthogonalTransform",
+    "PreprocessState",
+    "apply_transform",
+    "incoherence_postprocess",
+    "incoherence_preprocess",
+    "make_transform",
+    "mu_hessian",
+    "mu_weight",
+    "ldl_decomposition",
+    "ldlq",
+    "ldlq_blocked",
+    "optq_reference",
+    "quantize_nearest",
+    "quantize_stoch",
+    "METHODS",
+    "round_weights",
+    "proxy_loss",
+    "trD_trH",
+    "QuantizedLinear",
+    "QuipConfig",
+    "quantize_layer",
+]

@@ -1,0 +1,82 @@
+"""Proxy-Hessian estimation H = E[x x^T] from calibration activations.
+
+The paper computes H per linear layer from 128×2048-token calibration
+segments, one transformer block at a time, feeding each block the *already
+quantized* prefix of the network (Sec. 6 "Setup").  ``HessianAccumulator``
+is the building block; ``repro.launch.quantize`` owns the block-by-block
+schedule.
+
+Distribution: activations arrive sharded over the ``data`` mesh axis; the
+accumulator sums locally in fp32 and the driver ``psum``s once per layer.
+MoE layers keep one accumulator per expert over *routed* tokens, falling
+back to the layer-shared H for starved experts (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["HessianAccumulator", "damp", "expert_hessians"]
+
+
+@dataclasses.dataclass
+class HessianAccumulator:
+    """Running second-moment accumulator (fp32, numerically safe)."""
+
+    H: jax.Array  # (n, n) running sum of x x^T
+    count: jax.Array  # scalar token count
+
+    @classmethod
+    def create(cls, n: int) -> "HessianAccumulator":
+        return cls(H=jnp.zeros((n, n), jnp.float32), count=jnp.zeros((), jnp.float32))
+
+    def update(self, X: jax.Array, mask: jax.Array | None = None) -> "HessianAccumulator":
+        """X: (..., n) activations; mask: optional (...,) validity weights."""
+        Xf = X.reshape(-1, X.shape[-1]).astype(jnp.float32)
+        if mask is not None:
+            mf = mask.reshape(-1).astype(jnp.float32)
+            Xf = Xf * mf[:, None]
+            cnt = jnp.sum(mf)
+        else:
+            cnt = jnp.float32(Xf.shape[0])
+        return HessianAccumulator(H=self.H + Xf.T @ Xf, count=self.count + cnt)
+
+    def finalize(self) -> jax.Array:
+        """Mean second moment; damping is applied later (Alg. 1 line 1)."""
+        return self.H / jnp.maximum(self.count, 1.0)
+
+
+def damp(H: jax.Array, alpha: float) -> jax.Array:
+    """OPTQ-style damping: H + alpha * mean(diag(H)) * I."""
+    n = H.shape[0]
+    return H + alpha * jnp.mean(jnp.diagonal(H)) * jnp.eye(n, dtype=H.dtype)
+
+
+def expert_hessians(
+    X: jax.Array,
+    expert_idx: jax.Array,
+    num_experts: int,
+    *,
+    min_tokens: int = 64,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-expert proxy Hessians from routed calibration activations.
+
+    X: (T, n) token activations entering the MoE block; ``expert_idx``:
+    (T, k) top-k routing decisions.  Returns ``(Hs (E, n, n), counts (E,))``
+    where experts with fewer than ``min_tokens`` routed tokens are replaced
+    by the shared (all-token) H — a starved expert has no reliable curvature
+    estimate, and the shared H is the correct prior (DESIGN.md §5).
+    """
+    T, n = X.shape
+    onehot = jax.nn.one_hot(expert_idx, num_experts, dtype=jnp.float32)
+    weights = jnp.sum(onehot, axis=1) if expert_idx.ndim == 2 else onehot
+    # (E, n, n): sum over tokens routed to each expert
+    Hs = jnp.einsum("te,ti,tj->eij", weights, X, X)
+    counts = jnp.sum(weights, axis=0)
+    H_shared = X.T @ X / T
+    Hs = Hs / jnp.maximum(counts, 1.0)[:, None, None]
+    ok = (counts >= min_tokens)[:, None, None]
+    Hs = jnp.where(ok, Hs, H_shared[None])
+    return Hs, counts

@@ -1,0 +1,209 @@
+"""LDLQ: adaptive rounding with linear feedback (QuIP Sec. 3).
+
+Implements the family of rounding methods
+
+    What = Q(W + (W - What) @ U)                                  (Eq. 2)
+
+with ``U`` strictly upper triangular, and the optimal LDL assignment
+
+    H = (Udot + I) D (Udot + I)^T                                 (Eq. 4)
+
+Also implements the OPTQ/GPTQ reference algorithm (used by tests to verify
+Theorem 6: OPTQ is exactly LDLQ) and the nearest / stochastic baselines.
+
+All routines operate on the *integer quantization grid* ``[0, 2^b - 1]``;
+scaling in and out of that grid is the job of
+:mod:`repro.core.incoherence` (Algorithms 1 and 2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ldl_decomposition",
+    "quantize_nearest",
+    "quantize_stoch",
+    "ldlq",
+    "ldlq_blocked",
+    "optq_reference",
+]
+
+
+def ldl_decomposition(H: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """UDU^T ("upper") LDL decomposition used by QuIP.
+
+    Returns ``(Udot, D)`` with ``Udot`` *strictly* upper triangular and ``D``
+    the non-negative diagonal (as a vector) such that
+
+        H = (Udot + I) diag(D) (Udot + I)^T.
+
+    Computed from a Cholesky factorization of the index-reversed matrix:
+    if P is the flip permutation and P H P = L L^T, then U = P L P is upper
+    triangular and H = U U^T; unit-normalizing columns of U gives the result.
+    """
+    Hr = H[::-1, ::-1]
+    L = jnp.linalg.cholesky(Hr)
+    U = L[::-1, ::-1]  # upper triangular, H = U @ U.T
+    d = jnp.diagonal(U)
+    Ut = U / d[None, :]  # unit upper triangular
+    D = d * d
+    n = H.shape[0]
+    Udot = Ut - jnp.eye(n, dtype=H.dtype)
+    return Udot, D
+
+
+def quantize_nearest(z: jax.Array, maxq: int) -> jax.Array:
+    """Nearest rounding to the grid {0, ..., maxq} with clamping."""
+    return jnp.clip(jnp.round(z), 0, maxq)
+
+
+def quantize_stoch(z: jax.Array, maxq: int, key: jax.Array) -> jax.Array:
+    """Unbiased stochastic rounding to the grid {0, ..., maxq}: E[Q(z)] = z."""
+    lo = jnp.floor(z)
+    frac = z - lo
+    up = jax.random.uniform(key, z.shape, dtype=z.dtype) < frac
+    return jnp.clip(lo + up.astype(z.dtype), 0, maxq)
+
+
+def _make_q(maxq: int, stochastic: bool, key: Optional[jax.Array]):
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+
+        def q(z, k):
+            return quantize_stoch(z, maxq, k)
+    else:
+
+        def q(z, k):  # noqa: ARG001 - uniform signature
+            return quantize_nearest(z, maxq)
+
+    return q
+
+
+@functools.partial(jax.jit, static_argnames=("maxq", "stochastic"))
+def ldlq(
+    W: jax.Array,
+    Udot: jax.Array,
+    maxq: int,
+    *,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference LDLQ: sequential column rounding with linear feedback.
+
+    ``W``: (m, n) weights already mapped onto the quantization grid domain.
+    ``Udot``: (n, n) strictly upper triangular linear feedback (from
+    :func:`ldl_decomposition`, or any other member of the Eq.-2 class).
+
+    O(m n^2); the production path is :func:`ldlq_blocked` /
+    ``repro.kernels.ldlq``.
+    """
+    m, n = W.shape
+    q = _make_q(maxq, stochastic, key)
+    keys = (
+        jax.random.split(key, n)
+        if stochastic
+        else jnp.zeros((n, 2), dtype=jnp.uint32)
+    )
+
+    def body(k, What):
+        # (W - What) is zero for columns >= k (they are still unquantized),
+        # and Udot[:, k] is supported on rows < k, so the full matvec equals
+        # the triangular one.
+        corr = (W - What) @ Udot[:, k]
+        val = W[:, k] + corr
+        return What.at[:, k].set(q(val, keys[k]))
+
+    return jax.lax.fori_loop(0, n, body, W)
+
+
+@functools.partial(jax.jit, static_argnames=("maxq", "block", "stochastic"))
+def ldlq_blocked(
+    W: jax.Array,
+    Udot: jax.Array,
+    maxq: int,
+    *,
+    block: int = 128,
+    stochastic: bool = False,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Blocked LDLQ (GPTQ-style two-level schedule), XLA-only version.
+
+    Processes ``block`` columns with sequential in-block feedback, then
+    applies the trailing correction ``E_blk @ Udot[blk, rest]`` as one MXU
+    matmul.  Mathematically identical to :func:`ldlq` (the feedback is
+    linear, so it splits across the block boundary exactly).
+
+    n must be divisible by ``block`` (configs are; tests pad).
+    """
+    m, n = W.shape
+    assert n % block == 0, f"n={n} not divisible by block={block}"
+    nb = n // block
+    q = _make_q(maxq, stochastic, key)
+    keys = (
+        jax.random.split(key, n).reshape(nb, block, 2)
+        if stochastic
+        else jnp.zeros((nb, block, 2), dtype=jnp.uint32)
+    )
+
+    def outer(carry, inp):
+        # Err holds (W - What) for already-quantized columns, 0 elsewhere.
+        What, Err = carry
+        i, ks = inp
+        Wblk = jax.lax.dynamic_slice(W, (0, i * block), (m, block))
+        Upanel = jax.lax.dynamic_slice(Udot, (0, i * block), (n, block))
+        Ublk = jax.lax.dynamic_slice(
+            Udot, (i * block, i * block), (block, block)
+        )
+        # Feedback from all previous blocks, one MXU matmul (the Pallas
+        # production path in repro.kernels.ldlq mirrors this schedule).
+        base = Err @ Upanel  # (m, block)
+
+        def inner(k, st):
+            Wq, E = st  # E = (Wblk - Wq) for in-block quantized columns
+            corr = base[:, k] + E @ Ublk[:, k]
+            val = Wblk[:, k] + corr
+            qv = q(val, ks[k])
+            Wq = Wq.at[:, k].set(qv)
+            E = E.at[:, k].set(Wblk[:, k] - qv)
+            return Wq, E
+
+        Wq, E = jax.lax.fori_loop(
+            0, block, inner, (Wblk, jnp.zeros_like(Wblk))
+        )
+        What = jax.lax.dynamic_update_slice(What, Wq, (0, i * block))
+        Err = jax.lax.dynamic_update_slice(Err, E, (0, i * block))
+        return (What, Err), None
+
+    (What, _), _ = jax.lax.scan(
+        outer, (W, jnp.zeros_like(W)), (jnp.arange(nb), keys)
+    )
+    return What
+
+
+def optq_reference(W: jax.Array, H: jax.Array, maxq: int) -> jax.Array:
+    """Textbook OPTQ/GPTQ (Frantar et al. 2023), used as a test oracle.
+
+    After quantizing column t it updates every remaining column with the
+    scaled error via the Cholesky factor of H^{-1}.  Per Theorem 6 this is
+    exactly LDLQ; we keep the historically-distinct implementation (matrix
+    inversion + Cholesky, the inefficiency QuIP removes) as the oracle.
+    """
+    n = H.shape[0]
+    Hinv = jnp.linalg.inv(H)
+    # Upper Cholesky of Hinv: Hinv = C^T C with C upper triangular.
+    C = jnp.linalg.cholesky(Hinv, upper=True)
+
+    def body(k, Wcur):
+        c_kk = C[k, k]
+        qv = quantize_nearest(Wcur[:, k], maxq)
+        err = (Wcur[:, k] - qv) / c_kk
+        mask = (jnp.arange(n) > k).astype(Wcur.dtype)
+        Wcur = Wcur - jnp.outer(err, C[k, :] * mask)
+        return Wcur.at[:, k].set(qv)
+
+    return jax.lax.fori_loop(0, n, body, W)

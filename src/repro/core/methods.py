@@ -1,0 +1,96 @@
+"""Rounding-method registry: the paper's Table-2 grid of quantizers.
+
+Every method maps ``(W_grid, H, maxq, key) -> What_grid`` on the integer
+grid domain ``[0, maxq]``; incoherence processing composes orthogonally (it
+happens before/after, in :mod:`repro.core.quantizer`).
+
+  near     nearest rounding, no feedback
+  stoch    unbiased stochastic rounding, no feedback
+  ldlq     LDLQ == OPTQ (Theorem 6); blocked production schedule
+  ldlq_rg  LDLQ with diag(H)-descending column reorder + greedy post-passes
+  greedy   stand-alone greedy coordinate descent (Alg. 4)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.greedy import greedy as _greedy_fn
+from repro.core.ldlq import (
+    ldl_decomposition,
+    ldlq as _ldlq_seq,
+    ldlq_blocked,
+    quantize_nearest,
+    quantize_stoch,
+)
+
+__all__ = ["round_weights", "METHODS", "pick_block"]
+
+
+def pick_block(n: int, target: int = 128) -> int:
+    """Largest divisor of n that is <= target (LDLQ panel width)."""
+    for b in range(min(target, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _ldlq(W, H, maxq, key, *, stochastic=False, block=128):
+    Udot, _ = ldl_decomposition(H)
+    b = pick_block(W.shape[1], block)
+    if b >= 8:
+        return ldlq_blocked(
+            W, Udot, maxq, block=b, stochastic=stochastic, key=key
+        )
+    return _ldlq_seq(W, Udot, maxq, stochastic=stochastic, key=key)
+
+
+def _ldlq_rg(W, H, maxq, key, *, greedy_passes=10, block=128):
+    d = jnp.diagonal(H)
+    perm = jnp.argsort(-d)
+    inv = jnp.argsort(perm)
+    Wp = W[:, perm]
+    Hp = H[perm][:, perm]
+    What = _ldlq(Wp, Hp, maxq, key, block=block)
+    if greedy_passes:
+        What = _greedy_fn(Wp, Hp, maxq, passes=greedy_passes, init=What)
+    return What[:, inv]
+
+
+def _near(W, H, maxq, key):  # noqa: ARG001
+    return quantize_nearest(W, maxq)
+
+
+def _stoch(W, H, maxq, key):  # noqa: ARG001
+    return quantize_stoch(W, maxq, key)
+
+
+def _greedy(W, H, maxq, key, *, greedy_passes=10):  # noqa: ARG001
+    return _greedy_fn(W, H, maxq, passes=greedy_passes)
+
+
+METHODS: dict[str, Callable] = {
+    "near": _near,
+    "stoch": _stoch,
+    "ldlq": _ldlq,
+    "ldlq_stoch": lambda W, H, maxq, key, **kw: _ldlq(
+        W, H, maxq, key, stochastic=True, **kw
+    ),
+    "ldlq_rg": _ldlq_rg,
+    "greedy": _greedy,
+}
+
+
+def round_weights(
+    method: str,
+    W: jax.Array,
+    H: jax.Array,
+    maxq: int,
+    key: Optional[jax.Array] = None,
+    **kw,
+) -> jax.Array:
+    if method not in METHODS:
+        raise KeyError(f"unknown rounding method {method!r}; have {list(METHODS)}")
+    return METHODS[method](W, H, maxq, key, **kw)

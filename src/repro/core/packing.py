@@ -1,0 +1,59 @@
+"""Bit-packing of quantized integer weights.
+
+Layout contract (shared with ``repro.kernels.quant_matmul``):
+
+  * logical quantized weight is ``Wq (m, n)`` with values in ``[0, 2^b - 1]``
+    computing ``y = x @ Wq^T`` after dequantization;
+  * we store the *transpose* packed along the reduction dimension:
+    ``packed (ceil(n / vals) , m) int32`` where ``vals = 32 // b`` values per
+    word (b=3 packs 10 values/word, wasting 2 bits — still 3.2 bits/weight).
+    Value ``j`` of word ``i`` holds ``Wq[:, i*vals + j]`` in bits
+    ``[b*j, b*(j+1))``.
+
+Packing along the reduction dim means the kernel unpacks contiguous K-tiles
+straight into the MXU operand layout with no transposition in VMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["vals_per_word", "pack", "unpack", "packed_rows"]
+
+
+def vals_per_word(bits: int) -> int:
+    if bits not in (2, 3, 4, 8):
+        raise ValueError(f"unsupported bit width: {bits}")
+    return 32 // bits
+
+
+def packed_rows(n: int, bits: int) -> int:
+    v = vals_per_word(bits)
+    return (n + v - 1) // v
+
+
+def pack(Wq: jax.Array, bits: int) -> jax.Array:
+    """Pack integer grid weights Wq (m, n) -> (packed_rows(n), m) int32."""
+    m, n = Wq.shape
+    v = vals_per_word(bits)
+    rows = packed_rows(n, bits)
+    Wt = Wq.T.astype(jnp.uint32)  # (n, m)
+    pad = rows * v - n
+    if pad:
+        Wt = jnp.pad(Wt, ((0, pad), (0, 0)))
+    Wt = Wt.reshape(rows, v, m)
+    shifts = (jnp.arange(v, dtype=jnp.uint32) * bits)[None, :, None]
+    words = jnp.sum(Wt << shifts, axis=1, dtype=jnp.uint32)
+    return words.astype(jnp.int32)
+
+
+def unpack(packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack`: (rows, m) int32 -> (m, n) int32 grid values."""
+    rows, m = packed.shape
+    v = vals_per_word(bits)
+    mask = jnp.uint32(2**bits - 1)
+    words = packed.astype(jnp.uint32)[:, None, :]  # (rows, 1, m)
+    shifts = (jnp.arange(v, dtype=jnp.uint32) * bits)[None, :, None]
+    vals = (words >> shifts) & mask  # (rows, v, m)
+    Wt = vals.reshape(rows * v, m)[:n]
+    return Wt.T.astype(jnp.int32)

@@ -1,0 +1,21 @@
+"""Adaptive-rounding proxy objective (Eq. 1) and related diagnostics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["proxy_loss", "trD_trH"]
+
+
+def proxy_loss(What: jax.Array, W: jax.Array, H: jax.Array) -> jax.Array:
+    """ℓ(What) = tr((What - W) H (What - W)^T)."""
+    E = (What - W).astype(jnp.float32)
+    return jnp.einsum("ij,jk,ik->", E, H.astype(jnp.float32), E)
+
+
+def trD_trH(H: jax.Array) -> jax.Array:
+    """tr(D)/tr(H) for the LDL decomposition of H (Table 6 statistic)."""
+    from repro.core.ldlq import ldl_decomposition
+
+    _, D = ldl_decomposition(H)
+    return jnp.sum(D) / jnp.trace(H)

@@ -1,0 +1,166 @@
+"""QuIP Algorithm 3: full per-layer quantization pipeline + inference repr.
+
+``quantize_layer`` = Alg.1 (incoherence pre-processing) → rounding method
+(LDLQ et al.) → packing.  The result is a :class:`QuantizedLinear`: packed
+2/3/4-bit integers plus O(√n)-sized transform factors regenerable from the
+seed.  Inference never materializes the dequantized matrix:
+
+    y = x·D^{-1} →(V)→ quant_matmul(packed) →(U^T)→ y
+
+mirroring the paper's "multiply by W = U^T Ŵ V" factorization (Sec. 4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import incoherence as inc
+from repro.core import packing
+from repro.core.hessian import damp
+from repro.core.methods import round_weights
+from repro.core.proxy import proxy_loss
+
+__all__ = ["QuipConfig", "QuantizedLinear", "quantize_layer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuipConfig:
+    bits: int = 2
+    method: str = "ldlq"  # near | stoch | ldlq | ldlq_stoch | ldlq_rg | greedy
+    incoherence: bool = True
+    transform: inc.TransformKind = "kronecker"  # | "hadamard" | "none"
+    rho: float = 2.4
+    alpha: float = 0.01
+    rescale: bool = True
+    permute: bool = True
+    spectrum_range: Optional[bool] = None  # default: == incoherence
+    greedy_passes: int = 10
+    block: int = 128
+    use_kernel: bool = True  # Pallas quant_matmul on the inference path
+
+    @property
+    def maxq(self) -> int:
+        return 2**self.bits - 1
+
+    def label(self) -> str:
+        return f"{self.method}{'+incp' if self.incoherence else ''}@{self.bits}b"
+
+
+@dataclasses.dataclass
+class QuantizedLinear:
+    """Inference-ready quantized linear layer: y = x @ W_eff^T.
+
+    ``packed``: (packed_rows(n), m) int32 along the reduction dim.
+    ``state``:  transforms + scales needed to apply/revert Alg. 2.
+    """
+
+    packed: jax.Array
+    bits: int
+    m: int
+    n: int
+    state: inc.PreprocessState
+    use_kernel: bool = True
+
+    def dequantize(self) -> jax.Array:
+        """Materialize W_eff (m, n) — tests/export only."""
+        Wq = packing.unpack(self.packed, self.bits, self.n).astype(jnp.float32)
+        return inc.incoherence_postprocess(Wq, self.state)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        """y = x @ W_eff^T with x (..., n) — structured inference path."""
+        st = self.state
+        h = x if st.D is None else x / st.D
+        h = inc.apply_transform(st.V, h)
+        z = self._matmul(h)
+        return inc.apply_transform(st.U, z, inverse=True)
+
+    def _matmul(self, h: jax.Array) -> jax.Array:
+        """z = h @ deq(Wq)^T, deq(q) = (2s/maxq)·q − s."""
+        if self.use_kernel:
+            from repro.kernels.quant_matmul import ops as qmm
+
+            return qmm.quant_matmul(
+                h, self.packed, self.bits, self.n, self.state.s, self.state.maxq
+            )
+        Wq = packing.unpack(self.packed, self.bits, self.n)
+        Wd = inc.from_grid(Wq.astype(h.dtype), self.state.s.astype(h.dtype), self.state.maxq)
+        return h @ Wd.T
+
+
+def quantize_layer(
+    W: jax.Array,
+    H: jax.Array,
+    cfg: QuipConfig,
+    *,
+    seed: int = 0,
+    key: Optional[jax.Array] = None,
+    collect_stats: bool = True,
+) -> tuple[QuantizedLinear, dict]:
+    """Algorithm 3 on one layer.  W: (m, n), H: (n, n) SPD proxy Hessian."""
+    m, n = W.shape
+    W = W.astype(jnp.float32)
+    H = H.astype(jnp.float32)
+    spectrum = (
+        cfg.spectrum_range if cfg.spectrum_range is not None else cfg.incoherence
+    )
+    if cfg.incoherence:
+        Wg, Ht, state = inc.incoherence_preprocess(
+            W,
+            H,
+            bits=cfg.bits,
+            seed=seed,
+            rho=cfg.rho,
+            alpha=cfg.alpha,
+            kind=cfg.transform,
+            rescale=cfg.rescale,
+            permute=cfg.permute,
+            spectrum_range=spectrum,
+        )
+    else:
+        # Baseline processing: damping only, identity transforms.
+        Ht = damp(H, cfg.alpha)
+        s = (
+            inc.quant_range(W, cfg.rho)
+            if spectrum
+            else jnp.max(jnp.abs(W))
+        )
+        state = inc.PreprocessState(
+            U=inc.make_transform("none", m, 0),
+            V=inc.make_transform("none", n, 0),
+            D=None,
+            s=s,
+            maxq=cfg.maxq,
+        )
+        Wg = inc.to_grid(W, s, cfg.maxq)
+
+    kw = {}
+    if cfg.method in ("ldlq", "ldlq_stoch"):
+        kw["block"] = cfg.block
+    if cfg.method in ("ldlq_rg", "greedy"):
+        kw["greedy_passes"] = cfg.greedy_passes
+    if key is None:
+        key = jax.random.PRNGKey(seed ^ 0x5EED)
+    Wq = round_weights(cfg.method, Wg, Ht, cfg.maxq, key, **kw)
+
+    packed = packing.pack(Wq.astype(jnp.int32), cfg.bits)
+    layer = QuantizedLinear(
+        packed=packed, bits=cfg.bits, m=m, n=n, state=state,
+        use_kernel=cfg.use_kernel,
+    )
+    stats: dict = {}
+    if collect_stats:
+        What = layer.dequantize()
+        stats = {
+            "proxy_loss": float(proxy_loss(What, W, H)),
+            "frob_rel_err": float(
+                jnp.linalg.norm(What - W) / jnp.linalg.norm(W)
+            ),
+            "s": float(state.s),
+            "mu_w_pre": float(inc.mu_weight(W)),
+            "bits": cfg.bits,
+            "method": cfg.label(),
+        }
+    return layer, stats

@@ -1,0 +1,9 @@
+"""Data pipeline: deterministic synthetic LM streams + calibration sets."""
+from repro.data.synthetic import (
+    CalibrationSet,
+    SyntheticLM,
+    make_calibration,
+    token_batches,
+)
+
+__all__ = ["SyntheticLM", "CalibrationSet", "make_calibration", "token_batches"]

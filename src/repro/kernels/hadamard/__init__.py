@@ -1,0 +1,3 @@
+from repro.kernels.hadamard.ops import hadamard_transform
+
+__all__ = ["hadamard_transform"]

@@ -1,0 +1,58 @@
+"""Public wrapper: randomized Hadamard transform with factor caching."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.hadamard.kernel import hadamard_kernel, sylvester
+from repro.kernels.hadamard.ref import hadamard_ref
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.lru_cache(maxsize=32)
+def _factors(n: int) -> tuple[int, int]:
+    """Split n = a*b (powers of two) with b <= 128 lane-aligned."""
+    assert n & (n - 1) == 0 and n >= 2, n
+    b = min(n, 128)
+    return n // b, b
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "force_kernel"))
+def hadamard_transform(
+    x: jax.Array,
+    signs: jax.Array,
+    *,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """y = H (signs ⊙ x) along the last axis (power-of-two dim)."""
+    if not (on_tpu() or interpret or force_kernel):
+        return hadamard_ref(x, signs)
+    n = x.shape[-1]
+    a, b = _factors(n)
+    Ha = jnp.asarray(sylvester(a))
+    Hb = jnp.asarray(sylvester(b))
+    lead = x.shape[:-1]
+    N = 1
+    for d in lead:
+        N *= d
+    x2 = x.reshape(N, n)
+    bB = min(256, _ceil_to(N, 8))
+    Np = _ceil_to(N, bB)
+    if Np != N:
+        x2 = jnp.pad(x2, ((0, Np - N), (0, 0)))
+    y = hadamard_kernel(
+        x2, signs.astype(x.dtype), Ha, Hb, a=a, b=b, bB=bB, interpret=interpret
+    )
+    return y[:N].reshape(*lead, n)

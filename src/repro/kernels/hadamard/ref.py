@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: butterfly FWHT (the textbook O(n log n) form)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fwht_ref(x: jax.Array) -> jax.Array:
+    """Normalized Walsh–Hadamard along the last axis (power-of-two dim)."""
+    n = x.shape[-1]
+    stages = n.bit_length() - 1
+    shape = x.shape
+    y = x.reshape(-1, n).astype(jnp.float32)
+    for _ in range(stages):
+        y = y.reshape(y.shape[0], -1, 2)
+        a, b = y[..., 0], y[..., 1]
+        y = jnp.concatenate([a + b, a - b], axis=-1)
+    return (y * (n**-0.5)).reshape(shape).astype(x.dtype)
+
+
+def hadamard_ref(x: jax.Array, signs: jax.Array) -> jax.Array:
+    return fwht_ref(x * signs)

@@ -1,0 +1,3 @@
+from repro.kernels.kron_mul.ops import kron_mul
+
+__all__ = ["kron_mul"]

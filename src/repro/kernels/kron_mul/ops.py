@@ -1,0 +1,45 @@
+"""Public wrapper for the fused Kronecker transform kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kron_mul.kernel import kron_mul_kernel
+from repro.kernels.kron_mul.ref import kron_mul_ref
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "force_kernel"))
+def kron_mul(
+    x: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    *,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """y = (A ⊗ B) x along the last axis; arbitrary leading dims."""
+    if not (on_tpu() or interpret or force_kernel):
+        return kron_mul_ref(x, A, B)
+    p, q = A.shape[0], B.shape[0]
+    n = p * q
+    lead = x.shape[:-1]
+    N = 1
+    for d in lead:
+        N *= d
+    x2 = x.reshape(N, n)
+    bB = min(256, _ceil_to(N, 8))
+    Np = _ceil_to(N, bB)
+    if Np != N:
+        x2 = jnp.pad(x2, ((0, Np - N), (0, 0)))
+    y = kron_mul_kernel(x2, A, B, p=p, q=q, bB=bB, interpret=interpret)
+    return y[:N].reshape(*lead, n)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the fused Kronecker transform."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kron_mul_ref(x: jax.Array, A: jax.Array, B: jax.Array) -> jax.Array:
+    """y = (A ⊗ B) x per row; x: (..., p*q)."""
+    p, q = A.shape[0], B.shape[0]
+    X = x.reshape(*x.shape[:-1], p, q)
+    Y = jnp.einsum("ji,...iq->...jq", A, X)
+    Y = jnp.einsum("...jq,kq->...jk", Y, B)
+    return Y.reshape(*x.shape[:-1], p * q).astype(x.dtype)
+
+
+def kron_mul_dense_ref(x: jax.Array, A: jax.Array, B: jax.Array) -> jax.Array:
+    """Materialized (A ⊗ B) matmul — the thing the kernel avoids."""
+    U = jnp.kron(A, B)
+    return (x @ U.T).astype(x.dtype)

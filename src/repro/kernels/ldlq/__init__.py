@@ -1,0 +1,3 @@
+from repro.kernels.ldlq.ops import ldlq_pallas
+
+__all__ = ["ldlq_pallas"]

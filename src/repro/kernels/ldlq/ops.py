@@ -1,0 +1,67 @@
+"""Blocked LDLQ driver with the Pallas in-block kernel.
+
+Outer schedule identical to ``core.ldlq.ldlq_blocked``: the trailing
+feedback `Err @ U_panel` is one MXU matmul per block; the sequential
+in-block recurrence runs in the Pallas kernel, parallel over row blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ldlq import ldlq_blocked
+from repro.kernels.ldlq.kernel import ldlq_block_kernel
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("maxq", "block", "interpret", "force_kernel")
+)
+def ldlq_pallas(
+    W: jax.Array,
+    Udot: jax.Array,
+    maxq: int,
+    *,
+    block: int = 128,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """LDLQ via the Pallas in-block kernel; falls back to XLA off-TPU."""
+    if not (on_tpu() or interpret or force_kernel):
+        return ldlq_blocked(W, Udot, maxq, block=min(block, W.shape[1]))
+    m, n = W.shape
+    assert n % block == 0, (n, block)
+    nb = n // block
+    bM = min(256, _ceil_to(m, 8))
+    Mp = _ceil_to(m, bM)
+    Wp = jnp.pad(W.astype(jnp.float32), ((0, Mp - m), (0, 0)))
+
+    def outer(carry, i):
+        What, Err = carry
+        Wblk = jax.lax.dynamic_slice(Wp, (0, i * block), (Mp, block))
+        Upanel = jax.lax.dynamic_slice(Udot, (0, i * block), (n, block))
+        Ublk = jax.lax.dynamic_slice(
+            Udot, (i * block, i * block), (block, block)
+        )
+        base = Err @ Upanel  # cross-block feedback: one MXU matmul
+        Q, E = ldlq_block_kernel(
+            Wblk, base, Ublk, nb=block, bM=bM, maxq=maxq,
+            interpret=interpret,
+        )
+        What = jax.lax.dynamic_update_slice(What, Q, (0, i * block))
+        Err = jax.lax.dynamic_update_slice(Err, E, (0, i * block))
+        return (What, Err), None
+
+    (What, _), _ = jax.lax.scan(
+        outer, (jnp.zeros_like(Wp), jnp.zeros_like(Wp)), jnp.arange(nb)
+    )
+    return What[:m]

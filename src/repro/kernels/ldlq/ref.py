@@ -1,0 +1,4 @@
+"""Oracle: the XLA-only LDLQ implementations from repro.core."""
+from repro.core.ldlq import ldlq as ldlq_ref, ldlq_blocked as ldlq_blocked_ref
+
+__all__ = ["ldlq_ref", "ldlq_blocked_ref"]

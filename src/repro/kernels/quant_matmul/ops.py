@@ -1,0 +1,73 @@
+"""Jit'd public wrapper around the quant_matmul Pallas kernel.
+
+Handles: arbitrary leading batch dims, tile padding, the affine dequant
+correction ``z = (2s/maxq)·acc − s·Σ_k x``, dtype restoration, and the
+CPU fallback (interpret mode for tests / pure-jnp for speed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_matmul.kernel import quant_matmul_kernel
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "n", "maxq", "interpret", "force_kernel")
+)
+def quant_matmul(
+    x: jax.Array,
+    packed: jax.Array,
+    bits: int,
+    n: int,
+    s: jax.Array,
+    maxq: int,
+    *,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """z = x @ deq(Wq)^T; x: (..., n); packed: (rows, m) int32 → (..., m).
+
+    On non-TPU backends (this CPU container) dispatches to the jnp oracle
+    unless ``interpret``/``force_kernel`` ask for the Pallas path.
+    """
+    if not (on_tpu() or interpret or force_kernel):
+        return quant_matmul_ref(x, packed, bits, n, s, maxq)
+
+    lead = x.shape[:-1]
+    B = 1
+    for d in lead:
+        B *= d
+    x2 = x.reshape(B, n)
+    vals = 32 // bits
+    rows, m = packed.shape
+
+    bB = min(128, _ceil_to(B, 8))
+    bM = min(128, _ceil_to(m, 128))
+    # K tile must be a multiple of both vals-per-word and the 128 lane
+    # width (3-bit → lcm(10,128)=640).
+    unit = vals * 128 // math.gcd(vals, 128)
+    bK = unit * max(1, 512 // unit)
+    bK = min(bK, _ceil_to(n, unit))
+    Bp, Mp, Kp = _ceil_to(B, bB), _ceil_to(m, bM), _ceil_to(n, bK)
+    xp = jnp.pad(x2, ((0, Bp - B), (0, Kp - n)))
+    pp = jnp.pad(packed, ((0, Kp // vals - rows), (0, Mp - m)))
+    acc = quant_matmul_kernel(
+        xp, pp, bits=bits, bB=bB, bM=bM, bK=bK, interpret=interpret
+    )[:B, :m]
+    hsum = jnp.sum(x2.astype(jnp.float32), axis=-1, keepdims=True)
+    sf = jnp.float32(s)
+    z = acc * (2.0 * sf / maxq) - sf * hsum
+    return z.astype(x.dtype).reshape(*lead, m)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the packed quantized matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.incoherence import from_grid
+
+
+def quant_matmul_ref(
+    x: jax.Array,
+    packed: jax.Array,
+    bits: int,
+    n: int,
+    s: jax.Array,
+    maxq: int,
+) -> jax.Array:
+    """z = x @ deq(Wq)^T via explicit unpack + dense matmul (fp32)."""
+    Wq = packing.unpack(packed, bits, n).astype(jnp.float32)  # (m, n)
+    Wd = from_grid(Wq, jnp.float32(s), maxq)
+    return (x.astype(jnp.float32) @ Wd.T).astype(x.dtype)
+
+
+def grid_matmul_ref(x: jax.Array, packed: jax.Array, bits: int, n: int) -> jax.Array:
+    """Integer-grid matmul only (what the kernel itself computes)."""
+    Wq = packing.unpack(packed, bits, n).astype(jnp.float32)
+    return x.astype(jnp.float32) @ Wq.T

@@ -1,0 +1,313 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import (jax locks device count on first init).
+# Only the dry-run fakes 512 devices; tests/benches see the single real CPU.
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture x input shape x mesh) cell:
+
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=...).lower(**input_specs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())   # proves it fits
+        print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+plus collective-byte parsing of the partitioned HLO, all recorded as JSON
+under experiments/dryrun/ for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --list   # enumerate cells
+"""
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, shapes_for, ARCH_IDS, SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_opt_state, input_specs
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models import build_model
+from repro.optim import adamw, cosine_schedule
+from repro.runtime.hlo_analysis import analyze_hlo
+from repro.runtime.roofline import roofline_terms
+from repro.runtime.sharding import (
+    MeshContext,
+    default_rules,
+    mesh_context,
+    param_shardings,
+)
+
+
+def _batch_shardings(ctx: MeshContext, batch_specs: dict) -> dict:
+    logical = {
+        "tokens": ("batch", "seq"),
+        "targets": ("batch", "seq"),
+        "frames": ("batch", "seq", "act_embed"),
+        "patches": ("batch", None, "act_embed"),
+    }
+    return {
+        k: ctx.sharding(logical[k], v.shape) for k, v in batch_specs.items()
+    }
+
+
+def _apply_overrides(cfg, overrides: dict):
+    import dataclasses
+
+    if not overrides:
+        return cfg
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg, k)
+        typed[k] = type(cur)(v) if cur is not None else v
+    return dataclasses.replace(cfg, **typed)
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    kv_dtype: str = "bf16",
+    rules=None,
+    overrides: dict | None = None,
+    tag: str = "",
+    mesh_shape=None,
+    verbose: bool = True,
+):
+    """Lower + compile one cell; returns the result record."""
+    cfg = _apply_overrides(get_config(arch), overrides or {})
+    shape = SHAPES[shape_name]
+    if shape not in shapes_for(cfg):
+        return {
+            "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": "long_500k needs sub-quadratic attention"
+            if shape_name == "long_500k" else "not assigned",
+        }
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    rules = dict(rules or default_rules(multi_pod))
+    if shape.kind == "train":
+        # the microbatch must cover the data-parallel degree, or the
+        # per-microbatch batch axis can't shard and replicates inside the
+        # grad-accum scan (the pod2 scaling bug found in §Perf: 3.6x)
+        import dataclasses as _dc
+
+        dp = 1
+        for ax in ("pod", "data"):
+            dp *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(ax, 1)
+        mb = -(-max(cfg.microbatch, dp) // dp) * dp
+        if mb != cfg.microbatch and "microbatch" not in (overrides or {}):
+            print(f"[dryrun] microbatch {cfg.microbatch} -> {mb} "
+                  f"(must cover dp={dp})")
+            cfg = _dc.replace(cfg, microbatch=mb)
+    model = build_model(cfg)
+    t0 = time.time()
+
+    with mesh_context(mesh, rules) as ctx:
+        aparams = model.abstract_params()
+        psh = param_shardings(ctx, aparams, model.param_axes())
+        specs = input_specs(cfg, shape)
+
+        if shape.kind == "train":
+            opt = adamw(cosine_schedule(3e-4, 10_000, 500))
+            step_fn = make_train_step(model, opt)
+            aopt = abstract_opt_state(opt, aparams)
+            osh = jax.tree.map(
+                lambda _: None, aopt,
+                is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct),
+            )
+            osh = {
+                "master": psh,
+                "m": psh,
+                "v": psh,
+            }
+            bsh = _batch_shardings(ctx, specs["batch"])
+            astep = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(psh, osh, bsh, ctx.replicated()),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(aparams, aopt, specs["batch"], astep)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(model)
+            bsh = _batch_shardings(ctx, specs["batch"])
+            jitted = jax.jit(step_fn, in_shardings=(psh, bsh))
+            lowered = jitted.lower(aparams, specs["batch"])
+        else:  # decode
+            kd = {"bf16": None, "int8": jnp.int8}[kv_dtype]
+            step_fn = make_decode_step(model)
+            acache = model.abstract_cache(
+                shape.global_batch, shape.seq_len, kd
+            )
+            csh = param_shardings(
+                ctx, acache, model.cache_axes(int8=kd is not None)
+            )
+            tsh = ctx.sharding(("batch", None), specs["tokens"].shape)
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(psh, tsh, csh, ctx.replicated()),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                aparams, specs["tokens"], acache, specs["pos"]
+            )
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses ----
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            k: getattr(mem, k)
+            for k in (
+                "argument_size_in_bytes",
+                "output_size_in_bytes",
+                "temp_size_in_bytes",
+                "generated_code_size_in_bytes",
+            )
+            if hasattr(mem, k)
+        } if mem is not None else {}
+    except Exception as e:  # pragma: no cover
+        mem_info = {"error": str(e)}
+    try:
+        cost = compiled.cost_analysis() or {}
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    except Exception as e:  # pragma: no cover
+        cost = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    chips = mesh.size
+    # loop-weighted per-device accounting (cost_analysis counts while
+    # bodies once; see runtime/hlo_analysis.py)
+    stats = analyze_hlo(hlo, chips)
+    coll = stats.collectives
+    terms = roofline_terms(
+        hlo_flops=stats.flops,
+        hlo_bytes=stats.bytes_accessed,
+        collective_bytes=coll.total_bytes,
+        chips=chips,
+        cfg=cfg,
+        shape=shape,
+        flops_are_global=False,  # all per-device post-SPMD
+    )
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "mesh": dict(zip(mesh.axis_names, (mesh.devices.shape))),
+        "chips": chips,
+        "status": "ok",
+        "kv_dtype": kv_dtype,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": mem_info,
+        "cost_analysis_raw": {
+            k: cost[k]
+            for k in ("flops", "bytes accessed", "optimal_seconds")
+            if k in cost
+        },
+        "hlo_weighted": {
+            "flops_per_device": stats.flops,
+            "bytes_per_device": stats.bytes_accessed,
+        },
+        "collectives": coll.summary(),
+        "roofline": terms.to_dict(),
+        "hlo_lines": hlo.count("\n"),
+    }
+    rec["tag"] = tag
+    rec["overrides"] = overrides or {}
+    # archive compressed HLO so parsers can be refined without recompiling
+    try:
+        import zstandard
+
+        outdir = pathlib.Path("experiments/hlo")
+        outdir.mkdir(parents=True, exist_ok=True)
+        pod = "pod2" if multi_pod else "pod1"
+        suffix = f".{tag}" if tag else ""
+        hpath = outdir / f"{arch}__{shape_name}__{pod}{suffix}.hlo.zst"
+        hpath.write_bytes(zstandard.ZstdCompressor(level=3).compress(hlo.encode()))
+        rec["hlo_path"] = str(hpath)
+    except Exception:
+        pass
+    if verbose:
+        print(f"== {arch} x {shape_name} (multi_pod={multi_pod}) ==")
+        print("memory_analysis:", json.dumps(mem_info, indent=1))
+        print("hlo_weighted:", json.dumps(rec["hlo_weighted"], indent=1))
+        print("collectives:", json.dumps(coll.summary(), indent=1))
+        print("roofline:", json.dumps(terms.to_dict(), indent=1))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--rules", default="default",
+                    help="sharding rule set: default|serving|context|fsdp2d")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="re-slice the chips, e.g. 256,1 (data,model)")
+    ap.add_argument("--override", action="append", default=[],
+                    help="ArchConfig field override, e.g. attn_q_chunk=32768")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for s in shapes_for(cfg):
+                print(f"{arch} {s.name}")
+        return 0
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    pod = "pod2" if args.multi_pod else "pod1"
+    tag = f".{args.tag}" if args.tag else ""
+    fname = outdir / f"{args.arch}__{args.shape}__{pod}{tag}.json"
+    from repro.runtime.sharding import RULE_SETS
+
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    try:
+        rec = lower_cell(
+            args.arch,
+            args.shape,
+            multi_pod=args.multi_pod,
+            kv_dtype=args.kv_dtype,
+            rules=RULE_SETS[args.rules](args.multi_pod),
+            overrides=overrides,
+            tag=args.tag,
+            mesh_shape=tuple(int(v) for v in args.mesh_shape.split(","))
+            if args.mesh_shape else None,
+        )
+    except Exception as e:
+        rec = {
+            "arch": args.arch, "shape": args.shape, "multi_pod": args.multi_pod,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+        print(rec["traceback"], file=sys.stderr)
+    fname.write_text(json.dumps(rec, indent=1, default=str))
+    print("wrote", fname)
+    return 0 if rec.get("status") in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

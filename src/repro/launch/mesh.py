@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (v5e).  Multi-pod:
+2 pods x 256 = 512 chips with a leading 'pod' axis extending data
+parallelism (gradient reductions run hierarchically over ('pod', 'data')).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False, shape=None):
+    """Default production grids; ``shape`` re-slices the same chips
+    (a per-arch §Perf knob: e.g. (256, 1) = pure-ZeRO for models whose
+    sharded weights fit HBM without tensor parallelism)."""
+    if shape is None:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    assert len(shape) == len(axes)
+    return jax.make_mesh(tuple(shape), axes)
+
+
+def make_host_mesh():
+    """Degenerate 1x1 mesh for single-device smoke runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,52 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run contract).
+
+Weak-type-correct, shardable, zero device allocation.  ``input_specs``
+covers the data inputs per shape kind; params/opt-state/cache abstracts
+come from ``Model.abstract_params`` / ``Model.abstract_cache`` (also via
+``jax.eval_shape`` — never allocated).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models.lm import Model
+
+__all__ = ["input_specs", "abstract_opt_state"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """Data inputs for the step function of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32),
+            "targets": _sds((B, S), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            batch["frames"] = _sds((B, S, cfg.d_model), dt)
+        if cfg.family == "vlm":
+            batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model), dt)
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache/state
+    return {
+        "tokens": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def abstract_opt_state(optimizer, abstract_params):
+    return jax.eval_shape(optimizer.init, abstract_params)

@@ -1,0 +1,4 @@
+"""Model zoo: composable pure-JAX definitions for the assigned families."""
+from repro.models.lm import Model, build_model
+
+__all__ = ["Model", "build_model"]

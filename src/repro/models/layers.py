@@ -1,0 +1,609 @@
+"""Primitive layers: norms, RoPE, attention (GQA/qk-norm/bias/cross),
+MLP (SwiGLU/GeLU), and MoE with scatter-based token dispatch.
+
+Everything is functional: ``init_*`` builds a params dict (+ a parallel
+``*_axes`` dict of logical-axis tuples for sharding), ``apply``-style
+functions consume it.  Sharding constraints go through
+:func:`repro.runtime.sharding.constrain`, which is a no-op without an
+active mesh context — so these run unchanged on one CPU device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.runtime.sharding import constrain
+
+# ---------------------------------------------------------------------------
+# small utilities
+# ---------------------------------------------------------------------------
+
+
+def _key(key: jax.Array, *path: str) -> jax.Array:
+    for p in path:
+        key = jax.random.fold_in(key, hash(p) % (2**31))
+    return key
+
+
+def _init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_w(key, cfg: ArchConfig, shape, dtype, scale=None):
+    """A projection weight: dense (in, out), or QuIP-packed when
+    cfg.weight_bits > 0 (the paper's 2-bit serving path as a first-class
+    model feature — §Perf iteration A4).
+
+    Packed layout follows repro.core.packing: int32 (in/vals, out) along
+    the reduction dim + a per-matrix scale; dequant is w = (2q/maxq - 1)*s.
+    On TPU the unpack runs inside the quant_matmul Pallas kernel (VMEM);
+    the XLA fallback materializes the dequantized tile.
+    """
+    W = _init_dense(key, shape, jnp.float32, scale)
+    if not cfg.weight_bits:
+        return W.astype(dtype)
+    from repro.core import packing
+
+    bits = cfg.weight_bits
+    vals = 32 // bits
+    assert shape[0] % vals == 0, (shape, bits)
+    maxq = 2**bits - 1
+    s = jnp.max(jnp.abs(W)) + 1e-8
+    grid = jnp.clip(jnp.round((W.T / s + 1.0) * (maxq / 2.0)), 0, maxq)
+    return {
+        "packed": packing.pack(grid.astype(jnp.int32), bits),
+        "scale": s.astype(jnp.float32),
+    }
+
+
+def w_axes(cfg: ArchConfig, axes: tuple):
+    return {"packed": axes, "scale": ()} if cfg.weight_bits else axes
+
+
+def apply_w(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """y = x @ W for dense or packed weights."""
+    if isinstance(p, dict) and "packed" in p:
+        from repro.core import packing
+
+        bits = cfg.weight_bits
+        vals = 32 // bits
+        maxq = 2**bits - 1
+        n = p["packed"].shape[0] * vals
+        Wq = packing.unpack(p["packed"], bits, n).astype(x.dtype)  # (out, in)
+        W = (Wq * (2.0 / maxq) - 1.0) * p["scale"].astype(x.dtype)
+        return x @ W.T
+    return x @ p
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(
+        x.dtype
+    )
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if "bias" in p:
+        return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rms_norm(x, p["scale"], cfg.norm_eps)
+
+
+def init_norm(cfg: ArchConfig, dim: int, kind: str = "rms") -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    p = {"scale": jnp.ones((dim,), dt)}
+    if kind == "ln":
+        p["bias"] = jnp.zeros((dim,), dt)
+    return p
+
+
+def norm_axes(kind: str = "rms") -> dict:
+    ax = {"scale": ("norm",)}
+    if kind == "ln":
+        ax["bias"] = ("norm",)
+    return ax
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate pairs (llama rotate-half convention).
+
+    x: (..., S, H, hd); positions: (S,) or (B, S) int32.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self / cross, full-sequence and cached decode)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    p = {
+        "wq": init_w(_key(key, "wq"), cfg, (d, cfg.q_dim), dt),
+        "wk": init_w(_key(key, "wk"), cfg, (d, cfg.kv_dim), dt),
+        "wv": init_w(_key(key, "wv"), cfg, (d, cfg.kv_dim), dt),
+        "wo": init_w(
+            _key(key, "wo"), cfg, (cfg.q_dim, d), dt,
+            scale=(cfg.q_dim**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.head_dim,), dt)
+        p["k_norm"] = jnp.ones((cfg.head_dim,), dt)
+    if cross:
+        p["gate"] = jnp.zeros((), dt)  # tanh-gated cross-attn (llama-3.2)
+    return p
+
+
+def attention_axes(cfg: ArchConfig, cross: bool = False) -> dict:
+    ax = {
+        "wq": w_axes(cfg, ("embed", "heads")),
+        "wk": w_axes(cfg, ("embed", "kv_heads")),
+        "wv": w_axes(cfg, ("embed", "kv_heads")),
+        "wo": w_axes(cfg, ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        ax.update(bq=("heads",), bk=("kv_heads",), bv=("kv_heads",))
+    if cfg.qk_norm:
+        ax.update(q_norm=("norm",), k_norm=("norm",))
+    if cross:
+        ax["gate"] = ()
+    return ax
+
+
+def _project_qkv(p, cfg: ArchConfig, x, x_kv, pos_q, pos_kv, use_rope: bool):
+    B, S, _ = x.shape
+    Skv = x_kv.shape[1]
+    q = apply_w(p["wq"], x, cfg)
+    k = apply_w(p["wk"], x_kv, cfg)
+    v = apply_w(p["wv"], x_kv, cfg)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, Skv, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_kv, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ArchConfig):
+    """q: (B, Sq, H, hd), k: (B, Skv, KV, hd) -> (B, KV, G, Sq, Skv) fp32.
+
+    Grouped einsum: the repeated-KV operand is never materialized.
+    """
+    B, Sq, H, hd = q.shape
+    G = H // cfg.n_kv_heads
+    qg = q.reshape(B, Sq, cfg.n_kv_heads, G, hd)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg, k, preferred_element_type=jnp.float32
+    )
+    return s * (hd**-0.5)
+
+
+def _gqa_out(probs, v, cfg: ArchConfig):
+    """probs: (B, KV, G, Sq, Skv), v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
+
+    probs are cast DOWN to v's storage dtype for the PV matmul (fp32
+    accumulation via preferred_element_type) — upcasting v would double
+    the KV-cache read traffic (§Perf iteration A1)."""
+    B, KV, G, Sq, Skv = probs.shape
+    o = jnp.einsum(
+        "bkgqs,bskd->bqkgd",
+        probs.astype(v.dtype),
+        v,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(B, Sq, cfg.n_heads, cfg.head_dim)
+
+
+def attention_full(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    positions: jax.Array,
+    causal: bool = True,
+    x_kv: Optional[jax.Array] = None,
+    positions_kv: Optional[jax.Array] = None,
+    q_chunk: Optional[int] = None,
+    return_kv: bool = False,
+):
+    """Full-sequence attention, chunked over query blocks.
+
+    x: (B, S, D).  ``x_kv`` switches to cross-attention.  Returns (B, S, D)
+    (and the (k, v) tensors when ``return_kv`` for prefill cache building).
+    """
+    B, S, D = x.shape
+    cross = x_kv is not None
+    x_kv = x if x_kv is None else x_kv
+    positions_kv = positions if positions_kv is None else positions_kv
+    q, k, v = _project_qkv(
+        p, cfg, x, x_kv, positions, positions_kv, use_rope=not cross
+    )
+    q = constrain(q, ("batch", "seq", "act_heads", None))
+    k = constrain(k, ("batch", "seq", "act_heads", None))
+
+    qc = min(q_chunk or cfg.attn_q_chunk, S)
+    while S % qc:
+        qc -= 1
+    nq = S // qc
+
+    def one_chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * qc, qc, axis=1)
+        pq = jax.lax.dynamic_slice_in_dim(positions, i * qc, qc, axis=0)
+        s = _gqa_scores(qs, k, cfg)  # (B, KV, G, qc, S)
+        if causal:
+            # additive bias, computed once per chunk WITHOUT the head dims —
+            # a where() on the full score tensor materializes a pred array
+            # broadcast over heads (§Perf iteration B2)
+            bias = jnp.where(
+                pq[:, None] >= positions_kv[None, :], 0.0, -1e30
+            ).astype(jnp.float32)
+            s = s + bias[None, None, None]
+        if cfg.attn_bf16_probs:
+            # flash-style: fp32 max/sum statistics, bf16 exp/probs tensors
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m).astype(jnp.bfloat16)
+            denom = jnp.sum(p.astype(jnp.float32), axis=-1, keepdims=True)
+            probs = p / denom.astype(jnp.bfloat16)
+        else:
+            probs = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(probs, v, cfg)
+
+    if nq == 1:
+        o = one_chunk(0)
+    else:
+        o = jax.lax.map(one_chunk, jnp.arange(nq))  # (nq, B, qc, H, hd)
+        o = jnp.moveaxis(o, 0, 1).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    o = o.astype(x.dtype).reshape(B, S, cfg.q_dim)
+    out = apply_w(p["wo"], o, cfg)
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+    out = constrain(out, ("batch", "seq", "act_embed"))
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# --- KV cache -------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if dt == jnp.int8:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1], jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1], jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def kv_cache_axes(int8: bool = False) -> dict:
+    ax = {
+        "k": ("batch", "seq_kv", None, None),
+        "v": ("batch", "seq_kv", None, None),
+    }
+    if int8:
+        ax["k_scale"] = ("batch", "seq_kv", None)
+        ax["v_scale"] = ("batch", "seq_kv", None)
+    return ax
+
+
+def _quantize_kv(x: jax.Array):
+    """Per-(token, head) symmetric int8: x (B, S, KV, hd)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.round(x.astype(jnp.float32) / scale[..., None])
+    return q.astype(jnp.int8), scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def cache_store(cache: dict, k: jax.Array, v: jax.Array, index) -> dict:
+    """Write k/v (B, S_new, KV, hd) at position ``index`` along seq."""
+    if cache["k"].dtype == jnp.int8:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, index, 1),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, index, 1),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, index, 1
+            ),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, index, 1
+            ),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), index, 1
+        ),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), index, 1
+        ),
+    }
+
+
+def cache_read(cache: dict, dtype):
+    if cache["k"].dtype == jnp.int8:
+        return (
+            _dequantize_kv(cache["k"], cache["k_scale"], dtype),
+            _dequantize_kv(cache["v"], cache["v_scale"], dtype),
+        )
+    return cache["k"].astype(dtype), cache["v"].astype(dtype)
+
+
+def attention_decode(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    cache: dict,
+    pos: jax.Array,
+    *,
+    cross: bool = False,
+):
+    """One-token attention against a cache.
+
+    x: (B, 1, D); pos: scalar int32 current position (same for the batch).
+    For cross-attention the cache holds the full encoder/vision KV and is
+    not updated.  Returns (out (B, 1, D), new_cache).
+    """
+    B = x.shape[0]
+    q = apply_w(p["wq"], x, cfg)
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    if not cross:
+        k_new = apply_w(p["wk"], x, cfg)
+        v_new = apply_w(p["wv"], x, cfg)
+        if cfg.qkv_bias:
+            k_new, v_new = k_new + p["bk"], v_new + p["bv"]
+        k_new = k_new.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v_new = v_new.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            k_new = rms_norm(k_new, p["k_norm"], cfg.norm_eps)
+        q = rope(q, pos[None], cfg.rope_theta)
+        k_new = rope(k_new, pos[None], cfg.rope_theta)
+        cache = cache_store(cache, k_new, v_new, pos)
+    k, v = cache_read(cache, x.dtype)
+    S = k.shape[1]
+    s = _gqa_scores(q, k, cfg)[:, :, :, 0, :]  # (B, KV, G, S)
+    if not cross:
+        bias = jnp.where(jnp.arange(S) <= pos, 0.0, -1e30).astype(jnp.float32)
+        s = s + bias[None, None, None]
+    probs = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgs,bskd->bkgd",
+        probs.astype(v.dtype),
+        v,
+        preferred_element_type=jnp.float32,
+    )
+    o = o.reshape(B, 1, cfg.q_dim).astype(x.dtype)
+    out = apply_w(p["wo"], o, cfg)
+    if "gate" in p:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    p = {
+        "wi": init_w(_key(key, "wi"), cfg, (d, f), dt),
+        "wo": init_w(
+            _key(key, "wo"), cfg, (f, d), dt,
+            scale=(f**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+    }
+    if cfg.mlp == "swiglu":
+        p["wg"] = init_w(_key(key, "wg"), cfg, (d, f), dt)
+    if cfg.mlp_bias:
+        p["bi"] = jnp.zeros((f,), dt)
+        p["bo"] = jnp.zeros((d,), dt)
+    return p
+
+
+def mlp_axes(cfg: ArchConfig) -> dict:
+    ax = {"wi": w_axes(cfg, ("embed", "ff")), "wo": w_axes(cfg, ("ff", "embed"))}
+    if cfg.mlp == "swiglu":
+        ax["wg"] = w_axes(cfg, ("embed", "ff"))
+    if cfg.mlp_bias:
+        ax.update(bi=("ff",), bo=("norm",))
+    return ax
+
+
+def mlp_apply(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = apply_w(p["wi"], x, cfg)
+    if cfg.mlp_bias:
+        h = h + p["bi"]
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(h) * apply_w(p["wg"], x, cfg)
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "seq", "act_ff"))
+    out = apply_w(p["wo"], h, cfg)
+    if cfg.mlp_bias:
+        out = out + p["bo"]
+    return constrain(out, ("batch", "seq", "act_embed"))
+
+
+# ---------------------------------------------------------------------------
+# MoE (scatter-based dispatch, expert-parallel friendly)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p = {
+        "router": _init_dense(_key(key, "router"), (d, E), jnp.float32),
+        "wi": _init_dense(_key(key, "ewi"), (E, d, f), dt),
+        "wg": _init_dense(_key(key, "ewg"), (E, d, f), dt),
+        "wo": _init_dense(
+            _key(key, "ewo"), (E, f, d), dt,
+            scale=(f**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+    }
+    if cfg.dense_residual:
+        p["dense"] = init_mlp(_key(key, "dense"), cfg)
+    return p
+
+
+def moe_axes(cfg: ArchConfig) -> dict:
+    # expert weights use their OWN logical axes: they are already sharded
+    # 16x by expert parallelism; FSDP-sharding their embed dim too makes
+    # GSPMD partial-sum every expert matmul and all-reduce (E, C, F)
+    # activations per microbatch — the dominant collective in the arctic
+    # train profile (§Perf D3).  Default rules map expert_embed/expert_ff
+    # to None (EP-only sharding).
+    ax = {
+        "router": ("embed", None),
+        "wi": ("experts", "expert_embed", "expert_ff"),
+        "wg": ("experts", "expert_embed", "expert_ff"),
+        "wo": ("experts", "expert_ff", "expert_embed"),
+    }
+    if cfg.dense_residual:
+        ax["dense"] = mlp_axes(cfg)
+    return ax
+
+
+def moe_capacity(cfg: ArchConfig, tokens: int) -> int:
+    c = math.ceil(tokens * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Scatter/gather dispatch into an (E, C, D) buffer (NOT the O(T·E·C·D)
+    dense-dispatch einsum): positions within each expert come from a cumsum
+    over the one-hot routing matrix; tokens past capacity are dropped
+    (standard capacity-factor semantics).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32)) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)  # (T, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert
+    e_flat = top_e.reshape(-1)  # (T*k,)
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)  # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot
+    pos_flat = jnp.sum(pos_in_e * onehot, axis=-1)  # (T*k,)
+    C = moe_capacity(cfg, T)
+    keep = pos_flat < C
+
+    x_rep = jnp.repeat(xt, k, axis=0)  # (T*k, D)
+    buf = jnp.zeros((E, C, D), x.dtype)
+    buf = buf.at[e_flat, jnp.where(keep, pos_flat, C - 1)].add(
+        x_rep * keep[:, None].astype(x.dtype)
+    )
+    buf = constrain(buf, ("act_experts", None, None))
+
+    # expert FFN (batched over E)
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = constrain(h, ("act_experts", None, None))
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+
+    # gather back and combine with gate weights
+    y_tok = y_e[e_flat, jnp.where(keep, pos_flat, 0)]  # (T*k, D)
+    y_tok = y_tok * (keep[:, None] * top_p.reshape(-1)[:, None]).astype(x.dtype)
+    y = jnp.sum(y_tok.reshape(T, k, D), axis=1)
+
+    if cfg.dense_residual and "dense" in p:
+        y = y + mlp_apply(p["dense"], x, cfg).reshape(T, D)
+
+    # load-balancing aux loss (Switch-style)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), 0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    p = {"tok": _init_dense(_key(key, "tok"), (cfg.vocab, cfg.d_model), dt, 0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = _init_dense(
+            _key(key, "head"), (cfg.d_model, cfg.vocab), dt, cfg.d_model**-0.5
+        )
+    return p
+
+
+def embedding_axes(cfg: ArchConfig) -> dict:
+    ax = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        ax["head"] = ("embed", "vocab")
+    return ax
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    h = jnp.take(p["tok"], tokens, axis=0)
+    return constrain(h, ("batch", "seq", "act_embed"))
+
+
+def lm_logits(p: dict, h: jax.Array) -> jax.Array:
+    w = p["head"] if "head" in p else p["tok"].T
+    logits = h @ w
+    return constrain(logits, ("batch", "seq", "act_ff"))

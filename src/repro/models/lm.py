@@ -1,0 +1,167 @@
+"""Unified Model facade: one API over all assigned families.
+
+    model = build_model(cfg)
+    params = model.init(rng)                  # concrete (smoke tests)
+    aparams = model.abstract_params(rng)      # ShapeDtypeStructs (dry-run)
+    hidden, aux = model.forward(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, tokens, cache, pos)
+
+``batch`` is a dict: {"tokens"} for LM families, plus {"frames"} (encdec) or
+{"patches"} (vlm) stub embeddings per the assignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import multimodal as MM
+from repro.models import recurrent as R
+from repro.models import transformer as T
+
+__all__ = ["Model", "build_model"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    _init: Callable
+    _axes: Callable
+    _forward: Callable
+    _prefill: Callable
+    _decode: Callable
+    _init_cache: Callable
+    _cache_axes: Callable
+
+    # ---- params ----
+    def init(self, rng: jax.Array):
+        return self._init(rng, self.cfg)
+
+    def abstract_params(self, rng: Optional[jax.Array] = None):
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(lambda k: self._init(k, self.cfg), rng)
+
+    def param_axes(self):
+        return self._axes(self.cfg)
+
+    # ---- compute ----
+    def forward(self, params, batch: dict):
+        """-> (hidden (B, S, D), aux_loss)."""
+        return self._forward(params, batch, self.cfg)
+
+    def logits(self, params, hidden):
+        return L.lm_logits(params["embed"], hidden)
+
+    def loss(self, params, batch: dict, aux_coef: float = 0.01):
+        """Mean next-token cross entropy (+ MoE aux)."""
+        hidden, aux = self.forward(params, batch)
+        targets = batch.get("targets")
+        if targets is None:
+            targets = jnp.roll(batch["tokens"], -1, axis=-1)
+        logits = self.logits(params, hidden).astype(jnp.float32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        # ignore the final position (no next token)
+        mask = jnp.ones_like(nll).at[:, -1].set(0.0)
+        ce = jnp.sum(nll * mask) / jnp.sum(mask)
+        return ce + aux_coef * aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch: dict, kv_dtype=None, max_len=None):
+        return self._prefill(params, batch, self.cfg, kv_dtype, max_len)
+
+    def decode_step(self, params, tokens, cache, pos):
+        return self._decode(params, tokens, self.cfg, cache, pos)
+
+    def init_cache(self, batch: int, max_len: int, kv_dtype=None):
+        return self._init_cache(self.cfg, batch, max_len, kv_dtype)
+
+    def cache_axes(self, int8: bool = False):
+        return self._cache_axes(self.cfg, int8)
+
+    def abstract_cache(self, batch: int, max_len: int, kv_dtype=None):
+        return jax.eval_shape(
+            functools.partial(self.init_cache, batch, max_len, kv_dtype)
+        )
+
+
+# --- family adapters (normalize batch-dict vs tokens-only signatures) ----
+
+
+def _tok_fwd(fn):
+    def wrapped(params, batch, cfg):
+        return fn(params, batch["tokens"], cfg)
+
+    return wrapped
+
+
+def _tok_prefill(fn):
+    def wrapped(params, batch, cfg, kv_dtype, max_len=None):
+        return fn(params, batch["tokens"], cfg, kv_dtype, max_len)
+
+    return wrapped
+
+
+_FAMILIES: dict[str, dict[str, Any]] = {
+    "dense": dict(
+        init=T.init_decoder, axes=T.decoder_axes,
+        forward=_tok_fwd(T.decoder_forward),
+        prefill=_tok_prefill(T.decoder_prefill),
+        decode=T.decoder_decode_step,
+        init_cache=T.init_decoder_cache, cache_axes=T.decoder_cache_axes,
+    ),
+    "moe": dict(
+        init=T.init_decoder, axes=T.decoder_axes,
+        forward=_tok_fwd(T.decoder_forward),
+        prefill=_tok_prefill(T.decoder_prefill),
+        decode=T.decoder_decode_step,
+        init_cache=T.init_decoder_cache, cache_axes=T.decoder_cache_axes,
+    ),
+    "rwkv": dict(
+        init=R.init_rwkv_lm, axes=R.rwkv_lm_axes,
+        forward=_tok_fwd(R.rwkv_forward),
+        prefill=_tok_prefill(R.rwkv_prefill),
+        decode=R.rwkv_decode_step,
+        init_cache=R.init_rwkv_cache, cache_axes=R.rwkv_cache_axes,
+    ),
+    "hybrid": dict(
+        init=R.init_hybrid, axes=R.hybrid_axes,
+        forward=_tok_fwd(R.hybrid_forward),
+        prefill=_tok_prefill(R.hybrid_prefill),
+        decode=R.hybrid_decode_step,
+        init_cache=R.init_hybrid_cache, cache_axes=R.hybrid_cache_axes,
+    ),
+    "encdec": dict(
+        init=MM.init_encdec, axes=MM.encdec_axes,
+        forward=MM.encdec_forward,
+        prefill=MM.encdec_prefill,
+        decode=MM.encdec_decode_step,
+        init_cache=MM.init_encdec_cache, cache_axes=MM.encdec_cache_axes,
+    ),
+    "vlm": dict(
+        init=MM.init_vlm, axes=MM.vlm_axes,
+        forward=MM.vlm_forward,
+        prefill=MM.vlm_prefill,
+        decode=MM.vlm_decode_step,
+        init_cache=MM.init_vlm_cache, cache_axes=MM.vlm_cache_axes,
+    ),
+}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = _FAMILIES[cfg.family]
+    return Model(
+        cfg=cfg,
+        _init=lambda k, c: fam["init"](k, c),
+        _axes=lambda c: fam["axes"](c),
+        _forward=fam["forward"],
+        _prefill=fam["prefill"],
+        _decode=fam["decode"],
+        _init_cache=fam["init_cache"],
+        _cache_axes=fam["cache_axes"],
+    )

@@ -1,0 +1,487 @@
+"""Encoder-decoder (whisper-style) and VLM (llama-3.2-vision-style) stacks.
+
+Modality frontends are STUBS per the assignment: ``input_specs()`` provides
+precomputed frame/patch embeddings of shape (B, S, d_model) / (B, P,
+d_model); only the transformer backbone is real (and quantizable).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import _stack, _stack_axes, remat_wrap
+
+__all__ = [
+    "init_encdec", "encdec_axes", "encdec_forward", "encdec_prefill",
+    "encdec_decode_step", "init_encdec_cache", "encdec_cache_axes",
+    "init_vlm", "vlm_axes", "vlm_forward", "vlm_prefill",
+    "vlm_decode_step", "init_vlm_cache", "vlm_cache_axes",
+]
+
+
+# ===========================================================================
+# Encoder-decoder (whisper backbone; conv audio frontend stubbed)
+# ===========================================================================
+
+
+def _init_enc_block(key, cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model, "ln"),
+        "attn": L.init_attention(key, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model, "ln"),
+        "mlp": L.init_mlp(L._key(key, "mlp"), cfg),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig) -> dict:
+    p = _init_enc_block(key, cfg)
+    p["ln_x"] = L.init_norm(cfg, cfg.d_model, "ln")
+    p["xattn"] = L.init_attention(L._key(key, "xattn"), cfg)
+    return p
+
+
+def _enc_block_axes(cfg):
+    return {
+        "ln1": L.norm_axes("ln"),
+        "attn": L.attention_axes(cfg),
+        "ln2": L.norm_axes("ln"),
+        "mlp": L.mlp_axes(cfg),
+    }
+
+
+def _dec_block_axes(cfg):
+    ax = _enc_block_axes(cfg)
+    ax["ln_x"] = L.norm_axes("ln")
+    ax["xattn"] = L.attention_axes(cfg)
+    return ax
+
+
+def init_encdec(key, cfg: ArchConfig) -> dict:
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    return {
+        "embed": L.init_embedding(L._key(key, "embed"), cfg),
+        "enc_layers": _stack(
+            L._key(key, "enc"), n_enc, lambda k: _init_enc_block(k, cfg)
+        ),
+        "enc_norm": L.init_norm(cfg, cfg.d_model, "ln"),
+        "dec_layers": _stack(
+            L._key(key, "dec"), n_dec, lambda k: _init_dec_block(k, cfg)
+        ),
+        "final_norm": L.init_norm(cfg, cfg.d_model, "ln"),
+    }
+
+
+def encdec_axes(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embedding_axes(cfg),
+        "enc_layers": _stack_axes(_enc_block_axes(cfg)),
+        "enc_norm": L.norm_axes("ln"),
+        "dec_layers": _stack_axes(_dec_block_axes(cfg)),
+        "final_norm": L.norm_axes("ln"),
+    }
+
+
+def _encode(params, frames: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+    B, S, _ = frames.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = frames
+
+    def body(x, lp):
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        x = x + L.attention_full(
+            lp["attn"], h, cfg, positions=positions, causal=False
+        )
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), None
+
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def _dec_block(lp, x, enc, cfg, positions, enc_positions, return_kv=False):
+    h = L.norm_apply(lp["ln1"], x, cfg)
+    if return_kv:
+        a, kv = L.attention_full(
+            lp["attn"], h, cfg, positions=positions, causal=True, return_kv=True
+        )
+    else:
+        a = L.attention_full(lp["attn"], h, cfg, positions=positions, causal=True)
+        kv = None
+    x = x + a
+    h = L.norm_apply(lp["ln_x"], x, cfg)
+    xa = L.attention_full(
+        lp["xattn"], h, cfg, positions=positions, causal=False,
+        x_kv=enc, positions_kv=enc_positions,
+    )
+    x = x + xa
+    h = L.norm_apply(lp["ln2"], x, cfg)
+    return x + L.mlp_apply(lp["mlp"], h, cfg), kv
+
+
+def encdec_forward(params, batch: dict, cfg: ArchConfig):
+    """batch: {"frames": (B, S_enc, D), "tokens": (B, S_dec)}."""
+    enc = _encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_positions = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, lp):
+        x, _ = _dec_block(lp, x, enc, cfg, positions, enc_positions)
+        return x, None
+
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, jnp.float32(0.0)
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_len: int, kv_dtype=None):
+    n_dec = cfg.n_dec_layers or cfg.n_layers
+    self_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_dec, *a.shape)),
+        L.init_kv_cache(cfg, batch, max_len, kv_dtype),
+    )
+    cross_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_dec, *a.shape)),
+        L.init_kv_cache(cfg, batch, max_len),
+    )
+    return {"self": self_c, "cross": cross_c}
+
+
+def encdec_cache_axes(cfg: ArchConfig, int8: bool = False) -> dict:
+    return {
+        "self": _stack_axes(L.kv_cache_axes(int8)),
+        "cross": _stack_axes(L.kv_cache_axes(False)),
+    }
+
+
+def _cross_kv(lp, enc, cfg):
+    """Precompute cross-attention K/V from encoder states."""
+    B, S, _ = enc.shape
+    k = (enc @ lp["xattn"]["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc @ lp["xattn"]["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        k = k + lp["xattn"]["bk"].reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = v + lp["xattn"]["bv"].reshape(cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def encdec_prefill(
+    params, batch: dict, cfg: ArchConfig, kv_dtype=None, max_len=None
+):
+    """Encode + decoder prompt prefill.  Returns (logits (B, V), cache)."""
+    enc = _encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    enc_positions = jnp.arange(enc.shape[1], dtype=jnp.int32)
+    x = L.embed(params["embed"], tokens)
+    self0 = L.init_kv_cache(cfg, B, max_len or S, kv_dtype)
+    cross0 = L.init_kv_cache(cfg, B, enc.shape[1])
+
+    def body(x, lp):
+        x, (k, v) = _dec_block(
+            lp, x, enc, cfg, positions, enc_positions, return_kv=True
+        )
+        ck, cv = _cross_kv(lp, enc, cfg)
+        return x, {
+            "self": L.cache_store(self0, k, v, 0),
+            "cross": L.cache_store(cross0, ck, cv, 0),
+        }
+
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def encdec_decode_step(params, tokens, cfg: ArchConfig, cache, pos):
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        lp, cache_l = xs
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        a, new_self = L.attention_decode(lp["attn"], h, cfg, cache_l["self"], pos)
+        x = x + a
+        h = L.norm_apply(lp["ln_x"], x, cfg)
+        xa, _ = L.attention_decode(
+            lp["xattn"], h, cfg, cache_l["cross"], pos, cross=True
+        )
+        x = x + xa
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return x, {"self": new_self, "cross": cache_l["cross"]}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"], cache))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return L.lm_logits(params["embed"], x)[:, 0], new_caches
+
+
+# ===========================================================================
+# VLM (llama-3.2-vision backbone; patch frontend stubbed)
+# ===========================================================================
+# Layout: n_layers total; every cfg.cross_every-th layer is a gated
+# cross-attention layer -> superblocks of (cross_every - 1) self layers
+# followed by one cross layer, scanned at the superblock level.
+
+
+def _vlm_counts(cfg: ArchConfig):
+    per = cfg.cross_every
+    n_super = cfg.n_layers // per
+    n_self = n_super * (per - 1)
+    tail = cfg.n_layers - n_super * per  # leftover self layers
+    return n_super, per - 1, n_self + tail, tail
+
+
+def _init_self_block(key, cfg):
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(key, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(L._key(key, "mlp"), cfg),
+    }
+
+
+def _init_cross_block(key, cfg):
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "xattn": L.init_attention(key, cfg, cross=True),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+        "mlp": L.init_mlp(L._key(key, "mlp"), cfg),
+        "mlp_gate": jnp.zeros((), jnp.dtype(cfg.dtype)),
+    }
+
+
+def _self_axes(cfg):
+    return {
+        "ln1": L.norm_axes(),
+        "attn": L.attention_axes(cfg),
+        "ln2": L.norm_axes(),
+        "mlp": L.mlp_axes(cfg),
+    }
+
+
+def _cross_axes(cfg):
+    return {
+        "ln1": L.norm_axes(),
+        "xattn": L.attention_axes(cfg, cross=True),
+        "ln2": L.norm_axes(),
+        "mlp": L.mlp_axes(cfg),
+        "mlp_gate": (),
+    }
+
+
+def init_vlm(key, cfg: ArchConfig) -> dict:
+    n_super, per_self, n_self_total, tail = _vlm_counts(cfg)
+    return {
+        "embed": L.init_embedding(L._key(key, "embed"), cfg),
+        "self_layers": _stack(
+            L._key(key, "self"), n_self_total, lambda k: _init_self_block(k, cfg)
+        ),
+        "cross_layers": _stack(
+            L._key(key, "cross"), n_super, lambda k: _init_cross_block(k, cfg)
+        ),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def vlm_axes(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embedding_axes(cfg),
+        "self_layers": _stack_axes(_self_axes(cfg)),
+        "cross_layers": _stack_axes(_cross_axes(cfg)),
+        "final_norm": L.norm_axes(),
+    }
+
+
+def _self_block(lp, x, cfg, positions, return_kv=False):
+    h = L.norm_apply(lp["ln1"], x, cfg)
+    if return_kv:
+        a, kv = L.attention_full(
+            lp["attn"], h, cfg, positions=positions, causal=True, return_kv=True
+        )
+    else:
+        a = L.attention_full(lp["attn"], h, cfg, positions=positions, causal=True)
+        kv = None
+    x = x + a
+    h = L.norm_apply(lp["ln2"], x, cfg)
+    return x + L.mlp_apply(lp["mlp"], h, cfg), kv
+
+
+def _cross_block(lp, x, patches, cfg, positions, patch_positions):
+    h = L.norm_apply(lp["ln1"], x, cfg)
+    a = L.attention_full(
+        lp["xattn"], h, cfg, positions=positions, causal=False,
+        x_kv=patches, positions_kv=patch_positions,
+    )  # tanh gate applied inside via p["gate"]
+    x = x + a
+    h = L.norm_apply(lp["ln2"], x, cfg)
+    f = L.mlp_apply(lp["mlp"], h, cfg)
+    gate = jnp.tanh(lp["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+    return x + gate * f
+
+
+def vlm_forward(params, batch: dict, cfg: ArchConfig):
+    """batch: {"tokens": (B, S), "patches": (B, P, D)}."""
+    tokens, patches = batch["tokens"], batch["patches"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    patch_positions = jnp.arange(patches.shape[1], dtype=jnp.int32)
+    n_super, per_self, n_self_total, tail = _vlm_counts(cfg)
+    x = L.embed(params["embed"], tokens)
+
+    main_self = jax.tree.map(
+        lambda a: a[: n_super * per_self].reshape(
+            n_super, per_self, *a.shape[1:]
+        ),
+        params["self_layers"],
+    )
+    tail_self = jax.tree.map(lambda a: a[n_super * per_self :], params["self_layers"])
+
+    def inner(x, lp):
+        x, _ = _self_block(lp, x, cfg, positions)
+        return x, None
+
+    inner_r = remat_wrap(inner, cfg)
+
+    def superblock(x, lps):
+        self_lps, cross_lp = lps
+        x, _ = jax.lax.scan(inner_r, x, self_lps)
+        x = _cross_block(cross_lp, x, patches, cfg, positions, patch_positions)
+        return x, None
+
+    superblock = remat_wrap(superblock, cfg)
+    x, _ = jax.lax.scan(superblock, x, (main_self, params["cross_layers"]))
+    if tail:
+        x, _ = jax.lax.scan(inner_r, x, tail_self)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, jnp.float32(0.0)
+
+
+def init_vlm_cache(cfg: ArchConfig, batch: int, max_len: int, kv_dtype=None):
+    n_super, per_self, n_self_total, tail = _vlm_counts(cfg)
+    self_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_self_total, *a.shape)),
+        L.init_kv_cache(cfg, batch, max_len, kv_dtype),
+    )
+    cross_c = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_super, *a.shape)),
+        L.init_kv_cache(cfg, batch, cfg.n_patches),
+    )
+    return {"self": self_c, "cross": cross_c}
+
+
+def vlm_cache_axes(cfg: ArchConfig, int8: bool = False) -> dict:
+    return {
+        "self": _stack_axes(L.kv_cache_axes(int8)),
+        "cross": _stack_axes(L.kv_cache_axes(False)),
+    }
+
+
+def vlm_prefill(
+    params, batch: dict, cfg: ArchConfig, kv_dtype=None, max_len=None
+):
+    tokens, patches = batch["tokens"], batch["patches"]
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    patch_positions = jnp.arange(patches.shape[1], dtype=jnp.int32)
+    n_super, per_self, n_self_total, tail = _vlm_counts(cfg)
+    x = L.embed(params["embed"], tokens)
+    self0 = L.init_kv_cache(cfg, B, max_len or S, kv_dtype)
+    cross0 = L.init_kv_cache(cfg, B, cfg.n_patches)
+
+    main_self = jax.tree.map(
+        lambda a: a[: n_super * per_self].reshape(
+            n_super, per_self, *a.shape[1:]
+        ),
+        params["self_layers"],
+    )
+    tail_self = jax.tree.map(lambda a: a[n_super * per_self :], params["self_layers"])
+
+    def inner(x, lp):
+        x, kv = _self_block(lp, x, cfg, positions, return_kv=True)
+        return x, L.cache_store(self0, *kv, 0)
+
+    def superblock(x, lps):
+        self_lps, cross_lp = lps
+        x, self_caches = jax.lax.scan(inner, x, self_lps)
+        ck, cv = _cross_kv(cross_lp, patches, cfg)
+        x = _cross_block(cross_lp, x, patches, cfg, positions, patch_positions)
+        return x, (self_caches, L.cache_store(cross0, ck, cv, 0))
+
+    x, (self_caches, cross_caches) = jax.lax.scan(
+        superblock, x, (main_self, params["cross_layers"])
+    )
+    self_caches = jax.tree.map(
+        lambda a: a.reshape(n_super * per_self, *a.shape[2:]), self_caches
+    )
+    if tail:
+        x, tail_caches = jax.lax.scan(inner, x, tail_self)
+        self_caches = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), self_caches, tail_caches
+        )
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x[:, -1:, :])[:, 0]
+    return logits, {"self": self_caches, "cross": cross_caches}
+
+
+def vlm_decode_step(params, tokens, cfg: ArchConfig, cache, pos):
+    x = L.embed(params["embed"], tokens)
+    n_super, per_self, n_self_total, tail = _vlm_counts(cfg)
+
+    main_self = jax.tree.map(
+        lambda a: a[: n_super * per_self].reshape(
+            n_super, per_self, *a.shape[1:]
+        ),
+        params["self_layers"],
+    )
+    tail_self = jax.tree.map(lambda a: a[n_super * per_self :], params["self_layers"])
+    main_cache = jax.tree.map(
+        lambda a: a[: n_super * per_self].reshape(
+            n_super, per_self, *a.shape[1:]
+        ),
+        cache["self"],
+    )
+    tail_cache = jax.tree.map(lambda a: a[n_super * per_self :], cache["self"])
+
+    def inner(x, xs):
+        lp, cache_l = xs
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        a, new_c = L.attention_decode(lp["attn"], h, cfg, cache_l, pos)
+        x = x + a
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        return x + L.mlp_apply(lp["mlp"], h, cfg), new_c
+
+    def superblock(x, xs):
+        self_lps, self_cs, cross_lp, cross_c = xs
+        x, new_self = jax.lax.scan(inner, x, (self_lps, self_cs))
+        h = L.norm_apply(cross_lp["ln1"], x, cfg)
+        a, _ = L.attention_decode(cross_lp["xattn"], h, cfg, cross_c, pos, cross=True)
+        x = x + a
+        h = L.norm_apply(cross_lp["ln2"], x, cfg)
+        gate = jnp.tanh(cross_lp["mlp_gate"].astype(jnp.float32)).astype(x.dtype)
+        x = x + gate * L.mlp_apply(cross_lp["mlp"], h, cfg)
+        return x, new_self
+
+    x, new_main = jax.lax.scan(
+        superblock, x,
+        (main_self, main_cache, params["cross_layers"], cache["cross"]),
+    )
+    new_main = jax.tree.map(
+        lambda a: a.reshape(n_super * per_self, *a.shape[2:]), new_main
+    )
+    if tail:
+        x, new_tail = jax.lax.scan(inner, x, (tail_self, tail_cache))
+        new_main = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_main, new_tail
+        )
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, {"self": new_main, "cross": cache["cross"]}

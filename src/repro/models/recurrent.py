@@ -1,0 +1,353 @@
+"""RWKV6 LM and Zamba2-style hybrid (Mamba2 backbone + shared attn block).
+
+Both families are sub-quadratic: decode state is O(1) in context length, so
+they run the ``long_500k`` shape (DESIGN.md §5).
+
+Hybrid layout: ``n_shared = n_layers // shared_attn_period`` invocations of a
+single SHARED transformer block (one weight copy, distinct KV caches per
+invocation), interleaved every (period-1) Mamba2 layers; leftover Mamba2
+layers form the tail.  E.g. zamba2-7b: 81 = 13·(5 mamba + 1 shared) + 3.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.transformer import _stack, _stack_axes, remat_wrap
+
+__all__ = [
+    "init_rwkv_lm", "rwkv_lm_axes", "rwkv_forward", "rwkv_prefill",
+    "rwkv_decode_step", "init_rwkv_cache", "rwkv_cache_axes",
+    "init_hybrid", "hybrid_axes", "hybrid_forward", "hybrid_prefill",
+    "hybrid_decode_step", "init_hybrid_cache", "hybrid_cache_axes",
+]
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def _init_rwkv_block(key, cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.init_norm(cfg, cfg.d_model, "ln"),
+        "time_mix": ssm.init_rwkv6(key, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model, "ln"),
+        "channel_mix": ssm.init_channel_mix(L._key(key, "cm"), cfg),
+    }
+
+
+def _rwkv_block_axes(cfg) -> dict:
+    return {
+        "ln1": L.norm_axes("ln"),
+        "time_mix": ssm.rwkv6_axes(),
+        "ln2": L.norm_axes("ln"),
+        "channel_mix": ssm.channel_mix_axes(),
+    }
+
+
+def init_rwkv_lm(key, cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.init_embedding(L._key(key, "embed"), cfg),
+        "ln0": L.init_norm(cfg, cfg.d_model, "ln"),
+        "layers": _stack(
+            L._key(key, "layers"), cfg.n_layers,
+            lambda k: _init_rwkv_block(k, cfg),
+        ),
+        "final_norm": L.init_norm(cfg, cfg.d_model, "ln"),
+    }
+
+
+def rwkv_lm_axes(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embedding_axes(cfg),
+        "ln0": L.norm_axes("ln"),
+        "layers": _stack_axes(_rwkv_block_axes(cfg)),
+        "final_norm": L.norm_axes("ln"),
+    }
+
+
+def rwkv_forward(params, tokens: jax.Array, cfg: ArchConfig):
+    x = L.embed(params["embed"], tokens)
+    x = L.norm_apply(params["ln0"], x, cfg)
+
+    def body(x, lp):
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        x = x + ssm.rwkv6_time_mix(lp["time_mix"], h, cfg)
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        x = x + ssm.channel_mix(lp["channel_mix"], h)
+        return x, None
+
+    body = remat_wrap(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, jnp.float32(0.0)
+
+
+def init_rwkv_cache(cfg: ArchConfig, batch: int, max_len: int = 0, kv_dtype=None):
+    """Recurrent state (context length enters only through its *contents*)."""
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    H = d // hs
+    dt = jnp.dtype(cfg.dtype)
+    one = {
+        "tm_shift": jnp.zeros((batch, 1, d), dt),
+        "wkv": jnp.zeros((batch, H, hs, hs), jnp.float32),
+        "cm_shift": jnp.zeros((batch, 1, d), dt),
+    }
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one
+    )
+
+
+def rwkv_cache_axes(cfg: ArchConfig, int8: bool = False) -> dict:
+    return {
+        "tm_shift": ("layers", "batch", None, None),
+        "wkv": ("layers", "batch", None, None, None),
+        "cm_shift": ("layers", "batch", None, None),
+    }
+
+
+def rwkv_prefill(
+    params, tokens: jax.Array, cfg: ArchConfig, kv_dtype=None, max_len=None
+):
+    x = L.embed(params["embed"], tokens)
+    x = L.norm_apply(params["ln0"], x, cfg)
+
+    def body(x, lp):
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        tm, tm_shift, wkv = ssm.rwkv6_time_mix(
+            lp["time_mix"], h, cfg, return_state=True
+        )
+        x = x + tm
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        cm, cm_shift = ssm.channel_mix(lp["channel_mix"], h, return_state=True)
+        x = x + cm
+        return x, {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+
+    x, states = jax.lax.scan(body, x, params["layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x[:, -1:, :])[:, 0]
+    return logits, states
+
+
+def rwkv_decode_step(params, tokens, cfg: ArchConfig, cache, pos):
+    x = L.embed(params["embed"], tokens)
+    x = L.norm_apply(params["ln0"], x, cfg)
+
+    def body(x, xs):
+        lp, st = xs
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        tm, tm_shift, wkv = ssm.rwkv6_time_mix_step(
+            lp["time_mix"], h, cfg, st["tm_shift"], st["wkv"]
+        )
+        x = x + tm
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        cm, cm_shift = ssm.channel_mix_step(lp["channel_mix"], h, st["cm_shift"])
+        x = x + cm
+        return x, {"tm_shift": tm_shift, "wkv": wkv, "cm_shift": cm_shift}
+
+    x, states = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return L.lm_logits(params["embed"], x)[:, 0], states
+
+
+# ===========================================================================
+# Hybrid (zamba2-style)
+# ===========================================================================
+
+
+def _hybrid_counts(cfg: ArchConfig):
+    per = cfg.shared_attn_period
+    n_shared = cfg.n_layers // per
+    n_mamba = cfg.n_layers - n_shared
+    main_mamba = n_shared * (per - 1)
+    tail = n_mamba - main_mamba
+    return n_shared, per - 1, n_mamba, tail
+
+
+def _init_mamba_layer(key, cfg):
+    return {
+        "norm": L.init_norm(cfg, cfg.d_model),
+        "mamba": ssm.init_mamba2(key, cfg),
+    }
+
+
+def _mamba_layer_axes(cfg):
+    return {"norm": L.norm_axes(), "mamba": ssm.mamba2_axes(cfg)}
+
+
+def init_hybrid(key, cfg: ArchConfig) -> dict:
+    n_shared, per_m, n_mamba, tail = _hybrid_counts(cfg)
+    return {
+        "embed": L.init_embedding(L._key(key, "embed"), cfg),
+        "mamba_layers": _stack(
+            L._key(key, "mamba"), n_mamba, lambda k: _init_mamba_layer(k, cfg)
+        ),
+        "shared": {
+            "ln1": L.init_norm(cfg, cfg.d_model),
+            "attn": L.init_attention(L._key(key, "shared_attn"), cfg),
+            "ln2": L.init_norm(cfg, cfg.d_model),
+            "mlp": L.init_mlp(L._key(key, "shared_mlp"), cfg),
+        },
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def hybrid_axes(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embedding_axes(cfg),
+        "mamba_layers": _stack_axes(_mamba_layer_axes(cfg)),
+        "shared": {
+            "ln1": L.norm_axes(),
+            "attn": L.attention_axes(cfg),
+            "ln2": L.norm_axes(),
+            "mlp": L.mlp_axes(cfg),
+        },
+        "final_norm": L.norm_axes(),
+    }
+
+
+def _shared_block(sp, x, cfg, positions, return_kv=False):
+    h = L.norm_apply(sp["ln1"], x, cfg)
+    if return_kv:
+        a, kv = L.attention_full(
+            sp["attn"], h, cfg, positions=positions, causal=True, return_kv=True
+        )
+    else:
+        a = L.attention_full(sp["attn"], h, cfg, positions=positions, causal=True)
+        kv = None
+    x = x + a
+    h = L.norm_apply(sp["ln2"], x, cfg)
+    return x + L.mlp_apply(sp["mlp"], h, cfg), kv
+
+
+def _split_main_tail(tree, n_super, per):
+    main = jax.tree.map(
+        lambda a: a[: n_super * per].reshape(n_super, per, *a.shape[1:]), tree
+    )
+    tail = jax.tree.map(lambda a: a[n_super * per :], tree)
+    return main, tail
+
+
+def hybrid_forward(params, tokens: jax.Array, cfg: ArchConfig):
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    n_shared, per_m, n_mamba, tail = _hybrid_counts(cfg)
+    x = L.embed(params["embed"], tokens)
+    main, tail_layers = _split_main_tail(params["mamba_layers"], n_shared, per_m)
+
+    def mamba_one(x, lp):
+        h = L.norm_apply(lp["norm"], x, cfg)
+        return x + ssm.mamba2_forward(lp["mamba"], h, cfg), None
+
+    mamba_one_r = remat_wrap(mamba_one, cfg)
+
+    def superblock(x, lps):
+        x, _ = jax.lax.scan(mamba_one_r, x, lps)
+        x, _ = _shared_block(params["shared"], x, cfg, positions)
+        return x, None
+
+    superblock = remat_wrap(superblock, cfg)
+    x, _ = jax.lax.scan(superblock, x, main)
+    if tail:
+        x, _ = jax.lax.scan(mamba_one_r, x, tail_layers)
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, jnp.float32(0.0)
+
+
+def init_hybrid_cache(cfg: ArchConfig, batch: int, max_len: int, kv_dtype=None):
+    n_shared, per_m, n_mamba, tail = _hybrid_counts(cfg)
+    mamba_state = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_mamba, *a.shape)),
+        ssm.init_mamba2_state(cfg, batch),
+    )
+    kv = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_shared, *a.shape)),
+        L.init_kv_cache(cfg, batch, max_len, kv_dtype),
+    )
+    return {"mamba": mamba_state, "kv": kv}
+
+
+def hybrid_cache_axes(cfg: ArchConfig, int8: bool = False) -> dict:
+    return {
+        "mamba": _stack_axes(ssm.mamba2_state_axes()),
+        "kv": _stack_axes(L.kv_cache_axes(int8)),
+    }
+
+
+def hybrid_prefill(
+    params, tokens: jax.Array, cfg: ArchConfig, kv_dtype=None, max_len=None
+):
+    B, S = tokens.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    n_shared, per_m, n_mamba, tail = _hybrid_counts(cfg)
+    x = L.embed(params["embed"], tokens)
+    main, tail_layers = _split_main_tail(params["mamba_layers"], n_shared, per_m)
+    kv0 = L.init_kv_cache(cfg, B, max_len or S, kv_dtype)
+
+    def mamba_one(x, lp):
+        h = L.norm_apply(lp["norm"], x, cfg)
+        y, st = ssm.mamba2_forward(lp["mamba"], h, cfg, return_state=True)
+        return x + y, st
+
+    def superblock(x, lps):
+        x, states = jax.lax.scan(mamba_one, x, lps)
+        x, (k, v) = _shared_block(
+            params["shared"], x, cfg, positions, return_kv=True
+        )
+        return x, (states, L.cache_store(kv0, k, v, 0))
+
+    x, (main_states, kv_caches) = jax.lax.scan(superblock, x, main)
+    main_states = jax.tree.map(
+        lambda a: a.reshape(n_shared * per_m, *a.shape[2:]), main_states
+    )
+    if tail:
+        x, tail_states = jax.lax.scan(mamba_one, x, tail_layers)
+        main_states = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), main_states, tail_states
+        )
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x[:, -1:, :])[:, 0]
+    return logits, {"mamba": main_states, "kv": kv_caches}
+
+
+def hybrid_decode_step(params, tokens, cfg: ArchConfig, cache, pos):
+    x = L.embed(params["embed"], tokens)
+    n_shared, per_m, n_mamba, tail = _hybrid_counts(cfg)
+    main, tail_layers = _split_main_tail(params["mamba_layers"], n_shared, per_m)
+    main_st, tail_st = _split_main_tail(cache["mamba"], n_shared, per_m)
+
+    def mamba_one(x, xs):
+        lp, st = xs
+        h = L.norm_apply(lp["norm"], x, cfg)
+        y, st2 = ssm.mamba2_decode_step(lp["mamba"], h, cfg, st)
+        return x + y, st2
+
+    def superblock(x, xs):
+        lps, sts, kv_c = xs
+        x, new_sts = jax.lax.scan(mamba_one, x, (lps, sts))
+        h = L.norm_apply(params["shared"]["ln1"], x, cfg)
+        a, new_kv = L.attention_decode(
+            params["shared"]["attn"], h, cfg, kv_c, pos
+        )
+        x = x + a
+        h = L.norm_apply(params["shared"]["ln2"], x, cfg)
+        x = x + L.mlp_apply(params["shared"]["mlp"], h, cfg)
+        return x, (new_sts, new_kv)
+
+    x, (new_main, new_kv) = jax.lax.scan(superblock, x, (main, main_st, cache["kv"]))
+    new_main = jax.tree.map(
+        lambda a: a.reshape(n_shared * per_m, *a.shape[2:]), new_main
+    )
+    if tail:
+        x, new_tail = jax.lax.scan(mamba_one, x, (tail_layers, tail_st))
+        new_main = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b], 0), new_main, new_tail
+        )
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, {"mamba": new_main, "kv": new_kv}

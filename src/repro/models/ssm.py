@@ -1,0 +1,471 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 ("Finch").
+
+Both are linear-attention-family recurrences
+
+    h_t = diag(d_t) h_{t-1} + k_t^T v_t,      y_t = q_t h_t (+ bonus)
+
+trained with a *chunked* algorithm: intra-chunk terms are attention-like
+matmuls with decay masks, inter-chunk state is carried by a `lax.scan` over
+chunks — O(T·c) work, compact HLO, no T-length sequential scan in the
+forward graph.  A naive per-step scan is kept as the test oracle
+(`*_scan_ref`).  Decode is the O(1) recurrence on an explicit state.
+
+Numerical safety: all decay factors are applied as exp(Δlog) with Δlog ≤ 0
+wherever possible.  RWKV6's per-channel decay requires the factored form
+exp(+cum)·exp(−cum); we clamp log-decay to ≥ −4 and use chunk length 16 so
+the factored exponentials stay well inside fp32 range (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import _init_dense, _key, rms_norm
+from repro.runtime.sharding import constrain
+
+# ===========================================================================
+# Mamba2
+# ===========================================================================
+
+
+def init_mamba2(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * N  # conv over [x, B, C]
+    return {
+        # in_proj -> [z (di), x (di), B (N), C (N), dt (H)]
+        "in_proj": _init_dense(
+            _key(key, "in"), (d, 2 * di + 2 * N + H), dt
+        ),
+        "conv_w": _init_dense(_key(key, "conv"), (cfg.ssm_conv, conv_dim), dt, 0.2),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),  # A = -exp(A_log), per head
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), dt),  # gated RMSNorm scale
+        "out_proj": _init_dense(
+            _key(key, "out"), (di, d), dt,
+            scale=(di**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+    }
+
+
+def mamba2_axes(cfg: ArchConfig) -> dict:
+    return {
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("conv", None),
+        "conv_b": (None,),
+        "A_log": (None,),
+        "D": (None,),
+        "dt_bias": (None,),
+        "norm": ("norm",),
+        "out_proj": ("ff", "embed"),
+    }
+
+
+def _mamba2_split(p, cfg: ArchConfig, u: jax.Array):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : di + di + 2 * N]
+    dt = zxbcdt[..., di + di + 2 * N :]  # (.., H)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array):
+    """Depthwise causal conv along seq.  xBC: (B, T, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xBC.shape[1], :] * w[i][None, None, :] for i in range(K)
+    )
+    return jax.nn.silu(out + b)
+
+
+def mamba2_forward(
+    p: dict,
+    u: jax.Array,
+    cfg: ArchConfig,
+    *,
+    chunk: int = 128,
+    return_state: bool = False,
+):
+    """Chunked SSD forward.  u: (B, T, D) -> (B, T, D)."""
+    B, T, _ = u.shape
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dtr = _mamba2_split(p, cfg, u)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x = xBC[..., :di].reshape(B, T, H, hd)
+    Bm = xBC[..., di : di + N]  # (B, T, N) shared across heads (G=1)
+    Cm = xBC[..., di + N :]  # (B, T, N)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B, T, H)
+    A = -jnp.exp(p["A_log"])  # (H,) negative
+    log_a = dt * A  # (B, T, H) <= 0: per-step log decay
+
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    nc = T // c
+    xc = x.reshape(B, nc, c, H, hd)
+    Bc = Bm.reshape(B, nc, c, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, c, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, c, H)
+    lac = log_a.reshape(B, nc, c, H)
+    cum = jnp.cumsum(lac, axis=2)  # inclusive (B, nc, c, H)
+
+    mask = jnp.tril(jnp.ones((c, c), bool))
+
+    def chunk_step(h, inp):
+        """h: (B, H, hd, N) carried state (fp32)."""
+        xq, Bq, Cq, dtq, cumq = inp  # leading B axis
+        # intra-chunk: M[t,s] = CB[t,s] * exp(cum_t - cum_s) * dt_s  (t >= s)
+        CB = jnp.einsum("btn,bsn->bts", Cq, Bq)  # (B, c, c)
+        dlt = cumq[:, :, None, :] - cumq[:, None, :, :]  # (B, c, c, H) t,s
+        dec = jnp.exp(jnp.where(mask[None, :, :, None], dlt, -jnp.inf))
+        M = CB[..., None] * dec * dtq[:, None, :, :]  # (B, c, c, H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", M, xq.astype(jnp.float32))
+        # inter-chunk: y_t += exp(cum_t) * C_t . h_prev
+        y_inter = jnp.einsum(
+            "btn,bhdn->bthd", Cq, h
+        ) * jnp.exp(cumq)[..., None]
+        # state update: h' = exp(cum_last)*h + sum_s exp(cum_last - cum_s) dt_s x_s B_s^T
+        cum_last = cumq[:, -1, :]  # (B, H)
+        w = jnp.exp(cum_last[:, None, :] - cumq) * dtq  # (B, c, H)
+        dh = jnp.einsum(
+            "bsh,bshd,bsn->bhdn", w, xq.astype(jnp.float32), Bq
+        )
+        h_new = jnp.exp(cum_last)[:, :, None, None] * h + dh
+        return h_new, (y_intra + y_inter).astype(u.dtype)
+
+    h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc, 1, 0),
+        jnp.moveaxis(Bc, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(dtc, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    h_last, ys = jax.lax.scan(chunk_step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, hd)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, T, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    out = constrain(out, ("batch", "seq", "act_embed"))
+    if return_state:
+        conv_state = xBC_tail_state(p, cfg, u)
+        return out, {"ssm": h_last, "conv": conv_state}
+    return out
+
+
+def xBC_tail_state(p, cfg: ArchConfig, u: jax.Array):
+    """Last (K-1) pre-conv xBC rows, the decode-time conv state."""
+    _, xBC_pre, _ = _mamba2_split(p, cfg, u)
+    K = cfg.ssm_conv
+    return xBC_pre[:, -(K - 1) :, :].astype(jnp.float32)
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int) -> dict:
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "ssm": jnp.zeros((batch, H, hd, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * N), jnp.float32),
+    }
+
+
+def mamba2_state_axes() -> dict:
+    return {"ssm": ("batch", None, None, None), "conv": ("batch", None, None)}
+
+
+def mamba2_decode_step(p: dict, u: jax.Array, cfg: ArchConfig, state: dict):
+    """u: (B, 1, D); O(1) recurrence.  Returns (y (B,1,D), new_state)."""
+    B = u.shape[0]
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC_pre, dtr = _mamba2_split(p, cfg, u)
+    xBC_pre = xBC_pre[:, 0].astype(jnp.float32)  # (B, conv_dim)
+    conv = state["conv"]  # (B, K-1, conv_dim)
+    window = jnp.concatenate([conv, xBC_pre[:, None, :]], axis=1)  # (B, K, C)
+    w = p["conv_w"].astype(jnp.float32)
+    xBC = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(jnp.float32)
+    )
+    new_conv = window[:, 1:, :]
+    x = xBC[:, :di].reshape(B, H, hd)
+    Bm = xBC[:, di : di + N]
+    Cm = xBC[:, di + N :]
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))  # (B, H)
+    h = state["ssm"]
+    h = a[:, :, None, None] * h + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt, x, Bm
+    )
+    y = jnp.einsum("bn,bhdn->bhd", Cm, h) + p["D"][None, :, None] * x
+    y = y.reshape(B, 1, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": h, "conv": new_conv}
+
+
+def mamba2_scan_ref(p: dict, u: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Naive per-step oracle (tests only)."""
+    B, T, _ = u.shape
+    state = init_mamba2_state(cfg, B)
+    ys = []
+    for t in range(T):
+        y, state = mamba2_decode_step(p, u[:, t : t + 1], cfg, state)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)
+
+
+# ===========================================================================
+# RWKV6 ("Finch": data-dependent decay)
+# ===========================================================================
+
+_LOGW_MIN = -4.0  # per-step log-decay clamp (chunked-form fp32 safety)
+
+
+def init_rwkv6(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    H = d // cfg.rwkv_head_size
+    ml, dl = cfg.rwkv_mix_lora, cfg.rwkv_decay_lora
+    p = {
+        # token-shift data-dependent mixing (5 targets: r, k, v, g, w)
+        "mu_x": jnp.full((d,), 0.5, dt),
+        "mu": jnp.full((5, d), 0.5, dt),
+        "mix_w1": _init_dense(_key(key, "mw1"), (d, 5 * ml), dt, 0.02),
+        "mix_w2": _init_dense(_key(key, "mw2"), (5, ml, d), dt, 0.02),
+        # projections
+        "wr": _init_dense(_key(key, "wr"), (d, d), dt),
+        "wk": _init_dense(_key(key, "wk"), (d, d), dt),
+        "wv": _init_dense(_key(key, "wv"), (d, d), dt),
+        "wg": _init_dense(_key(key, "wg"), (d, d), dt),
+        "wo": _init_dense(
+            _key(key, "wo"), (d, d), dt,
+            scale=(d**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+        # data-dependent decay LoRA: logw = -exp(w0 + tanh(x A) B)
+        "w0": jnp.zeros((d,), jnp.float32),
+        "decay_A": _init_dense(_key(key, "dA"), (d, dl), dt, 0.02),
+        "decay_B": _init_dense(_key(key, "dB"), (dl, d), dt, 0.02),
+        "bonus": jnp.zeros((H, cfg.rwkv_head_size), jnp.float32),  # u
+        "ln_x": jnp.ones((d,), dt),  # per-head group norm scale
+    }
+    return p
+
+
+def rwkv6_axes() -> dict:
+    return {
+        "mu_x": (None,),
+        "mu": (None, None),
+        "mix_w1": ("embed", None),
+        "mix_w2": (None, None, "embed"),
+        "wr": ("embed", "heads"),
+        "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"),
+        "wg": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+        "w0": (None,),
+        "decay_A": ("embed", None),
+        "decay_B": (None, "embed"),
+        "bonus": (None, None),
+        "ln_x": ("norm",),
+    }
+
+
+def init_channel_mix(key, cfg: ArchConfig) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": _init_dense(_key(key, "cwk"), (d, f), dt),
+        "wv": _init_dense(
+            _key(key, "cwv"), (f, d), dt,
+            scale=(f**-0.5) / math.sqrt(2 * max(cfg.n_layers, 1)),
+        ),
+        "wr": _init_dense(_key(key, "cwr"), (d, d), dt),
+    }
+
+
+def channel_mix_axes() -> dict:
+    return {
+        "mu_k": (None,),
+        "mu_r": (None,),
+        "wk": ("embed", "ff"),
+        "wv": ("ff", "embed"),
+        "wr": ("embed", "heads"),
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """Previous-token features: (B, T, D) -> (B, T, D) shifted right."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(p, x, xprev):
+    """Data-dependent lerp producing the 5 mixed inputs (r, k, v, g, w)."""
+    dx = xprev - x
+    xxx = x + dx * p["mu_x"]
+    ml = p["mix_w2"].shape[1]
+    lora = jnp.tanh(xxx @ p["mix_w1"])  # (B, T, 5*ml)
+    B_, T_, _ = lora.shape
+    lora = lora.reshape(B_, T_, 5, ml)
+    adjust = jnp.einsum("btfm,fmd->btfd", lora, p["mix_w2"])  # (B,T,5,D)
+    mixed = x[:, :, None, :] + dx[:, :, None, :] * (
+        p["mu"][None, None] + adjust
+    )
+    return [mixed[:, :, i, :] for i in range(5)]
+
+
+def _rwkv_logw(p, xw):
+    """Per-channel log decay in [-4, ~0)."""
+    z = p["w0"] + (jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]).astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(z, -12.0, math.log(-_LOGW_MIN)))
+    return jnp.maximum(logw, _LOGW_MIN)
+
+
+def rwkv6_time_mix(
+    p: dict,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    chunk: int = 16,
+    shift_state: Optional[jax.Array] = None,
+    wkv_state: Optional[jax.Array] = None,
+    return_state: bool = False,
+):
+    """RWKV6 time mixing, chunked.  x: (B, T, D)."""
+    B, T, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    xprev = _token_shift(x, shift_state)
+    xr, xk, xv, xg, xw = _rwkv_mix(p, x, xprev)
+    r = (xr @ p["wr"]).reshape(B, T, H, hs).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, hs).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    logw = _rwkv_logw(p, xw).reshape(B, T, H, hs)  # (B,T,H,hs) per-channel
+
+    c = min(chunk, T)
+    while T % c:
+        c -= 1
+    nc = T // c
+    rc = r.reshape(B, nc, c, H, hs)
+    kc = k.reshape(B, nc, c, H, hs)
+    vc = v.reshape(B, nc, c, H, hs)
+    wc = logw.reshape(B, nc, c, H, hs)
+    cum = jnp.cumsum(wc, axis=2)  # inclusive per-channel log decay
+    u = p["bonus"]  # (H, hs)
+
+    # strict causal mask (s < t); the s == t term is the bonus
+    mask = jnp.tril(jnp.ones((c, c), bool), k=-1)
+
+    def chunk_step(S, inp):
+        """S: (B, H, hs_k, hs_v) carried wkv state."""
+        rq, kq, vq, cumq, wq = inp
+        # contribution of s<t to y_t: (r_t ⊙ e^{cum_{t-1}}) (k_s ⊙ e^{-cum_s})
+        # cum_{t-1} = cum_t - w_t
+        r_dec = rq * jnp.exp(cumq - wq)  # (B, c, H, hs)
+        k_dec = kq * jnp.exp(-cumq)
+        att = jnp.einsum("bthn,bshn->bhts", r_dec, k_dec)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y_intra = jnp.einsum("bhts,bshn->bthn", att, vq)
+        # bonus (current token)
+        rk = jnp.einsum("bthn,bthn->bth", rq * u[None, None], kq)
+        y_bonus = rk[..., None] * vq
+        # inter-chunk: y_t += (r_t ⊙ e^{cum_{t-1}}) . S_prev
+        y_inter = jnp.einsum("bthn,bhnm->bthm", r_dec, S)
+        # state update: S' = diag(e^{cum_last}) S + Σ_s (k_s e^{cum_last - cum_s}) v_s
+        cum_last = cumq[:, -1]  # (B, H, hs)
+        k_up = kq * jnp.exp(cum_last[:, None] - cumq)
+        S_new = (
+            jnp.exp(cum_last)[..., None] * S
+            + jnp.einsum("bshn,bshm->bhnm", k_up, vq)
+        )
+        return S_new, y_intra + y_bonus + y_inter
+
+    S0 = (
+        wkv_state
+        if wkv_state is not None
+        else jnp.zeros((B, H, hs, hs), jnp.float32)
+    )
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0) for a in (rc, kc, vc, cum, wc)
+    )
+    S_last, ys = jax.lax.scan(chunk_step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, H, hs)
+    # per-head group norm then gate
+    y = rms_norm(y, jnp.ones((hs,), jnp.float32), 64e-5).reshape(B, T, D)
+    y = (y.astype(x.dtype) * p["ln_x"]) * g
+    out = y @ p["wo"]
+    out = constrain(out, ("batch", "seq", "act_embed"))
+    if return_state:
+        return out, x[:, -1:, :], S_last
+    return out
+
+
+def rwkv6_time_mix_step(
+    p: dict, x: jax.Array, cfg: ArchConfig, shift_state, wkv_state
+):
+    """Single-token recurrence.  x: (B, 1, D)."""
+    B, _, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    xprev = shift_state  # (B, 1, D)
+    xr, xk, xv, xg, xw = _rwkv_mix(p, x, xprev)
+    r = (xr @ p["wr"]).reshape(B, H, hs).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, H, hs).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, H, hs).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = jnp.exp(_rwkv_logw(p, xw).reshape(B, H, hs))
+    u = p["bonus"]
+    # y = r . (S + u ⊙ k^T v)
+    kv = jnp.einsum("bhn,bhm->bhnm", k, v)
+    y = jnp.einsum("bhn,bhnm->bhm", r, wkv_state + u[None, :, :, None] * kv)
+    S_new = w[..., None] * wkv_state + kv
+    y = rms_norm(y, jnp.ones((hs,), jnp.float32), 64e-5).reshape(B, 1, D)
+    y = (y.astype(x.dtype) * p["ln_x"]) * g
+    return y @ p["wo"], x, S_new
+
+
+def channel_mix(p: dict, x: jax.Array, shift_state=None, return_state=False):
+    xprev = _token_shift(x, shift_state)
+    xk = x + (xprev - x) * p["mu_k"]
+    xr = x + (xprev - x) * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    h = constrain(h, ("batch", "seq", "act_ff"))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"])
+    if return_state:
+        return out, x[:, -1:, :]
+    return out
+
+
+def channel_mix_step(p: dict, x: jax.Array, shift_state):
+    xprev = shift_state
+    xk = x + (xprev - x) * p["mu_k"]
+    xr = x + (xprev - x) * p["mu_r"]
+    h = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (h @ p["wv"]), x
+
+
+def rwkv6_scan_ref(p: dict, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """Per-step oracle for the chunked time-mix (tests only)."""
+    B, T, D = x.shape
+    hs = cfg.rwkv_head_size
+    H = D // hs
+    shift = jnp.zeros((B, 1, D), x.dtype)
+    S = jnp.zeros((B, H, hs, hs), jnp.float32)
+    ys = []
+    for t in range(T):
+        y, shift, S = rwkv6_time_mix_step(p, x[:, t : t + 1], cfg, shift, S)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,209 @@
+"""Decoder-only transformer stack (dense + MoE families).
+
+Layer weights are stacked along a leading ``layers`` axis and the stack is
+applied with ``lax.scan`` (compact HLO at 35–100 layers, fast compiles).
+Remat policy per :class:`ArchConfig.remat` wraps the scanned block body.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.runtime.sharding import constrain
+
+__all__ = [
+    "init_decoder",
+    "decoder_axes",
+    "decoder_forward",
+    "decoder_prefill",
+    "decoder_decode_step",
+    "init_decoder_cache",
+    "decoder_cache_axes",
+    "remat_wrap",
+]
+
+
+def remat_wrap(fn, cfg: ArchConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _stack(key, n: int, init_one):
+    """Initialize ``n`` layers and stack each leaf along axis 0."""
+    ps = [init_one(jax.random.fold_in(key, i)) for i in range(n)]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def _stack_axes(axes: dict) -> dict:
+    return jax.tree.map(
+        lambda ax: ("layers", *ax),
+        axes,
+        is_leaf=lambda v: isinstance(v, tuple)
+        and all(isinstance(e, (str, type(None))) for e in v),
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ArchConfig) -> dict:
+    p = {
+        "ln1": L.init_norm(cfg, cfg.d_model),
+        "attn": L.init_attention(key, cfg),
+        "ln2": L.init_norm(cfg, cfg.d_model),
+    }
+    if cfg.n_experts:
+        p["moe"] = L.init_moe(L._key(key, "moe"), cfg)
+    else:
+        p["mlp"] = L.init_mlp(L._key(key, "mlp"), cfg)
+    return p
+
+
+def _block_axes(cfg: ArchConfig) -> dict:
+    ax = {
+        "ln1": L.norm_axes(),
+        "attn": L.attention_axes(cfg),
+        "ln2": L.norm_axes(),
+    }
+    if cfg.n_experts:
+        ax["moe"] = L.moe_axes(cfg)
+    else:
+        ax["mlp"] = L.mlp_axes(cfg)
+    return ax
+
+
+def init_decoder(key, cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.init_embedding(L._key(key, "embed"), cfg),
+        "layers": _stack(
+            L._key(key, "layers"), cfg.n_layers, lambda k: _init_block(k, cfg)
+        ),
+        "final_norm": L.init_norm(cfg, cfg.d_model),
+    }
+
+
+def decoder_axes(cfg: ArchConfig) -> dict:
+    return {
+        "embed": L.embedding_axes(cfg),
+        "layers": _stack_axes(_block_axes(cfg)),
+        "final_norm": L.norm_axes(),
+    }
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _block_apply(lp, x, cfg: ArchConfig, positions, return_kv=False):
+    h = L.norm_apply(lp["ln1"], x, cfg)
+    if return_kv:
+        a, kv = L.attention_full(
+            lp["attn"], h, cfg, positions=positions, causal=cfg.causal,
+            return_kv=True,
+        )
+    else:
+        a = L.attention_full(
+            lp["attn"], h, cfg, positions=positions, causal=cfg.causal
+        )
+        kv = None
+    x = x + a
+    h = L.norm_apply(lp["ln2"], x, cfg)
+    if cfg.n_experts:
+        f, aux = L.moe_apply(lp["moe"], h, cfg)
+    else:
+        f, aux = L.mlp_apply(lp["mlp"], h, cfg), jnp.float32(0.0)
+    return x + f, aux, kv
+
+
+def decoder_forward(params, tokens: jax.Array, cfg: ArchConfig):
+    """tokens (B, S) -> (hidden (B, S, D), aux_loss)."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, lp):
+        x, aux = carry
+        x2, a, _ = _block_apply(lp, x, cfg, positions)
+        return (x2, aux + a), None
+
+    body = remat_wrap(body, cfg)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, aux / cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + cached decode
+# ---------------------------------------------------------------------------
+
+
+def init_decoder_cache(cfg: ArchConfig, batch: int, max_len: int, kv_dtype=None):
+    one = L.init_kv_cache(cfg, batch, max_len, kv_dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)), one
+    )
+
+
+def decoder_cache_axes(cfg: ArchConfig, int8: bool = False) -> dict:
+    return _stack_axes(L.kv_cache_axes(int8))
+
+
+def decoder_prefill(
+    params, tokens: jax.Array, cfg: ArchConfig, kv_dtype=None, max_len=None
+):
+    """Forward full prompt, building the layer-stacked KV cache.
+
+    ``max_len`` reserves cache room beyond the prompt (decode budget).
+    Returns (last-token logits (B, V), cache).
+    """
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens)
+    positions = jnp.arange(S, dtype=jnp.int32)
+    cache0 = L.init_kv_cache(cfg, B, max_len or S, kv_dtype)
+
+    def body(carry, lp):
+        x, aux = carry
+        x2, a, (k, v) = _block_apply(lp, x, cfg, positions, return_kv=True)
+        cache = L.cache_store(cache0, k, v, 0)
+        return (x2, aux + a), cache
+
+    (x, _), caches = jax.lax.scan(body, (x, jnp.float32(0.0)), params["layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def decoder_decode_step(params, tokens, cfg: ArchConfig, cache, pos):
+    """One decode step.  tokens (B, 1); pos scalar int32.
+
+    Returns (logits (B, V), new_cache)."""
+    x = L.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        lp, cache_l = xs
+        h = L.norm_apply(lp["ln1"], x, cfg)
+        a, new_cache = L.attention_decode(lp["attn"], h, cfg, cache_l, pos)
+        x = x + a
+        h = L.norm_apply(lp["ln2"], x, cfg)
+        if cfg.n_experts:
+            f, _ = L.moe_apply(lp["moe"], h, cfg)
+        else:
+            f = L.mlp_apply(lp["mlp"], h, cfg)
+        return x + f, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], x)[:, 0]
+    return logits, new_caches

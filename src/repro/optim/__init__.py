@@ -1,0 +1,20 @@
+"""Optimizers + schedules + gradient compression (no external deps)."""
+from repro.optim.optimizers import Optimizer, adafactor, adamw, sgd
+from repro.optim.schedule import cosine_schedule, linear_warmup
+from repro.optim.compression import (
+    ef_int8_compress,
+    ef_int8_decompress,
+    init_ef_state,
+)
+
+__all__ = [
+    "Optimizer",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "cosine_schedule",
+    "linear_warmup",
+    "ef_int8_compress",
+    "ef_int8_decompress",
+    "init_ef_state",
+]

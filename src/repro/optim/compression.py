@@ -1,0 +1,43 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+Quantize per-leaf gradients to int8 with a per-leaf absmax scale and keep
+the quantization residual in an error-feedback buffer that is added back
+the next step — unbiased over time, 4x fewer bytes on the data-parallel
+all-reduce when the reduce is performed on the int8 payload (see
+``repro.launch.train`` / the shard_map DP wrapper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_ef_state", "ef_int8_compress", "ef_int8_decompress"]
+
+
+def init_ef_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _compress_leaf(g: jax.Array, e: jax.Array):
+    gf = g.astype(jnp.float32) + e
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    err = gf - q.astype(jnp.float32) * scale
+    return q, scale, err
+
+
+def ef_int8_compress(grads, ef_state):
+    """-> (int8 tree, scale tree, new ef_state)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    out = [_compress_leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    qs = treedef.unflatten([o[0] for o in out])
+    scales = treedef.unflatten([o[1] for o in out])
+    errs = treedef.unflatten([o[2] for o in out])
+    return qs, scales, errs
+
+
+def ef_int8_decompress(qs, scales):
+    return jax.tree.map(
+        lambda q, s: q.astype(jnp.float32) * s, qs, scales
+    )

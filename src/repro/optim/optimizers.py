@@ -1,0 +1,189 @@
+"""Optimizers as (init, update) pairs over pytrees (optax-style, no dep).
+
+Mixed precision: model params may be bf16; the optimizer keeps an fp32
+master copy + fp32 moments and re-casts updated params to the model dtype
+("params = cast(master)" invariant).  ``adafactor`` offers the low-memory
+option for the biggest archs (factored second moment).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> state
+    update: Callable  # (grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw(
+    lr: Callable | float,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        # copy=True: for fp32 params astype would ALIAS the param buffer,
+        # and donating (params, opt_state) would then donate it twice
+        f32 = lambda p: jnp.array(p, jnp.float32, copy=True)
+        return {
+            "master": jax.tree.map(f32, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gn = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        def upd(g, m, v, master):
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mh = m2 / bc1
+            vh = v2 / bc2
+            new_master = master - lr_t * (
+                mh / (jnp.sqrt(vh) + eps) + weight_decay * master
+            )
+            return m2, v2, new_master
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_ma = treedef.flatten_up_to(state["master"])
+        out = [upd(g, m, v, ma) for g, m, v, ma in zip(flat_g, flat_m, flat_v, flat_ma)]
+        m2 = treedef.unflatten([o[0] for o in out])
+        v2 = treedef.unflatten([o[1] for o in out])
+        master2 = treedef.unflatten([o[2] for o in out])
+        new_params = jax.tree.map(
+            lambda ma, p: ma.astype(p.dtype), master2, params
+        )
+        return new_params, {"master": master2, "m": m2, "v": v2}, {"grad_norm": gn}
+
+    return Optimizer(init=init, update=update)
+
+
+def adafactor(
+    lr: Callable | float,
+    *,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_norm: Optional[float] = 1.0,
+) -> Optimizer:
+    """Factored second moment for >=2D leaves (memory ~ O(m+n) per matrix)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def moment_shapes(p):
+        if p.ndim >= 2:
+            return (
+                jnp.zeros(p.shape[:-1], jnp.float32),  # row
+                jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),  # col
+            )
+        return (jnp.zeros(p.shape, jnp.float32), None)
+
+    def init(params):
+        moments = jax.tree.map(moment_shapes, params)
+        return {
+            "master": jax.tree.map(
+                lambda p: jnp.array(p, jnp.float32, copy=True), params
+            ),
+            "moments": moments,
+        }
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gn = clip_by_global_norm(grads, clip_norm)
+        else:
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            gn = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, mom, master):
+            row, col = mom
+            g2 = g * g + eps
+            if g.ndim >= 2:
+                row2 = beta * row + (1 - beta) * jnp.mean(g2, axis=-1)
+                col2 = beta * col + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    row2[..., None]
+                    * col2[..., None, :]
+                    / (jnp.mean(row2, axis=-1, keepdims=True)[..., None] + eps)
+                )
+                upd_val = g / (denom + 1e-9)
+                new_mom = (row2, col2)
+            else:
+                row2 = beta * row + (1 - beta) * g2
+                upd_val = g / (jnp.sqrt(row2) + 1e-9)
+                new_mom = (row2, None)
+            return new_mom, master - lr_t * upd_val
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_mom = treedef.flatten_up_to(state["moments"])
+        flat_ma = treedef.flatten_up_to(state["master"])
+        out = [upd(g, mo, ma) for g, mo, ma in zip(flat_g, flat_mom, flat_ma)]
+        moments2 = treedef.unflatten([o[0] for o in out])
+        master2 = treedef.unflatten([o[1] for o in out])
+        new_params = jax.tree.map(lambda ma, p: ma.astype(p.dtype), master2, params)
+        return new_params, {"master": master2, "moments": moments2}, {"grad_norm": gn}
+
+    return Optimizer(init=init, update=update)
+
+
+def sgd(lr: Callable | float, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum:
+            return {"mom": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        return {}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mom"], grads,
+            )
+            new_params = jax.tree.map(
+                lambda p, m: (p.astype(jnp.float32) - lr_t * m).astype(p.dtype),
+                params, mom,
+            )
+            return new_params, {"mom": mom}, {"grad_norm": global_norm(grads)}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads,
+        )
+        return new_params, state, {"grad_norm": global_norm(grads)}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,16 @@
+"""Distributed runtime: sharding rules, mesh context, HLO analysis, roofline."""
+from repro.runtime.sharding import (
+    MeshContext,
+    constrain,
+    current_mesh_context,
+    default_rules,
+    mesh_context,
+)
+
+__all__ = [
+    "MeshContext",
+    "constrain",
+    "current_mesh_context",
+    "default_rules",
+    "mesh_context",
+]

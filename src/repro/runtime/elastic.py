@@ -1,0 +1,60 @@
+"""Elastic re-mesh: rebuild mesh + shardings after losing devices.
+
+Checkpoints store LOGICAL (unsharded) arrays (checkpoint/store.py), so a
+resume onto a degraded device set is just: pick the best mesh for the
+devices that remain, re-derive shardings from the same logical-axis rules,
+and restore.  E.g. losing a pod degrades (pod=2, data=16, model=16) to
+(data=16, model=16); losing chips within a pod degrades the data axis
+first (model-parallel groups are kept intact so per-device weight shards
+keep fitting in HBM).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh
+
+from repro.runtime.sharding import MeshContext, default_rules
+
+__all__ = ["best_mesh_shape", "remesh"]
+
+
+def best_mesh_shape(
+    n_devices: int, *, model_parallelism: int = 16, max_pod: int = 16 * 16
+) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest usable (pod, data, model) grid for a degraded device count.
+
+    Keeps the model axis intact (weight shards must fit in HBM); spends the
+    loss on data parallelism; drops the pod axis when < 2 full pods remain.
+    Unused remainder devices are left idle (hot spares).
+    """
+    model = min(model_parallelism, max(n_devices, 1))
+    groups = n_devices // model
+    if groups == 0:
+        model, groups = 1, n_devices
+    data_per_pod = max(max_pod // model, 1)
+    if groups >= 2 * data_per_pod:
+        pods = groups // data_per_pod
+        return (pods, data_per_pod, model), ("pod", "data", "model")
+    return (groups, model), ("data", "model")
+
+
+def remesh(
+    n_devices: Optional[int] = None,
+    *,
+    model_parallelism: int = 16,
+    devices: Optional[Sequence] = None,
+) -> MeshContext:
+    """Build a MeshContext for however many devices are still healthy."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = n_devices if n_devices is not None else len(devices)
+    shape, axes = best_mesh_shape(n, model_parallelism=model_parallelism)
+    used = 1
+    for s in shape:
+        used *= s
+    import numpy as np
+
+    dev_array = np.asarray(devices[:used]).reshape(shape)
+    mesh = Mesh(dev_array, axes)
+    return MeshContext(mesh=mesh, rules=default_rules(multi_pod=len(shape) == 3))

@@ -1,0 +1,110 @@
+"""Per-op breakdown of the weighted HLO accounting (§Perf profiling tool).
+
+The dry-run is our profiler: rank ops by loop-weighted bytes/FLOPs and
+attribute them through the ``metadata op_name`` source path XLA carries
+(e.g. ".../bqkgd,bskd->bkgqs/dot_general").  Usage:
+
+    PYTHONPATH=src python -m repro.runtime.hlo_breakdown \
+        experiments/hlo/qwen3-14b__train_4k__pod1.hlo.zst --top 25
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.runtime.hlo_analysis import (
+    _CALLS_RE,
+    _COLLECTIVES,
+    _SKIP_BYTES_OPCODES,
+    _collective_payload,
+    _comp_weights,
+    _convert_comps,
+    _slice_comps,
+    _dot_flops,
+    _fusion_bodies,
+    _fusion_traffic_bytes,
+    _inplace_comps,
+    _op_traffic_bytes,
+    _operand_names,
+    _parse_computations,
+    _shape_bytes,
+)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _attr(line: str) -> str:
+    m = _META_RE.search(line)
+    if not m:
+        return "(no-metadata)"
+    parts = m.group(1).split("/")
+    return "/".join(parts[-2:]) if len(parts) >= 2 else m.group(1)
+
+
+def breakdown(text: str, n_devices: int = 1):
+    comps = _parse_computations(text)
+    weights = _comp_weights(comps)
+    fusion_bodies = _fusion_bodies(comps)
+    inplace = _inplace_comps(comps)
+    convert_bodies = _convert_comps(comps)
+    slice_bodies = _slice_comps(comps)
+    by_bytes: dict = defaultdict(float)
+    by_flops: dict = defaultdict(float)
+    by_coll: dict = defaultdict(float)
+    for comp in comps.values():
+        w = weights.get(comp.name, 1.0)
+        in_fusion = comp.name in fusion_bodies
+        for op in comp.ops:
+            key = f"{op.opcode:22s} {_attr(op.line)}"
+            if op.opcode == "dot":
+                by_flops[key] += w * _dot_flops(op, comp)
+            base = op.opcode.split("-start")[0]
+            if base in _COLLECTIVES and "-done" not in op.opcode:
+                by_coll[key] += w * _collective_payload(op, comp, n_devices)
+                continue
+            if in_fusion or op.opcode in _SKIP_BYTES_OPCODES:
+                continue
+            callee_inplace = callee_convert = callee_slices = False
+            if op.opcode == "fusion":
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    callee_inplace = m.group(1) in inplace
+                    callee_convert = m.group(1) in convert_bodies
+                    callee_slices = m.group(1) in slice_bodies
+            by_bytes[key] += w * _fusion_traffic_bytes(
+                op, comp, callee_inplace, callee_convert, callee_slices
+            )
+    return by_bytes, by_flops, by_coll
+
+
+def _print_top(title: str, d: dict, top: int, unit: float, suffix: str):
+    total = sum(d.values())
+    print(f"\n== {title} (total {total/unit:.2f} {suffix}) ==")
+    for k, v in sorted(d.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"  {v/unit:10.2f} {suffix}  {100*v/max(total,1e-9):5.1f}%  {k}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--devices", type=int, default=256)
+    args = ap.parse_args(argv)
+    if args.path.endswith(".zst"):
+        import zstandard
+
+        text = zstandard.ZstdDecompressor().decompress(
+            open(args.path, "rb").read()
+        ).decode()
+    else:
+        text = open(args.path).read()
+    by_bytes, by_flops, by_coll = breakdown(text, args.devices)
+    _print_top("HBM bytes (per device)", by_bytes, args.top, 1e9, "GB")
+    _print_top("FLOPs (per device)", by_flops, args.top, 1e12, "TF")
+    _print_top("collective bytes (per device)", by_coll, args.top, 1e9, "GB")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,138 @@
+"""Three-term roofline model from the compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants (TPU v5e, per chip): 197 TFLOP/s bf16; 819 GB/s HBM;
+~50 GB/s/link ICI (§Roofline contract).  HLO_FLOPs / HLO_bytes come from
+``compiled.cost_analysis()``; collective bytes from
+:mod:`repro.runtime.hlo_analysis`.
+
+MODEL_FLOPS (useful work) is 6·N·D for dense training and 2·N·D for a
+forward-only step (N = params, active params for MoE; D = tokens processed
+by the step), giving the MODEL_FLOPS / HLO_FLOPs "usefulness" ratio that
+catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["HW", "RooflineTerms", "roofline_terms", "model_flops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str = "tpu_v5e"
+    peak_flops: float = 197e12  # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9  # bytes/s per chip
+    link_bw: float = 50e9  # bytes/s per ICI link (per chip, one direction)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def hlo_flops_global(self) -> float:
+        """hlo_flops is per-device (partitioned module); SPMD is symmetric."""
+        return self.hlo_flops * self.chips
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / global HLO_FLOPs (remat & redundancy waste)."""
+        g = self.hlo_flops_global
+        return self.model_flops / g if g else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline-bound step time."""
+        t = self.step_time_s
+        if not t:
+            return 0.0
+        return self.model_flops / (self.chips * HW().peak_flops * t)
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "hlo_flops_global": self.hlo_flops_global,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "mfu_bound": self.mfu,
+            "chips": self.chips,
+        }
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Useful FLOPs per step: 6·N_active·tokens (train), 2·N_active·tokens
+    (forward-only prefill/decode)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def roofline_terms(
+    *,
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    chips: int,
+    cfg: Optional[ArchConfig] = None,
+    shape: Optional[ShapeSpec] = None,
+    hw: HW = HW(),
+    flops_are_global: bool = True,
+) -> RooflineTerms:
+    """cost_analysis reports per-program numbers; under SPMD the program is
+    per-device, so set ``flops_are_global=False`` when the counts came from
+    a partitioned executable."""
+    div = chips if flops_are_global else 1
+    mf = model_flops(cfg, shape) if (cfg and shape) else 0.0
+    return RooflineTerms(
+        compute_s=hlo_flops / div / hw.peak_flops,
+        memory_s=hlo_bytes / div / hw.hbm_bw,
+        collective_s=collective_bytes / div / hw.link_bw
+        if flops_are_global
+        else collective_bytes / hw.link_bw,
+        hlo_flops=hlo_flops,
+        hlo_bytes=hlo_bytes,
+        collective_bytes=collective_bytes,
+        model_flops=mf,
+        chips=chips,
+    )

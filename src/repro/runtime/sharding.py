@@ -1,0 +1,246 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates arrays with *logical* axis names ("batch", "embed",
+"heads", ...).  A :class:`MeshContext` resolves those names to mesh axes via
+a rule table, dropping any assignment whose dimension is not divisible by
+the mesh-axis size (e.g. qwen3's 40 heads on a 16-wide 'model' axis fall
+back to replicated *activations* while its weights still shard on
+d_ff/d_model/vocab).  Everything degrades to a no-op when no mesh context
+is active, so unit tests and single-host smoke runs never see a mesh.
+
+Rule tables are plain dicts `logical_name -> mesh axis | tuple | None`, so
+perf iterations (§Perf) are one-line rule edits.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+import threading
+from typing import Any, Iterable, Mapping, Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "default_rules",
+    "MeshContext",
+    "mesh_context",
+    "current_mesh_context",
+    "constrain",
+    "logical_to_pspec",
+    "param_shardings",
+]
+
+MeshAxes = Union[str, tuple, None]
+LogicalAxes = Sequence[Optional[str]]
+
+_tls = threading.local()
+
+
+def default_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
+    """Baseline rule table for the (pod?, data, model) production mesh.
+
+    FSDP over 'data' (weights sharded on their non-TP dim), Megatron TP over
+    'model', the 'pod' axis extends data parallelism.
+    """
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # --- activations ---
+        "batch": batch,
+        "seq": None,               # context parallelism: opt-in per shape
+        "seq_kv": "model",         # decode KV-cache seq (flash-decoding style)
+        "act_embed": None,
+        "act_heads": "model",
+        "act_ff": "model",
+        "act_experts": "model",
+        # --- weights (FSDP dim first, TP dim second by convention) ---
+        "embed": "data",           # d_model dim of weight matrices
+        "heads": "model",          # fused q/k/v head*head_dim output dims
+        "kv_heads": "model",
+        "ff": "model",             # MLP hidden
+        "vocab": "model",          # embedding/lm-head vocab dim
+        "experts": "model",        # expert parallelism
+        # expert matrices: EP x FSDP.  An EP-only variant (expert_embed ->
+        # None) removes the per-microbatch (E,C,F) activation all-reduce
+        # (§Perf D3: -24% collective) but leaves 457B arctic expert params
+        # sharded only 16x — infeasible (22.5 GB/device of fp32 opt state).
+        # The capacity constraint, not the collective, binds here.
+        "expert_embed": "data",
+        "expert_ff": None,
+        "layers": None,            # scan-stacked layer axis: never sharded
+        "conv": None,
+        "state": None,
+        "norm": None,
+    }
+
+
+def serving_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
+    """Serving layout: weight-stationary TP + pure DP.
+
+    FSDP ('embed' -> data) is wrong for decode: it re-gathers every weight
+    every step (the baseline profile shows it as ~99% of decode collective
+    bytes).  For serving, weights shard only on their TP dim and replicate
+    across 'data'; HBM capacity is covered by the 2-bit packed weights the
+    paper provides (§Perf iteration A2)."""
+    r = default_rules(multi_pod)
+    r["embed"] = None  # no FSDP dim on weights
+    return r
+
+
+def context_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
+    """Sequence/context parallelism: shard activation time over 'model'.
+
+    For archs whose head count does not divide the model axis (qwen3: 40
+    heads on 16) attention activations fall back to replicated; sharding
+    the SEQUENCE dim instead keeps all chips busy — q is sharded, k/v are
+    (cheaply) gathered per layer (§Perf iteration B3)."""
+    r = default_rules(multi_pod)
+    r["seq"] = "model"
+    r["act_heads"] = None
+    return r
+
+
+def fsdp2d_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
+    """2D weight sharding on NON-contraction dims (§Perf iteration B7).
+
+    FSDP on the contraction dim ('embed') makes GSPMD partial-sum each
+    matmul and ALL-REDUCE the activations over 'data' — per dot, per
+    microbatch, per remat pass (the dominant collective in the train
+    profile).  Sharding the output/TP dims over (model, data) instead
+    turns that into a small per-microbatch weight-slice all-gather
+    (weights << activations per microbatch) while keeping per-device
+    weight memory at P/256."""
+    r = default_rules(multi_pod)
+    r["embed"] = None
+    data = ("data", "pod") if multi_pod else ("data",)
+    r["ff"] = ("model", *data)
+    r["heads"] = ("model", *data)
+    r["kv_heads"] = ("model", *data)
+    r["vocab"] = ("model", *data)
+    r["experts"] = ("model", *data)
+    return r
+
+
+RULE_SETS = {
+    "default": default_rules,
+    "serving": serving_rules,
+    "context": context_rules,
+    "fsdp2d": fsdp2d_rules,
+}
+
+
+def _axis_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def logical_to_pspec(
+    mesh: Mesh,
+    rules: Mapping[str, MeshAxes],
+    logical: LogicalAxes,
+    shape: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec.
+
+    If ``shape`` is given, any assignment whose dim is not divisible by the
+    mesh-axis size is dropped (replicated) — the divisibility fallback.
+    Mesh axes already used by an earlier dim of the same array are dropped
+    too (a mesh axis may shard at most one dim).
+    """
+    spec: list[MeshAxes] = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            spec.append(None)
+            continue
+        axes = rules.get(name)
+        if axes is None:
+            spec.append(None)
+            continue
+        ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+        ax_tuple = tuple(a for a in ax_tuple if a not in used and a in mesh.shape)
+        if not ax_tuple:
+            spec.append(None)
+            continue
+        if shape is not None:
+            # greedily keep the prefix of mesh axes that divides the dim
+            keep: list[str] = []
+            size = 1
+            for a in ax_tuple:
+                if shape[i] % (size * mesh.shape[a]) == 0:
+                    keep.append(a)
+                    size *= mesh.shape[a]
+            ax_tuple = tuple(keep)
+        if not ax_tuple:
+            spec.append(None)
+            continue
+        used.update(ax_tuple)
+        spec.append(ax_tuple[0] if len(ax_tuple) == 1 else ax_tuple)
+    return P(*spec)
+
+
+@dataclasses.dataclass
+class MeshContext:
+    """An active (mesh, rules) pair used to resolve logical shardings."""
+
+    mesh: Mesh
+    rules: dict[str, MeshAxes]
+
+    def pspec(self, logical: LogicalAxes, shape=None) -> P:
+        return logical_to_pspec(self.mesh, self.rules, logical, shape)
+
+    def sharding(self, logical: LogicalAxes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(logical, shape))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def current_mesh_context() -> Optional[MeshContext]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh, rules: Optional[Mapping[str, MeshAxes]] = None):
+    """Activate (mesh, rules) for `constrain` calls inside model code."""
+    prev = getattr(_tls, "ctx", None)
+    _tls.ctx = MeshContext(mesh=mesh, rules=dict(rules or default_rules()))
+    try:
+        with mesh:
+            yield _tls.ctx
+    finally:
+        _tls.ctx = prev
+
+
+def constrain(x: jax.Array, logical: LogicalAxes) -> jax.Array:
+    """with_sharding_constraint by logical names; no-op without a context."""
+    ctx = current_mesh_context()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, ctx.sharding(logical, x.shape)
+    )
+
+
+def param_shardings(ctx: MeshContext, abstract_params, logical_axes):
+    """Build a NamedSharding pytree for a params pytree.
+
+    ``abstract_params``: pytree of ShapeDtypeStruct/arrays.
+    ``logical_axes``: same-structure pytree of tuples of logical names.
+    """
+    def is_axes(v):
+        return isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v
+        )
+
+    # map over the axes tree (tuples are leaves there), pairing params in
+    return jax.tree.map(
+        lambda ax, a: ctx.sharding(ax, a.shape),
+        logical_axes,
+        abstract_params,
+        is_leaf=is_axes,
+    )

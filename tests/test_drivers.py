@@ -1,0 +1,68 @@
+"""Driver integration tests: train (fault-tolerant), quantize, serve."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import quantize as qz
+from repro.launch import serve as sv
+from repro.launch import train as tr
+
+
+@pytest.mark.slow
+def test_train_driver_failure_recovery(tmp_path):
+    """Injected failure -> restore from checkpoint -> identical replay."""
+    rc = tr.main([
+        "--arch", "qwen3-14b", "--smoke", "--steps", "8",
+        "--global-batch", "2", "--seq-len", "16",
+        "--save-every", "3", "--fail-at", "5",
+        "--ckpt-dir", str(tmp_path), "--log-every", "2",
+    ])
+    assert rc == 0
+    from repro.checkpoint import latest_step
+
+    assert latest_step(tmp_path) == 8
+
+
+@pytest.mark.slow
+def test_train_driver_resume(tmp_path):
+    """A second invocation resumes from the final checkpoint."""
+    args = [
+        "--arch", "qwen3-14b", "--smoke", "--steps", "4",
+        "--global-batch", "2", "--seq-len", "16",
+        "--save-every", "2", "--ckpt-dir", str(tmp_path),
+    ]
+    assert tr.main(args) == 0
+    # extend to 6 steps: resumes at 4, not 0
+    args[args.index("--steps") + 1] = "6"
+    assert tr.main(args) == 0
+    from repro.checkpoint import latest_step
+
+    assert latest_step(tmp_path) == 6
+
+
+@pytest.mark.slow
+def test_quantize_driver_2bit_close_to_fp(tmp_path):
+    out = tmp_path / "q.json"
+    rc = qz.main([
+        "--arch", "mistral-large-123b", "--smoke", "--bits", "2",
+        "--calib-segments", "8", "--calib-len", "64",
+        "--out", str(out),
+    ])
+    assert rc == 0
+    import json
+
+    rec = json.loads(out.read_text())
+    # 2-bit with IncP stays within 25% relative ppl of fp on the smoke model
+    assert rec["ppl_quant"] < rec["ppl_fp16"] * 1.25
+
+
+@pytest.mark.slow
+def test_serve_driver_quantized_generation():
+    rc = sv.main([
+        "--arch", "qwen3-14b", "--smoke", "--batch", "2",
+        "--prompt-len", "16", "--gen", "4", "--quantize", "--bits", "4",
+    ])
+    assert rc == 0

@@ -1,0 +1,123 @@
+"""Unit tests for the loop-weighted HLO analyzer (§Roofline engine)."""
+from __future__ import annotations
+
+import textwrap
+
+from repro.runtime.hlo_analysis import analyze_hlo, parse_collectives
+
+HLO_SIMPLE = textwrap.dedent("""\
+    HloModule test, is_scheduled=true
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,8] get-tuple-element(%p), index=1
+      %w = f32[8,8] constant({...})
+      %d = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[4,4]<=[16], to_apply=%add_comp
+      ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      ROOT %lt = pred[] constant(true)
+    }
+
+    %add_comp (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+      %x = f32[8,8]{1,0} parameter(0)
+      %i0 = s32[] constant(0)
+      %t0 = (s32[], f32[8,8]) tuple(%i0, %x)
+      %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+      ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+    }
+""")
+
+
+def test_loop_weighted_dot_flops():
+    st = analyze_hlo(HLO_SIMPLE, 16)
+    # dot: 2 * 8*8 * 8 = 1024 flops, x10 trips
+    assert st.flops == 1024 * 10
+
+
+def test_loop_weighted_collective_bytes():
+    st = analyze_hlo(HLO_SIMPLE, 16)
+    # all-reduce of f32[8,8] = 256 B, group size 4: 2*256*(3/4) = 384/iter
+    assert abs(st.collectives.bytes_by_kind["all-reduce"] - 384 * 10) < 1e-6
+    assert st.collectives.count_by_kind["all-reduce"] == 1
+
+
+HLO_DUS = textwrap.dedent("""\
+    HloModule test2
+
+    ENTRY %main (buf: f32[100,64], upd: f32[1,64]) -> f32[100,64] {
+      %buf = f32[100,64]{1,0} parameter(0)
+      %upd = f32[1,64]{1,0} parameter(1)
+      %i = s32[] constant(3)
+      %z = s32[] constant(0)
+      ROOT %d = f32[100,64]{1,0} dynamic-update-slice(%buf, %upd, %i, %z)
+    }
+""")
+
+
+def test_inplace_dus_costs_update_only():
+    st = analyze_hlo(HLO_DUS, 1)
+    # aliased buffer free; the 1x64 f32 update (256 B) + 2 s32 indices
+    assert st.bytes_accessed == 256.0 + 8.0
+
+
+HLO_DSLICE = textwrap.dedent("""\
+    HloModule test3
+
+    ENTRY %main (stack: f32[40,64,64]) -> f32[1,64,64] {
+      %stack = f32[40,64,64]{2,1,0} parameter(0)
+      %i = s32[] constant(7)
+      %z = s32[] constant(0)
+      ROOT %s = f32[1,64,64]{2,1,0} dynamic-slice(%stack, %i, %z, %z), dynamic_slice_sizes={1,64,64}
+    }
+""")
+
+
+def test_dynamic_slice_reads_slice_not_stack():
+    st = analyze_hlo(HLO_DSLICE, 1)
+    # one 64x64 f32 slice result (big operand read through the slice) +
+    # 3 s32 indices
+    assert st.bytes_accessed == 16384.0 + 12.0
+
+
+HLO_CONVERT = textwrap.dedent("""\
+    HloModule test4
+
+    ENTRY %main (x: bf16[128,128]) -> f32[128,128] {
+      %x = bf16[128,128]{1,0} parameter(0)
+      ROOT %c = f32[128,128]{1,0} convert(%x)
+    }
+""")
+
+
+def test_convert_counted_at_narrow_dtype():
+    st = analyze_hlo(HLO_CONVERT, 1)
+    # 2 x bf16 side = 2 * 128*128*2 = 65536 B (not bf16+f32 = 98304)
+    assert st.bytes_accessed == 65536.0
+
+
+HLO_TUPLE_A2A = textwrap.dedent("""\
+    HloModule test5
+
+    ENTRY %main (a: s8[16,64], b: s8[16,64]) -> (s8[16,64], s8[16,64]) {
+      %a = s8[16,64]{1,0} parameter(0)
+      %b = s8[16,64]{1,0} parameter(1)
+      ROOT %x = (s8[16,64], s8[16,64]) all-to-all(%a, %b), replica_groups=[1,16]<=[16]
+    }
+""")
+
+
+def test_tuple_all_to_all_sums_operands():
+    st = parse_collectives(HLO_TUPLE_A2A, 16)
+    # 2 operands x 1024 B x 15/16
+    assert abs(st.bytes_by_kind["all-to-all"] - 2 * 1024 * 15 / 16) < 1e-6

@@ -1,0 +1,157 @@
+"""Incoherence-processing tests: transform orthogonality/invertibility,
+proxy invariance, µ reduction (Figs. 2/3), Alg.1/2 round-trip, and the
+hypothesis property suite for the structured transforms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_hessian, make_weights
+from hypothesis import given, settings, strategies as st
+
+from repro.core import incoherence as inc
+from repro.core.proxy import proxy_loss
+
+DIMS = [8, 24, 64, 96, 128, 160]
+
+
+@pytest.mark.parametrize("kind", ["kronecker", "hadamard"])
+@pytest.mark.parametrize("n", DIMS)
+def test_transform_orthogonal(kind, n):
+    t = inc.make_transform(kind, n, seed=n)
+    X = jax.random.normal(jax.random.PRNGKey(0), (5, n))
+    Y = inc.apply_transform(t, X)
+    # norm preservation (orthogonality)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(Y), axis=-1),
+        np.linalg.norm(np.asarray(X), axis=-1),
+        rtol=1e-4,
+    )
+    # inverse round-trip
+    Xr = inc.apply_transform(t, Y, inverse=True)
+    np.testing.assert_allclose(np.asarray(Xr), np.asarray(X), atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["kronecker", "hadamard"])
+def test_transform_matches_dense_matrix(kind):
+    """The structured operator equals a genuine orthogonal dense matrix."""
+    n = 24 if kind == "kronecker" else 24  # 24 = 3 * 2^3 exercises both paths
+    t = inc.make_transform(kind, n, seed=5)
+    T = inc.apply_transform(t, jnp.eye(n))  # rows = T e_i -> T^T? check ortho
+    TT = np.asarray(T)
+    np.testing.assert_allclose(TT @ TT.T, np.eye(n), atol=1e-4)
+
+
+def test_transform_seeded_deterministic():
+    t1 = inc.make_transform("kronecker", 64, seed=9)
+    t2 = inc.make_transform("kronecker", 64, seed=9)
+    X = jax.random.normal(jax.random.PRNGKey(1), (3, 64))
+    np.testing.assert_array_equal(
+        np.asarray(inc.apply_transform(t1, X)),
+        np.asarray(inc.apply_transform(t2, X)),
+    )
+    t3 = inc.make_transform("kronecker", 64, seed=10)
+    assert not np.allclose(
+        np.asarray(inc.apply_transform(t3, X)),
+        np.asarray(inc.apply_transform(t1, X)),
+    )
+
+
+def test_proxy_invariance_under_conjugation():
+    """tr(W~ H~ W~^T) == tr(W H W^T): the transformation preserves Eq. (1)."""
+    m, n = 32, 48
+    W = make_weights(m, n, seed=0)
+    H = make_hessian(n, seed=0)
+    U = inc.make_transform("kronecker", m, seed=1)
+    V = inc.make_transform("kronecker", n, seed=2)
+    Wt = inc.apply_transform(V, W)
+    Wt = inc.apply_transform(U, Wt.T).T
+    Ht = inc.apply_transform(V, H)
+    Ht = inc.apply_transform(V, Ht.T).T
+    a = float(jnp.einsum("ij,jk,ik->", Wt, Ht, Wt))
+    b = float(jnp.einsum("ij,jk,ik->", W, H, W))
+    assert abs(a - b) / abs(b) < 1e-3
+
+
+@pytest.mark.parametrize("kind", ["kronecker", "hadamard"])
+def test_mu_reduction(kind):
+    """Figs. 2/3: incoherence processing reduces µ_W and µ_H on outlier data."""
+    m, n = 64, 128
+    W = make_weights(m, n, seed=2, outliers=0.01, outlier_scale=1.0)
+    H = make_hessian(n, seed=2)
+    U = inc.make_transform(kind, m, seed=3)
+    V = inc.make_transform(kind, n, seed=4)
+    Wt = inc.apply_transform(V, W)
+    Wt = inc.apply_transform(U, Wt.T).T
+    Ht = inc.apply_transform(V, H)
+    Ht = inc.apply_transform(V, Ht.T).T
+    assert float(inc.mu_weight(Wt)) < float(inc.mu_weight(W)) * 0.5
+    assert float(inc.mu_hessian((Ht + Ht.T) / 2)) < float(inc.mu_hessian(H))
+
+
+def test_preprocess_postprocess_roundtrip_without_rounding():
+    """Alg.1 then Alg.2 with the identity in between recovers W exactly."""
+    W = make_weights(32, 64, seed=6)
+    H = make_hessian(64, seed=6)
+    Wg, Ht, state = inc.incoherence_preprocess(W, H, bits=8, seed=0)
+    Wrec = inc.incoherence_postprocess(Wg, state)  # no rounding applied
+    np.testing.assert_allclose(np.asarray(Wrec), np.asarray(W), atol=2e-4)
+    # conjugated H stays SPD-ish (damped)
+    evs = np.linalg.eigvalsh(np.asarray((Ht + Ht.T) / 2))
+    assert evs.min() > 0
+
+
+def test_diag_rescale_reduces_objective():
+    """Sec. B.1: the rescale should not increase tr(H)·||W||_F^2."""
+    W = make_weights(48, 96, seed=7, outliers=0.02)
+    H = make_hessian(96, seed=7)
+    Wr, Hr, D = inc.diag_rescale(W, H)
+    before = float(jnp.trace(H) * jnp.sum(W * W))
+    after = float(jnp.trace(Hr) * jnp.sum(Wr * Wr))
+    assert after <= before * 1.0001
+    # exact revert
+    np.testing.assert_allclose(
+        np.asarray(Wr / D[None, :]), np.asarray(W), rtol=1e-5
+    )
+
+
+def test_grid_mapping_roundtrip():
+    W = make_weights(16, 32, seed=8)
+    s = inc.quant_range(W, 2.4)
+    maxq = 3
+    Wg = inc.to_grid(W, s, maxq)
+    Wb = inc.from_grid(Wg, s, maxq)
+    np.testing.assert_allclose(np.asarray(Wb), np.asarray(W), atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(4, 96).map(lambda v: 2 * v),  # even dims (hadamard needs pow2 part)
+    seed=st.integers(0, 2**16),
+    kind=st.sampled_from(["kronecker", "hadamard"]),
+)
+def test_property_transform_isometry(n, seed, kind):
+    """Property: every seeded transform is an isometry and invertible."""
+    t = inc.make_transform(kind, n, seed=seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 7), (2, n))
+    y = inc.apply_transform(t, x)
+    assert abs(float(jnp.linalg.norm(y) - jnp.linalg.norm(x))) < 1e-2
+    xr = inc.apply_transform(t, y, inverse=True)
+    assert float(jnp.max(jnp.abs(xr - x))) < 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(2, 24).map(lambda v: 2 * v),
+    n=st.integers(2, 24).map(lambda v: 4 * v),
+    bits=st.sampled_from([2, 3, 4]),
+    seed=st.integers(0, 1000),
+)
+def test_property_pre_post_inverse(m, n, bits, seed):
+    """Property: postprocess(preprocess(W)) == W for any shape/bits/seed."""
+    W = make_weights(m, n, seed=seed)
+    H = make_hessian(n, seed=seed, tokens=256)
+    Wg, _, state = inc.incoherence_preprocess(W, H, bits=bits, seed=seed)
+    Wrec = inc.incoherence_postprocess(Wg, state)
+    assert float(jnp.max(jnp.abs(Wrec - W))) < 5e-4

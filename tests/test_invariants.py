@@ -1,0 +1,139 @@
+"""System invariants across the whole zoo (property-style).
+
+* causality: perturbing a future token never changes past logits;
+* sharding-metadata congruence: param_axes / cache_axes trees are
+  structurally identical to the params / cache trees (what the dry-run's
+  in_shardings depend on — a mismatch is a launch-time crash at scale);
+* roofline model sanity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config, SHAPES
+from repro.models import build_model
+from repro.runtime.roofline import model_flops, roofline_terms
+
+CAUSAL_ARCHS = [
+    "mistral-large-123b", "qwen3-14b", "starcoder2-15b", "arctic-480b",
+    "rwkv6-1.6b", "zamba2-7b",
+]
+
+
+def _batch(cfg, rng, B=2, S=12):
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(rng, (B, S, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.n_patches, cfg.d_model), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", CAUSAL_ARCHS)
+def test_causality(arch):
+    """logits[:, :j] must not depend on tokens[:, j+1:]."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    batch = _batch(cfg, rng)
+    S = batch["tokens"].shape[1]
+    j = S // 2
+    h1, _ = model.forward(params, batch)
+    batch2 = dict(batch)
+    batch2["tokens"] = batch["tokens"].at[:, j + 1 :].set(
+        (batch["tokens"][:, j + 1 :] + 7) % cfg.vocab
+    )
+    h2, _ = model.forward(params, batch2)
+    lg1 = model.logits(params, h1)[:, : j + 1]
+    lg2 = model.logits(params, h2)[:, : j + 1]
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-5)
+
+
+def _same_structure(tree_a, axes_tree) -> bool:
+    """axes leaves are tuples of str/None; compare container structure."""
+    def is_axes(v):
+        return isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v
+        )
+
+    paths_a = {
+        tuple(str(p) for p in path)
+        for path, _ in jax.tree.flatten_with_path(tree_a)[0]
+    }
+    paths_b = {
+        tuple(str(p) for p in path)
+        for path, _ in jax.tree.flatten_with_path(
+            axes_tree, is_leaf=is_axes
+        )[0]
+    }
+    return paths_a == paths_b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_axes_structure_matches_params(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    aparams = model.abstract_params()
+    assert _same_structure(aparams, model.param_axes()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_axes_structure_matches_cache(arch):
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    acache = model.abstract_cache(2, 16)
+    assert _same_structure(acache, model.cache_axes()), arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_axes_rank_matches_param_rank(arch):
+    """Every axes tuple must have exactly one entry per array dim."""
+    cfg = get_smoke_config(arch)
+    model = build_model(cfg)
+    aparams = model.abstract_params()
+    axes = model.param_axes()
+
+    def is_axes(v):
+        return isinstance(v, tuple) and all(
+            isinstance(e, (str, type(None))) for e in v
+        )
+
+    flat_p = jax.tree.flatten_with_path(aparams)[0]
+    flat_a = {tuple(str(q) for q in path): ax
+              for path, ax in jax.tree.flatten_with_path(axes, is_leaf=is_axes)[0]}
+    for path, leaf in flat_p:
+        key = tuple(str(q) for q in path)
+        assert len(flat_a[key]) == leaf.ndim, (arch, key, flat_a[key], leaf.shape)
+
+
+def test_model_flops_ordering():
+    cfg_small = get_config("rwkv6-1.6b")
+    cfg_big = get_config("mistral-large-123b")
+    assert model_flops(cfg_big, SHAPES["train_4k"]) > model_flops(
+        cfg_small, SHAPES["train_4k"]
+    )
+    # decode << train per step
+    assert model_flops(cfg_big, SHAPES["decode_32k"]) < model_flops(
+        cfg_big, SHAPES["train_4k"]
+    )
+    # MoE active < total
+    moe = get_config("arctic-480b")
+    assert moe.active_param_count() < moe.param_count() / 5
+
+
+def test_roofline_terms_consistency():
+    t = roofline_terms(
+        hlo_flops=1e12, hlo_bytes=1e12, collective_bytes=1e10, chips=256,
+        cfg=get_config("qwen3-14b"), shape=SHAPES["train_4k"],
+        flops_are_global=False,
+    )
+    assert t.dominant == "memory"
+    assert t.step_time_s == t.memory_s
+    assert t.mfu > 0  # synthetic inputs: only positivity is meaningful
+    assert t.hlo_flops_global == 256e12

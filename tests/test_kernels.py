@@ -1,0 +1,127 @@
+"""Pallas kernel sweeps (interpret=True) vs pure-jnp oracles:
+kron_mul, hadamard, ldlq in-block kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_hessian
+
+from repro.core.incoherence import random_orthogonal
+from repro.core.ldlq import ldl_decomposition, ldlq as ldlq_seq
+from repro.kernels.hadamard import ops as had_ops
+from repro.kernels.hadamard.ref import hadamard_ref
+from repro.kernels.kron_mul import ops as kron_ops
+from repro.kernels.kron_mul.ref import kron_mul_dense_ref, kron_mul_ref
+from repro.kernels.ldlq.ops import ldlq_pallas
+
+
+# --- kron_mul ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p,q", [(4, 8), (8, 8), (12, 16), (16, 128)])
+@pytest.mark.parametrize("N", [1, 7, 32])
+def test_kron_mul_kernel_vs_ref(p, q, N):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(p * q + N), 3)
+    A = random_orthogonal(k1, p)
+    B = random_orthogonal(k2, q)
+    x = jax.random.normal(k3, (N, p * q), jnp.float32)
+    out = kron_ops.kron_mul(x, A, B, interpret=True)
+    ref = kron_mul_ref(x, A, B)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_kron_mul_ref_matches_dense_kron():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    A = random_orthogonal(k1, 6)
+    B = random_orthogonal(k2, 10)
+    x = jax.random.normal(k3, (5, 60))
+    np.testing.assert_allclose(
+        np.asarray(kron_mul_ref(x, A, B)),
+        np.asarray(kron_mul_dense_ref(x, A, B)),
+        atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kron_mul_dtypes(dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    A = random_orthogonal(k1, 8)
+    B = random_orthogonal(k2, 16)
+    x = jax.random.normal(k3, (3, 128)).astype(dtype)
+    out = kron_ops.kron_mul(x, A, B, interpret=True)
+    assert out.dtype == dtype
+    ref = kron_mul_ref(x, A.astype(dtype), B.astype(dtype))
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=3e-2
+    )
+
+
+def test_kron_mul_leading_dims():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    A = random_orthogonal(k1, 4)
+    B = random_orthogonal(k2, 8)
+    x = jax.random.normal(k3, (2, 3, 32))
+    out = kron_ops.kron_mul(x, A, B, interpret=True)
+    assert out.shape == (2, 3, 32)
+
+
+# --- hadamard ---------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [8, 64, 128, 256, 1024])
+@pytest.mark.parametrize("N", [1, 5])
+def test_hadamard_kernel_vs_butterfly_ref(n, N):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + N))
+    x = jax.random.normal(k1, (N, n), jnp.float32)
+    signs = jnp.sign(jax.random.normal(k2, (n,))) + 0.0
+    out = had_ops.hadamard_transform(x, signs, interpret=True)
+    ref = hadamard_ref(x, signs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)
+
+
+def test_hadamard_is_isometry():
+    n = 512
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, n))
+    signs = jnp.ones((n,))
+    y = had_ops.hadamard_transform(x, signs, interpret=True)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1),
+        rtol=1e-4,
+    )
+
+
+def test_hadamard_involution():
+    """H (H x) == x for the normalized transform with unit signs."""
+    n = 256
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, n))
+    signs = jnp.ones((n,))
+    y = had_ops.hadamard_transform(x, signs, interpret=True)
+    z = had_ops.hadamard_transform(y, signs, interpret=True)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(x), atol=1e-4)
+
+
+# --- ldlq in-block kernel ----------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,block", [(32, 128, 128), (100, 256, 128), (64, 64, 64)])
+@pytest.mark.parametrize("bits", [2, 4])
+def test_ldlq_pallas_matches_sequential(m, n, block, bits):
+    maxq = 2**bits - 1
+    W = jax.random.uniform(jax.random.PRNGKey(m + n), (m, n)) * maxq
+    H = make_hessian(n, seed=n, damp=1e-2)
+    Udot, _ = ldl_decomposition(H)
+    ref = ldlq_seq(W, Udot, maxq)
+    out = ldlq_pallas(W, Udot, maxq, block=block, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_ldlq_pallas_cpu_fallback():
+    W = jax.random.uniform(jax.random.PRNGKey(9), (16, 64)) * 3
+    H = make_hessian(64, seed=9, damp=1e-2)
+    Udot, _ = ldl_decomposition(H)
+    out = ldlq_pallas(W, Udot, 3, block=64)  # dispatches to XLA off-TPU
+    ref = ldlq_seq(W, Udot, 3)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -1,0 +1,60 @@
+"""Bit-packing round-trip and layout-contract tests (+ hypothesis sweep)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("shape", [(4, 32), (7, 33), (128, 130), (1, 1)])
+def test_pack_unpack_roundtrip(bits, shape):
+    m, n = shape
+    maxq = 2**bits - 1
+    Wq = jax.random.randint(jax.random.PRNGKey(bits), (m, n), 0, maxq + 1)
+    packed = packing.pack(Wq, bits)
+    assert packed.shape == (packing.packed_rows(n, bits), m)
+    assert packed.dtype == jnp.int32
+    out = packing.unpack(packed, bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(Wq))
+
+
+@pytest.mark.parametrize("bits,vals", [(2, 16), (3, 10), (4, 8), (8, 4)])
+def test_vals_per_word(bits, vals):
+    assert packing.vals_per_word(bits) == vals
+
+
+def test_layout_contract():
+    """Value j of word i holds Wq[:, i*vals+j] in bits [b*j, b*(j+1))."""
+    bits, m, n = 2, 3, 32
+    Wq = jnp.arange(m * n).reshape(m, n) % 4
+    packed = np.asarray(packing.pack(Wq, bits)).astype(np.uint32)
+    vals = 32 // bits
+    for col in range(m):
+        for k in range(n):
+            word = packed[k // vals, col]
+            got = (word >> (bits * (k % vals))) & 3
+            assert got == int(Wq[col, k])
+
+
+def test_unsupported_bits():
+    with pytest.raises(ValueError):
+        packing.vals_per_word(5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    bits=st.sampled_from([2, 3, 4, 8]),
+    m=st.integers(1, 40),
+    n=st.integers(1, 90),
+    seed=st.integers(0, 999),
+)
+def test_property_roundtrip(bits, m, n, seed):
+    maxq = 2**bits - 1
+    Wq = jax.random.randint(jax.random.PRNGKey(seed), (m, n), 0, maxq + 1)
+    out = packing.unpack(packing.pack(Wq, bits), bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(Wq))

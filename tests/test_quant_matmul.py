@@ -1,0 +1,94 @@
+"""Pallas quant_matmul kernel: interpret=True vs pure-jnp oracle sweeps.
+
+Per the kernel deliverable contract: sweep shapes/dtypes and
+assert_allclose against ref.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.incoherence import from_grid
+from repro.kernels.quant_matmul import ops
+from repro.kernels.quant_matmul.kernel import quant_matmul_kernel
+from repro.kernels.quant_matmul.ref import grid_matmul_ref, quant_matmul_ref
+
+
+def _mk(bits, m, n, bk=None, seed=0):
+    maxq = 2**bits - 1
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    Wq = jax.random.randint(k1, (m, n), 0, maxq + 1)
+    packed = packing.pack(Wq, bits)
+    return Wq, packed
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_kernel_grid_matmul_interpret(bits):
+    """Raw kernel (integer-grid matmul) vs oracle, tile-aligned shapes."""
+    vals = 32 // bits
+    bK = vals * 128 // np.gcd(vals, 128)  # lcm: one lane-aligned K tile
+    B, M, K = 16, 128, bK
+    Wq, packed = _mk(bits, M, K)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, K), jnp.float32)
+    out = quant_matmul_kernel(
+        x, packed, bits=bits, bB=8, bM=128, bK=bK, interpret=True
+    )
+    ref = grid_matmul_ref(x, packed, bits, K)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-3)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize(
+    "B,M,K", [(4, 96, 192), (1, 200, 130), (33, 128, 512)]
+)
+def test_ops_wrapper_padding_interpret(bits, B, M, K):
+    """Public wrapper handles non-tile shapes + affine dequant, vs full ref."""
+    maxq = 2**bits - 1
+    Wq, packed = _mk(bits, M, K, seed=B)
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, K), jnp.float32) * 0.3
+    s = jnp.float32(0.17)
+    out = ops.quant_matmul(x, packed, bits, K, s, maxq, interpret=True)
+    ref = quant_matmul_ref(x, packed, bits, K, s, maxq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ops_dtypes(dtype):
+    bits, B, M, K = 2, 8, 128, 256
+    maxq = 2**bits - 1
+    Wq, packed = _mk(bits, M, K)
+    x = (jax.random.normal(jax.random.PRNGKey(3), (B, K)) * 0.2).astype(dtype)
+    out = ops.quant_matmul(x, packed, bits, K, jnp.float32(0.1), maxq, interpret=True)
+    assert out.dtype == dtype
+    ref = quant_matmul_ref(x, packed, bits, K, jnp.float32(0.1), maxq)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_leading_batch_dims():
+    bits, M, K = 4, 128, 256
+    maxq = 2**bits - 1
+    _, packed = _mk(bits, M, K)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, K), jnp.float32)
+    out = ops.quant_matmul(x, packed, bits, K, jnp.float32(0.2), maxq, interpret=True)
+    assert out.shape == (2, 3, M)
+    flat = ops.quant_matmul(
+        x.reshape(6, K), packed, bits, K, jnp.float32(0.2), maxq, interpret=True
+    )
+    np.testing.assert_allclose(
+        np.asarray(out).reshape(6, M), np.asarray(flat), rtol=1e-5
+    )
+
+
+def test_cpu_fallback_matches_ref():
+    """Without interpret/force flags on CPU, dispatches to the jnp oracle."""
+    bits, B, M, K = 2, 4, 64, 96
+    maxq = 2**bits - 1
+    _, packed = _mk(bits, M, K)
+    x = jax.random.normal(jax.random.PRNGKey(5), (B, K))
+    out = ops.quant_matmul(x, packed, bits, K, jnp.float32(0.3), maxq)
+    ref = quant_matmul_ref(x, packed, bits, K, jnp.float32(0.3), maxq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)

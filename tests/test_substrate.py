@@ -1,0 +1,239 @@
+"""Substrate tests: checkpoint store, optimizers, data determinism,
+sharding rules, elastic re-mesh, gradient compression."""
+from __future__ import annotations
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (
+    CheckpointManager,
+    latest_step,
+    load_checkpoint,
+    save_checkpoint,
+)
+from repro.data import make_calibration, token_batches
+from repro.optim import (
+    adafactor,
+    adamw,
+    cosine_schedule,
+    ef_int8_compress,
+    ef_int8_decompress,
+    init_ef_state,
+    sgd,
+)
+from repro.runtime.elastic import best_mesh_shape
+from repro.runtime.sharding import default_rules, logical_to_pspec, serving_rules
+from jax.sharding import PartitionSpec as P
+
+
+# --- checkpoint -------------------------------------------------------------
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.float32(3.5)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 5, t, extra_meta={"note": "x"})
+    like = jax.tree.map(jnp.zeros_like, t)
+    restored, step, meta = load_checkpoint(tmp_path, like)
+    assert step == 5 and meta["note"] == "x"
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        restored, t,
+    )
+
+
+def test_checkpoint_latest_and_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, save_every=1)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        mgr.maybe_save(s, t)
+    assert latest_step(tmp_path) == 4
+    kept = sorted(p.name for p in tmp_path.iterdir() if p.name.startswith("step_"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_checkpoint_crashed_writer_ignored(tmp_path):
+    t = _tree()
+    save_checkpoint(tmp_path, 1, t)
+    # simulate a crashed writer: stale tmp dir + a final dir w/o manifest
+    (tmp_path / "step_00000009.tmp-123").mkdir()
+    (tmp_path / "step_00000007").mkdir()
+    assert latest_step(tmp_path) == 1
+    restored, step, _ = load_checkpoint(tmp_path, jax.tree.map(jnp.zeros_like, t))
+    assert step == 1
+
+
+def test_checkpoint_atomicity_no_partial_state(tmp_path):
+    t = _tree()
+    p = save_checkpoint(tmp_path, 3, t)
+    assert (p / "manifest.json").exists()
+    assert not list(tmp_path.glob("*.tmp-*"))
+
+
+# --- optimizers -------------------------------------------------------------
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: adamw(5e-2), lambda: adafactor(5e-2), lambda: sgd(1e-1, 0.9),
+])
+def test_optimizer_reduces_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([2.0, -3.0, 1.5])}
+    state = opt.init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    upd = jax.jit(opt.update)
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = upd(g, state, params, jnp.int32(step))
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adamw_master_is_not_param_alias():
+    """fp32 params must be COPIED into the master (donation safety)."""
+    params = {"w": jnp.ones((4,), jnp.float32)}
+    st_ = adamw(1e-2).init(params)
+    assert st_["master"]["w"].unsafe_buffer_pointer() != params["w"].unsafe_buffer_pointer()
+
+
+def test_bf16_params_fp32_master():
+    opt = adamw(1e-2)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    state = opt.init(params)
+    assert state["master"]["w"].dtype == jnp.float32
+    g = {"w": jnp.full((4,), 0.5, jnp.bfloat16)}
+    p2, s2, m = opt.update(g, state, params, jnp.int32(0))
+    assert p2["w"].dtype == jnp.bfloat16
+    assert float(m["grad_norm"]) > 0
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, 100, warmup_steps=10, final_frac=0.1)
+    assert float(f(0)) < 0.2
+    assert abs(float(f(10)) - 1.0) < 0.05
+    assert abs(float(f(99)) - 0.1) < 0.05
+
+
+# --- gradient compression ---------------------------------------------------
+
+
+def test_ef_int8_error_feedback_converges():
+    """Accumulated EF error stays bounded; mean compressed grad ~ true."""
+    g = {"w": jnp.linspace(-1, 1, 256)}
+    ef = init_ef_state(g)
+    acc = jnp.zeros_like(g["w"])
+    for _ in range(50):
+        q, s, ef = ef_int8_compress(g, ef)
+        acc = acc + ef_int8_decompress(q, s)["w"]
+    np.testing.assert_allclose(np.asarray(acc / 50), np.asarray(g["w"]), atol=1e-3)
+
+
+def test_ef_int8_payload_is_int8():
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64,))}
+    q, s, ef = ef_int8_compress(g, init_ef_state(g))
+    assert q["w"].dtype == jnp.int8
+
+
+# --- data -------------------------------------------------------------------
+
+
+def test_token_stream_deterministic_and_resumable():
+    a = token_batches(512, 4, 32, seed=3)
+    b = token_batches(512, 4, 32, seed=3)
+    for _ in range(3):
+        x, y = next(a), next(b)
+        np.testing.assert_array_equal(np.asarray(x["tokens"]), np.asarray(y["tokens"]))
+    # resume: start_step replays the same step
+    c = token_batches(512, 4, 32, seed=3, start_step=3)
+    x3 = next(a)
+    np.testing.assert_array_equal(
+        np.asarray(next(c)["tokens"]), np.asarray(x3["tokens"])
+    )
+
+
+def test_targets_are_shifted_tokens():
+    b = next(token_batches(128, 2, 16, seed=0))
+    assert b["tokens"].shape == b["targets"].shape == (2, 16)
+
+
+def test_calibration_deterministic():
+    a = make_calibration(256, n_segments=4, seg_len=32, seed=5)
+    b = make_calibration(256, n_segments=4, seg_len=32, seed=5)
+    np.testing.assert_array_equal(np.asarray(a.tokens), np.asarray(b.tokens))
+
+
+# --- sharding rules ---------------------------------------------------------
+
+
+class _FakeMesh:
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_logical_to_pspec_divisibility_fallback():
+    mesh = _FakeMesh()
+    rules = default_rules(multi_pod=True)
+    # 40 heads % 16 != 0 -> replicated; 1024 kv-dim divides -> sharded
+    spec = logical_to_pspec(mesh, rules, ("embed", "heads"), (5120, 5120))
+    assert spec == P("data", "model")
+    spec = logical_to_pspec(mesh, rules, (None, "act_heads", None), (1, 40, 128))
+    assert spec == P(None, None, None)
+    # batch=256 divides pod*data=32
+    spec = logical_to_pspec(mesh, rules, ("batch", "seq"), (256, 4096))
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k) falls back to replicated
+    spec = logical_to_pspec(mesh, rules, ("batch", "seq"), (1, 524288))
+    assert spec == P(None, None)
+
+
+def test_mesh_axis_used_once_per_array():
+    mesh = _FakeMesh()
+    rules = default_rules(multi_pod=True)
+    # experts and ff both map to 'model': second gets dropped
+    spec = logical_to_pspec(mesh, rules, ("experts", "embed", "ff"), (128, 7168, 4864))
+    assert spec == P("model", "data", None)
+
+
+def test_serving_rules_drop_fsdp():
+    assert serving_rules()["embed"] is None
+    assert default_rules()["embed"] == "data"
+
+
+# --- elastic ----------------------------------------------------------------
+
+
+def test_best_mesh_shape_degradation():
+    # full 2-pod cluster
+    shape, axes = best_mesh_shape(512, model_parallelism=16)
+    assert shape == (2, 16, 16) and axes == ("pod", "data", "model")
+    # lose one pod
+    shape, axes = best_mesh_shape(256, model_parallelism=16)
+    assert shape == (16, 16) and axes == ("data", "model")
+    # lose 3 chips: keep model=16 groups, sacrifice data + idle remainder
+    shape, axes = best_mesh_shape(253, model_parallelism=16)
+    assert shape == (15, 16)
+    # tiny host fallback
+    shape, axes = best_mesh_shape(1, model_parallelism=16)
+    assert shape == (1, 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 1024))
+def test_property_best_mesh_never_exceeds_devices(n):
+    shape, axes = best_mesh_shape(n)
+    used = 1
+    for s in shape:
+        used *= s
+    assert 0 < used <= n
+    assert len(shape) == len(axes)
