@@ -1,0 +1,137 @@
+"""Serving load benchmark: Poisson arrivals against the batching engine.
+
+    PYTHONPATH=src:benchmarks python benchmarks/serving_load.py --smoke
+
+Synthetic open-loop workload: request arrival times are drawn from a
+Poisson process (``--rate`` req/s), prompt lengths jittered around
+``--prompt-len``.  Reports throughput (tok/s), time-to-first-token and
+inter-token latency percentiles (p50/p99), and peak KV-page occupancy —
+the numbers that matter for a continuous-batching deployment.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_smoke_config
+from repro.core.quantizer import QuipConfig
+from repro.data import make_calibration
+from repro.models import build_model
+from repro.serve import CachedDecoder, Engine, EngineConfig
+
+
+def pctl(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=20.0, help="arrivals/s")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--bits", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=None)
+    ap.add_argument("--token-budget", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    if not args.smoke:
+        print("[serving_load] full-scale arch on CPU is impractical; "
+              "using the smoke config (pass --smoke to silence this)")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    if args.quantize:
+        from repro.launch.quantize import quantize_dense_model
+
+        calib = make_calibration(cfg.vocab, n_segments=8, seg_len=64,
+                                 seed=args.seed + 7)
+        adapter = CachedDecoder.from_quantized(quantize_dense_model(
+            params, cfg,
+            QuipConfig(bits=args.bits, method="ldlq", use_kernel=False),
+            calib.tokens, seed=args.seed, verbose=False,
+        ))
+    else:
+        adapter = CachedDecoder.from_model(model, params)
+
+    rng = np.random.default_rng(args.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / args.rate, args.requests))
+    prompts = make_calibration(
+        cfg.vocab, n_segments=args.requests, seg_len=args.prompt_len,
+        seed=args.seed + 3,
+    ).tokens
+
+    engine = Engine(adapter, EngineConfig(
+        max_seq_len=args.prompt_len + args.gen,
+        n_slots=args.slots,
+        page_size=args.page_size,
+        n_pages=args.pages,
+        token_budget=args.token_budget,
+        prefill_chunk=args.prefill_chunk,
+    ))
+    # warm the jit caches so compile time doesn't pollute latency stats
+    warm = engine.submit(np.asarray(prompts[0]), max_new=2, arrival=0.0)
+    engine.run()
+    assert warm.done
+
+    # jitter prompt lengths so prefill chunking/page claims are ragged
+    lengths = rng.integers(
+        max(4, args.prompt_len // 2), args.prompt_len + 1, args.requests
+    )
+    for i in range(args.requests):
+        engine.submit(np.asarray(prompts[i][: lengths[i]]), max_new=args.gen,
+                      arrival=float(arrivals[i]))
+    engine.reset_clock()  # compile time and warm-up stats stay out of
+    engine.reset_stats()  # the measured run
+    t0 = time.time()
+    done = engine.run()
+    wall = time.time() - t0
+
+    ttft = [r.t_first - r.arrival for r in done]
+    itl = [
+        b - a
+        for r in done
+        for a, b in zip(r.token_times, r.token_times[1:])
+    ]
+    total = sum(len(r.out_tokens) for r in done)
+    s = engine.summary()
+    rec = {
+        "label": ("quip-%db" % args.bits) if args.quantize else "fp",
+        "arch": cfg.name,
+        "requests": args.requests,
+        "rate_req_s": args.rate,
+        "wall_s": round(wall, 3),
+        "tok_s": round(total / wall, 2),
+        "ttft_p50_s": round(pctl(ttft, 50), 4),
+        "ttft_p99_s": round(pctl(ttft, 99), 4),
+        "itl_p50_s": round(pctl(itl, 50), 4),
+        "itl_p99_s": round(pctl(itl, 99), 4),
+        "peak_kv_pages": s["peak_pages_in_use"],
+        "peak_kv_occupancy": round(s["peak_occupancy"], 3),
+        "evictions": s["evictions"],
+        "engine_steps": s["steps"],
+    }
+    print(json.dumps(rec, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rec, f)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

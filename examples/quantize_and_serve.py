@@ -29,10 +29,15 @@ for bits in (4, 2):
     print(f"QuIP {bits}-bit perplexity: {ppl:.2f} "
           f"({(ppl/ppl_fp-1)*100:+.1f}% vs fp)")
 
-# greedy generation through the packed 2-bit path
-prompt = eval_toks[:2, :16]
-toks = prompt
-for _ in range(12):
-    logits = qm.logits(toks)[:, -1]
-    toks = jnp.concatenate([toks, jnp.argmax(logits, -1)[:, None]], axis=1)
-print("2-bit generation:", toks[0, 16:].tolist())
+# greedy generation through the packed 2-bit path — KV-cached continuous
+# batching (repro.serve), not per-token prefix recompute
+import numpy as np
+
+from repro.serve import Engine, EngineConfig
+
+engine = Engine(qm.cached_decoder(), EngineConfig(max_seq_len=16 + 12))
+for p in np.asarray(eval_toks[:2, :16]):
+    engine.submit(p, max_new=12)
+done = engine.run()
+print("2-bit generation:", done[0].out_tokens)
+print("engine:", engine.summary())

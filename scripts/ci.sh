@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# CI: unit tests + the end-to-end quantize -> artifact -> serve path.
+#
+#   scripts/ci.sh          # full run (installs hypothesis if a network is up)
+#   CI_FAST=1 scripts/ci.sh  # skip the slow-marked driver tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+# hypothesis is optional (property sweeps skip without it); best-effort install
+python -c 'import hypothesis' 2>/dev/null \
+  || python -m pip install -q hypothesis \
+  || echo "[ci] hypothesis unavailable (offline?) — property sweeps will skip"
+
+if [ "${CI_FAST:-0}" = "1" ]; then
+  python -m pytest -q -m "not slow"
+else
+  python -m pytest -q
+fi
+
+# end-to-end serving: fp engine, in-process quantize, and the persistent
+# artifact path (quantize once -> serve without re-quantizing)
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --quantize --bits 4 --check
+
+python -m repro.launch.quantize --arch qwen3-14b --smoke --bits 2 \
+  --calib-segments 4 --calib-len 32 --out-dir "$tmp/artifact"
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" --check
+
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8
+
+echo "[ci] OK"

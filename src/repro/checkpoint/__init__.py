@@ -2,6 +2,7 @@
 from repro.checkpoint.store import (
     CheckpointManager,
     latest_step,
+    load_arrays,
     load_checkpoint,
     save_checkpoint,
 )
@@ -10,5 +11,6 @@ __all__ = [
     "CheckpointManager",
     "save_checkpoint",
     "load_checkpoint",
+    "load_arrays",
     "latest_step",
 ]

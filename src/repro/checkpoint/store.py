@@ -30,13 +30,21 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "CheckpointManager",
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_arrays",
+    "latest_step",
+]
 
 _MANIFEST = "manifest.json"
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists from jax 0.4.38; go through
+    # tree_util for compatibility with the pinned 0.4.x toolchain
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     items = []
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -117,6 +125,31 @@ def latest_step(directory: str | os.PathLike) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def load_arrays(
+    directory: str | os.PathLike, *, step: Optional[int] = None
+) -> tuple[dict[str, np.ndarray], int, dict]:
+    """Load a checkpoint as a flat ``path -> array`` dict, no ``like`` tree.
+
+    This is the structure-free restore used by consumers that rebuild
+    their objects from manifest metadata (e.g. serve/artifacts.py, where
+    the tree holds QuantizedLinear fields that are not plain pytrees).
+    Returns (arrays, step, meta).
+    """
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = directory / f"step_{step:08d}"
+    manifest = json.loads((path / _MANIFEST).read_text())
+    arrays: dict[str, np.ndarray] = {}
+    for i in range(manifest["n_shards"]):
+        with np.load(path / f"shard_{i:05d}.npz") as z:
+            for k in z.files:
+                arrays[k.replace("::", "/")] = z[k]
+    return arrays, step, manifest.get("meta", {})
+
+
 def load_checkpoint(
     directory: str | os.PathLike,
     like: Any,
@@ -131,20 +164,7 @@ def load_checkpoint(
     is the elastic-restore path.
     Returns (tree, step, meta).
     """
-    directory = pathlib.Path(directory)
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {directory}")
-    path = directory / f"step_{step:08d}"
-    manifest = json.loads((path / _MANIFEST).read_text())
-
-    arrays: dict[str, np.ndarray] = {}
-    for i in range(manifest["n_shards"]):
-        with np.load(path / f"shard_{i:05d}.npz") as z:
-            for k in z.files:
-                arrays[k.replace("::", "/")] = z[k]
-
+    arrays, step, _meta = load_arrays(directory, step=step)
     items, treedef = _flatten_with_paths(like)
     leaves = []
     sh_items = None
@@ -158,7 +178,7 @@ def load_checkpoint(
             leaves.append(jax.device_put(arr, sh_items[idx][1]))
         else:
             leaves.append(jax.numpy.asarray(arr))
-    return treedef.unflatten(leaves), step, manifest.get("meta", {})
+    return treedef.unflatten(leaves), step, _meta
 
 
 @dataclasses.dataclass

@@ -18,7 +18,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["vals_per_word", "pack", "unpack", "packed_rows"]
+__all__ = ["vals_per_word", "pack", "unpack", "packed_rows", "packed_shape"]
 
 
 def vals_per_word(bits: int) -> int:
@@ -30,6 +30,12 @@ def vals_per_word(bits: int) -> int:
 def packed_rows(n: int, bits: int) -> int:
     v = vals_per_word(bits)
     return (n + v - 1) // v
+
+
+def packed_shape(m: int, n: int, bits: int) -> tuple[int, int]:
+    """Stored shape of a packed (m, n) weight — the serialization contract
+    checked when loading persisted quantized artifacts."""
+    return packed_rows(n, bits), m
 
 
 def pack(Wq: jax.Array, bits: int) -> jax.Array:

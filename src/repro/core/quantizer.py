@@ -23,7 +23,13 @@ from repro.core.hessian import damp
 from repro.core.methods import round_weights
 from repro.core.proxy import proxy_loss
 
-__all__ = ["QuipConfig", "QuantizedLinear", "quantize_layer"]
+__all__ = [
+    "QuipConfig",
+    "QuantizedLinear",
+    "quantize_layer",
+    "linear_to_arrays",
+    "linear_from_arrays",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +94,67 @@ class QuantizedLinear:
         Wq = packing.unpack(self.packed, self.bits, self.n)
         Wd = inc.from_grid(Wq.astype(h.dtype), self.state.s.astype(h.dtype), self.state.maxq)
         return h @ Wd.T
+
+
+# ---------------------------------------------------------------------------
+# Serialization hooks (repro.serve.artifacts)
+#
+# A QuantizedLinear persists as packed ints + the data-dependent scale
+# factors; the orthogonal transforms are NOT stored — they regenerate
+# bit-identically from (kind, n, seed), which is what makes shipping
+# quantized checkpoints nearly free (Sec. 4.1).
+# ---------------------------------------------------------------------------
+
+
+def _transform_meta(t: inc.OrthogonalTransform) -> dict:
+    return {
+        "kind": t.kind,
+        "n": t.n,
+        "seed": t.seed,
+        "permute": t.perm is not None,
+    }
+
+
+def linear_to_arrays(layer: QuantizedLinear) -> tuple[dict, dict]:
+    """Split a layer into (arrays-to-store, json-able metadata)."""
+    arrays = {"packed": layer.packed, "s": layer.state.s}
+    if layer.state.D is not None:
+        arrays["D"] = layer.state.D
+    meta = {
+        "bits": layer.bits,
+        "m": layer.m,
+        "n": layer.n,
+        "maxq": layer.state.maxq,
+        "use_kernel": layer.use_kernel,
+        "U": _transform_meta(layer.state.U),
+        "V": _transform_meta(layer.state.V),
+    }
+    return arrays, meta
+
+
+def linear_from_arrays(arrays: dict, meta: dict) -> QuantizedLinear:
+    """Rebuild a QuantizedLinear; transforms regenerate from their seeds."""
+    m, n, bits = meta["m"], meta["n"], meta["bits"]
+    packed = jnp.asarray(arrays["packed"], jnp.int32)
+    if packed.shape != packing.packed_shape(m, n, bits):
+        raise ValueError(
+            f"packed weight shape {packed.shape} != expected "
+            f"{packing.packed_shape(m, n, bits)} for ({m}, {n}) @ {bits}b"
+        )
+    mk = lambda d: inc.make_transform(
+        d["kind"], d["n"], d["seed"], permute=d["permute"]
+    )
+    state = inc.PreprocessState(
+        U=mk(meta["U"]),
+        V=mk(meta["V"]),
+        D=None if "D" not in arrays else jnp.asarray(arrays["D"], jnp.float32),
+        s=jnp.asarray(arrays["s"], jnp.float32),
+        maxq=meta["maxq"],
+    )
+    return QuantizedLinear(
+        packed=packed, bits=bits, m=m, n=n, state=state,
+        use_kernel=meta.get("use_kernel", False),
+    )
 
 
 def quantize_layer(

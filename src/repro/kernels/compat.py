@@ -1,0 +1,23 @@
+"""Pallas API compatibility across the jax versions we run under.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` after
+0.4.x; the pinned toolchain here still ships the old name.  Import
+:data:`CompilerParams` from this module instead of from ``pltpu`` so the
+kernels compile under either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(
+    _pltpu, "CompilerParams", getattr(_pltpu, "TPUCompilerParams", None)
+)
+
+if CompilerParams is None:  # fail loudly at the kernel, not with a
+    def CompilerParams(*_a, **_k):  # NoneType-is-not-callable TypeError
+        raise AttributeError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams "
+            "nor TPUCompilerParams in this jax version"
+        )
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def sylvester(n: int) -> np.ndarray:
     """Unnormalized H_n (n a power of two) via Sylvester's construction."""
@@ -74,7 +76,7 @@ def hadamard_kernel(
         ],
         out_specs=pl.BlockSpec((bB, n), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _qmm_kernel(x_ref, p_ref, o_ref, *, bits: int, n_k_tiles: int):
     k = pl.program_id(2)
@@ -86,7 +88,7 @@ def quant_matmul_kernel(
         ],
         out_specs=pl.BlockSpec((bB, bM), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, M), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -59,6 +59,14 @@ class QuantizedModel:
     def logits(self, tokens: jax.Array) -> jax.Array:
         return L.lm_logits(self.embed, self.forward_hidden(tokens))
 
+    def cached_decoder(self):
+        """KV-cached prefill/decode path (repro.serve) through the packed
+        D^-1 -> V -> quant_matmul -> U^T pipeline — the serving-time
+        replacement for per-token ``logits`` recompute."""
+        from repro.serve.adapter import CachedDecoder
+
+        return CachedDecoder.from_quantized(self)
+
 
 def _attn_forward_with_linears(blk, h, cfg, positions):
     """attention_full but routed through QuantizedLinear projections."""
@@ -145,10 +153,10 @@ def quantize_dense_model(
     verbose: bool = True,
 ) -> QuantizedModel:
     """Block-by-block QuIP over a dense decoder (params from Model.init)."""
+    from repro.models.transformer import unstack_layers
+
     n_layers = cfg.n_layers
-    layer_params = [
-        jax.tree.map(lambda a: a[i], params["layers"]) for i in range(n_layers)
-    ]
+    layer_params = unstack_layers(params)
     positions = jnp.arange(calib_tokens.shape[1], dtype=jnp.int32)
     x = L.embed(params["embed"], calib_tokens)
 
@@ -173,8 +181,12 @@ def quantize_dense_model(
             W = _get_path(lp, name).T  # stored (in, out) -> quantize (out, in)
             X = taps[name].reshape(-1, W.shape[1]).astype(jnp.float32)
             H = X.T @ X / X.shape[0]
+            # per-layer seed from the STABLE linear index — hash(name) varies
+            # with PYTHONHASHSEED across processes, which would make saved
+            # artifacts irreproducible (their transforms regenerate by seed)
             layer, st = quantize_layer(
-                W, H, qcfg, seed=seed * 1000 + i * 10 + hash(name) % 10
+                W, H, qcfg,
+                seed=seed * 1000 + i * 10 + _DENSE_LINEARS.index(name),
             )
             blk[name] = layer
             stats_blk[name] = st
@@ -225,6 +237,10 @@ def main(argv=None):
     ap.add_argument("--calib-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--out-dir", default=None,
+                    help="persist the quantized model as a serving artifact "
+                         "(packed ints + scales + transform seeds); serve "
+                         "with launch/serve.py --load-quantized <dir>")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -248,6 +264,16 @@ def main(argv=None):
         use_kernel=False,
     )
     qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=args.seed)
+
+    if args.out_dir:
+        from repro.serve.artifacts import save_quantized
+
+        path = save_quantized(
+            args.out_dir, qm, qcfg,
+            extra_meta={"stats": qm.stats, "smoke": args.smoke,
+                        "seed": args.seed},
+        )
+        print(f"[quantize] artifact saved to {path}")
 
     eval_tokens = make_calibration(
         cfg.vocab, n_segments=8, seg_len=args.calib_len, seed=args.seed + 99

@@ -1,13 +1,19 @@
-"""Serving driver: batched prefill + decode with optional QuIP weights.
+"""Serving driver: continuous-batching engine over paged KV caches.
 
+    # quantize once, persist packed weights:
+    PYTHONPATH=src python -m repro.launch.quantize --arch qwen3-14b --smoke \
+        --bits 2 --out-dir /tmp/q
+
+    # serve many concurrent requests from the artifact (no re-quantization):
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-14b --smoke \
-        --batch 4 --prompt-len 32 --gen 16 [--quantize --bits 2]
+        --load-quantized /tmp/q --requests 6 --gen 16
 
-The full-precision path exercises Model.prefill/decode_step (the functions
-the decode_32k / long_500k dry-run cells lower); --quantize swaps in the
-block-by-block QuIP model from launch/quantize.py (dense family) and
-greedy-decodes with packed 2-bit weights through the structured
-D^-1 -> V -> quant_matmul -> U^T inference path.
+Requests arrive staggered (``--arrival-gap``), join the decode batch while
+earlier requests are mid-generation, and decode through the KV-cached
+adapter — for quantized models that is the packed
+``D⁻¹ → V → quant_matmul → Uᵀ`` path, NOT per-token prefix recompute.
+``--check`` verifies the engine's greedy tokens/logits against the
+single-request recompute reference.
 """
 from __future__ import annotations
 
@@ -23,8 +29,11 @@ from repro.core.quantizer import QuipConfig
 from repro.data import make_calibration
 from repro.models import build_model
 
+__all__ = ["greedy_generate", "quantized_generate", "build_engine", "main"]
+
 
 def greedy_generate(model, params, prompt, gen: int, kv_dtype=None):
+    """Reference fp path: Model.prefill + decode_step (dense batch cache)."""
     B, S = prompt.shape
     logits, cache = model.prefill(
         params, {"tokens": prompt}, kv_dtype=kv_dtype, max_len=S + gen
@@ -38,8 +47,9 @@ def greedy_generate(model, params, prompt, gen: int, kv_dtype=None):
 
 
 def quantized_generate(qm, prompt, gen: int):
-    """Greedy decode through the QuantizedModel (recompute path — the
-    quantized forward is what we're exercising, not cache plumbing)."""
+    """Reference recompute path: full-prefix quantized forward per token
+    (O(S^2) per token — kept as the equivalence oracle for the engine's
+    cached decode; see tests/test_serve.py)."""
     toks = prompt
     for _ in range(gen):
         logits = qm.logits(toks)[:, -1]
@@ -47,48 +57,162 @@ def quantized_generate(qm, prompt, gen: int):
     return toks[:, prompt.shape[1]:]
 
 
+def build_engine(adapter, *, max_seq_len, args) -> "Engine":
+    from repro.serve import Engine, EngineConfig
+
+    ecfg = EngineConfig(
+        max_seq_len=max_seq_len,
+        n_slots=args.slots,
+        page_size=args.page_size,
+        n_pages=args.pages,
+        token_budget=args.token_budget,
+        prefill_chunk=args.prefill_chunk,
+    )
+    return Engine(adapter, ecfg)
+
+
+def _serve_batch_fallback(model, params, prompts, args) -> int:
+    """Non-dense families: the engine adapter is dense-only for now
+    (ROADMAP open item); serve one fixed batch through the family's own
+    Model.prefill/decode_step path, as the pre-engine driver did."""
+    t0 = time.time()
+    out = greedy_generate(model, params, prompts, args.gen)
+    dt = time.time() - t0
+    total = out.shape[0] * out.shape[1]
+    print(f"[serve] fp {model.cfg.name} (batch fallback, family="
+          f"{model.cfg.family}): {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s)")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-14b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=6,
+                    help="number of concurrent requests to serve")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"])
-    ap.add_argument("--quantize", action="store_true")
+    ap.add_argument("--arrival-gap", type=float, default=0.02,
+                    help="stagger between request arrivals (s)")
+    # weights
+    ap.add_argument("--quantize", action="store_true",
+                    help="run the QuIP pipeline in-process before serving")
+    ap.add_argument("--load-quantized", default=None, metavar="DIR",
+                    help="serve packed weights from a quantize.py --out-dir "
+                         "artifact (skips the quantization pipeline)")
     ap.add_argument("--bits", type=int, default=2)
+    # engine knobs
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pages", type=int, default=None,
+                    help="physical KV pages (default: no overcommit)")
+    ap.add_argument("--token-budget", type=int, default=64)
+    ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--check", action="store_true",
+                    help="verify engine tokens against the recompute path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(args.seed))
-    prompt = make_calibration(
-        cfg.vocab, n_segments=args.batch, seg_len=args.prompt_len,
+    from repro.serve import CachedDecoder
+    from repro.serve.artifacts import load_quantized
+
+    qm = None
+    if args.load_quantized:
+        try:
+            qm, meta = load_quantized(args.load_quantized)
+        except (FileNotFoundError, ValueError, KeyError) as e:
+            raise SystemExit(
+                f"--load-quantized: {e} (expected a directory written by "
+                f"launch/quantize.py --out-dir)"
+            )
+        cfg = qm.cfg
+        adapter = CachedDecoder.from_quantized(qm)
+        label = f"quip-{meta['quip_config']['bits']}bit[artifact]"
+        print(f"[serve] loaded quantized artifact: {cfg.name} "
+              f"{meta['quip_config']['bits']}-bit ({args.load_quantized})")
+    else:
+        cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(args.seed))
+        if cfg.family != "dense":
+            if args.quantize:
+                raise SystemExit(
+                    "--quantize drives the dense family; per-layer "
+                    "quantization for other families goes through "
+                    "repro.core.quantize_layer directly"
+                )
+            if args.check:
+                raise SystemExit(
+                    "--check verifies the engine against the reference "
+                    "decode path, but non-dense families serve THROUGH "
+                    "that reference path (engine adapter is dense-only; "
+                    "ROADMAP open item) — nothing to check"
+                )
+            prompts = make_calibration(
+                cfg.vocab, n_segments=args.requests, seg_len=args.prompt_len,
+                seed=args.seed + 3,
+            ).tokens
+            return _serve_batch_fallback(model, params, prompts, args)
+        if args.quantize:
+            from repro.launch.quantize import quantize_dense_model
+
+            calib = make_calibration(cfg.vocab, n_segments=8, seg_len=64,
+                                     seed=args.seed + 7)
+            qcfg = QuipConfig(bits=args.bits, method="ldlq", use_kernel=False)
+            qm = quantize_dense_model(params, cfg, qcfg, calib.tokens,
+                                      seed=args.seed, verbose=False)
+            adapter = CachedDecoder.from_quantized(qm)
+            label = f"quip-{args.bits}bit"
+        else:
+            adapter = CachedDecoder.from_model(model, params)
+            label = "fp"
+
+    prompts = make_calibration(
+        cfg.vocab, n_segments=args.requests, seg_len=args.prompt_len,
         seed=args.seed + 3,
     ).tokens
 
-    kd = jnp.int8 if args.kv_dtype == "int8" else None
+    engine = build_engine(
+        adapter, max_seq_len=args.prompt_len + args.gen, args=args
+    )
+    try:
+        for i in range(args.requests):
+            engine.submit(
+                np.asarray(prompts[i]), max_new=args.gen,
+                arrival=i * args.arrival_gap,
+            )
+    except ValueError as e:
+        raise SystemExit(f"cannot admit request: {e} "
+                         f"(grow --pages / --page-size or shrink --gen)")
     t0 = time.time()
-    out_fp = greedy_generate(model, params, prompt, args.gen, kv_dtype=kd)
-    t_fp = time.time() - t0
-    print(f"[serve] fp {cfg.name}: {args.batch}x{args.gen} tokens "
-          f"in {t_fp:.2f}s ({args.batch*args.gen/t_fp:.1f} tok/s)")
+    done = engine.run()
+    dt = time.time() - t0
+    s = engine.summary()
+    total = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {label} {cfg.name}: {len(done)} requests, {total} tokens "
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    print(f"[serve] steps={s['steps']} prefill_tokens={s['prefill_tokens']} "
+          f"decode_tokens={s['decode_tokens']} evictions={s['evictions']} "
+          f"peak_kv_occupancy={s['peak_occupancy']:.0%}")
 
-    if args.quantize:
-        from repro.launch.quantize import quantize_dense_model
-
-        calib = make_calibration(cfg.vocab, n_segments=8, seg_len=64,
-                                 seed=args.seed + 7)
-        qcfg = QuipConfig(bits=args.bits, method="ldlq", use_kernel=False)
-        qm = quantize_dense_model(params, cfg, qcfg, calib.tokens,
-                                  seed=args.seed, verbose=False)
-        t0 = time.time()
-        out_q = quantized_generate(qm, prompt, args.gen)
-        t_q = time.time() - t0
-        agree = float(jnp.mean((out_fp == out_q).astype(jnp.float32)))
-        print(f"[serve] quip-{args.bits}bit: {t_q:.2f}s; "
-              f"token agreement with fp: {agree:.2%}")
+    if args.check:
+        done = sorted(done, key=lambda r: r.rid)
+        engine_toks = np.stack(
+            [np.asarray(r.out_tokens, np.int32) for r in done]
+        )
+        if qm is not None:
+            ref = np.asarray(quantized_generate(qm, jnp.asarray(prompts), args.gen))
+            ref_label = "quantized recompute"
+        else:
+            ref = np.asarray(greedy_generate(model, params, prompts, args.gen))
+            ref_label = "fp prefill/decode"
+        agree = float(np.mean(engine_toks == ref))
+        print(f"[serve] check vs {ref_label}: token agreement {agree:.2%}")
+        if agree < 1.0:
+            print(f"[serve] FAIL: engine cached decode diverged from the "
+                  f"{ref_label} oracle")
+            return 1
     return 0
 
 

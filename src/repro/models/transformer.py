@@ -24,6 +24,7 @@ __all__ = [
     "init_decoder_cache",
     "decoder_cache_axes",
     "remat_wrap",
+    "unstack_layers",
 ]
 
 
@@ -41,6 +42,14 @@ def _stack(key, n: int, init_one):
     """Initialize ``n`` layers and stack each leaf along axis 0."""
     ps = [init_one(jax.random.fold_in(key, i)) for i in range(n)]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *ps)
+
+
+def unstack_layers(params: dict) -> list[dict]:
+    """Split the scanned ``layers`` stack into per-layer param dicts (the
+    layout block-by-block consumers — quantization, the serving adapter —
+    operate on)."""
+    n = jax.tree.leaves(params["layers"])[0].shape[0]
+    return [jax.tree.map(lambda a: a[i], params["layers"]) for i in range(n)]
 
 
 def _stack_axes(axes: dict) -> dict:

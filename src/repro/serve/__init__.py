@@ -1,0 +1,32 @@
+"""Serving subsystem: continuous batching over paged KV caches.
+
+Pieces (each usable on its own):
+
+  * :mod:`repro.serve.kv_cache`  — slot-based paged KV pool (admit/extend/
+    evict page accounting + gather/scatter device ops);
+  * :mod:`repro.serve.adapter`   — one cached prefill/decode forward over
+    both the fp ``Model`` params and a QuIP ``QuantizedModel`` (packed
+    ``D⁻¹ → V → quant_matmul → Uᵀ`` path, no per-token recompute);
+  * :mod:`repro.serve.scheduler` — request lifecycle + token-budget FCFS
+    scheduling with chunked prefill;
+  * :mod:`repro.serve.engine`    — per-step batch assembly: new requests
+    join the decode batch while others are mid-generation;
+  * :mod:`repro.serve.artifacts` — persistent quantized checkpoints
+    (packed ints + scales + regenerable transform seeds).
+"""
+from repro.serve.adapter import CachedDecoder
+from repro.serve.artifacts import load_quantized, save_quantized
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.kv_cache import PagedKVPool
+from repro.serve.scheduler import Request, TokenBudgetFCFS
+
+__all__ = [
+    "CachedDecoder",
+    "Engine",
+    "EngineConfig",
+    "PagedKVPool",
+    "Request",
+    "TokenBudgetFCFS",
+    "save_quantized",
+    "load_quantized",
+]

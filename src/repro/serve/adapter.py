@@ -1,0 +1,166 @@
+"""Unified cached prefill/decode forward over fp and QuIP-quantized models.
+
+A :class:`CachedDecoder` holds per-layer *blocks*: norm params plus one
+callable per linear projection, keyed exactly like
+``launch.quantize.QuantizedModel.blocks`` ("attn.wq", ..., "mlp.wo").  For
+the fp ``Model`` the callables close over dense params (``layers.apply_w``);
+for a ``QuantizedModel`` they ARE the :class:`QuantizedLinear` layers, so
+every projection runs the packed ``D⁻¹ → V → quant_matmul → Uᵀ`` structured
+path — this replaces the old per-token full-recompute serving loop with a
+real KV-cached decode for quantized weights.
+
+The single forward handles both phases:
+
+  * chunked prefill: ``tokens (1, C)`` attending to previously-written
+    context pages + itself (causal);
+  * batched decode: ``tokens (B, 1)`` with per-lane absolute positions, so
+    sequences of different lengths decode in one batch (continuous
+    batching).
+
+Masking uses the same where-set convention as the quantized recompute path
+so cached logits match it bit-for-bit up to matmul reassociation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.transformer import unstack_layers
+
+__all__ = ["CachedDecoder"]
+
+
+def _linear(p, cfg: ArchConfig, bias=None) -> Callable:
+    if bias is None:
+        return lambda x: L.apply_w(p, x, cfg)
+    return lambda x: L.apply_w(p, x, cfg) + bias
+
+
+def _fp_blocks(params, cfg: ArchConfig) -> list[dict]:
+    blocks = []
+    for lp in unstack_layers(params):
+        at, mp = lp["attn"], lp["mlp"]
+        blk = {
+            "ln1": lp["ln1"],
+            "ln2": lp["ln2"],
+            "attn.wq": _linear(at["wq"], cfg, at.get("bq")),
+            "attn.wk": _linear(at["wk"], cfg, at.get("bk")),
+            "attn.wv": _linear(at["wv"], cfg, at.get("bv")),
+            "attn.wo": _linear(at["wo"], cfg),
+            "mlp.wi": _linear(mp["wi"], cfg, mp.get("bi")),
+            "mlp.wo": _linear(mp["wo"], cfg, mp.get("bo")),
+        }
+        if cfg.mlp == "swiglu":
+            blk["mlp.wg"] = _linear(mp["wg"], cfg)
+        if cfg.qk_norm:
+            blk["q_norm"] = at["q_norm"]
+            blk["k_norm"] = at["k_norm"]
+        blocks.append(blk)
+    return blocks
+
+
+@dataclasses.dataclass
+class CachedDecoder:
+    """KV-cached forward shared by the fp and quantized serving paths."""
+
+    cfg: ArchConfig
+    embed: dict
+    final_norm: dict
+    blocks: list
+
+    def __post_init__(self):
+        if self.cfg.family != "dense":
+            raise ValueError(
+                f"serving adapter supports the dense family, got {self.cfg.family}"
+            )
+        # blocks close over their params -> jit treats them as constants;
+        # one compile per (adapter, tokens/ctx shape) pair.
+        self._fwd = jax.jit(self._forward)
+
+    # ---- constructors ---------------------------------------------------
+
+    @classmethod
+    def from_model(cls, model, params) -> "CachedDecoder":
+        return cls(
+            cfg=model.cfg,
+            embed=params["embed"],
+            final_norm=params["final_norm"],
+            blocks=_fp_blocks(params, model.cfg),
+        )
+
+    @classmethod
+    def from_quantized(cls, qm) -> "CachedDecoder":
+        # QuantizedModel.blocks already has the expected structure, with
+        # QuantizedLinear instances as the projection callables.
+        return cls(
+            cfg=qm.cfg, embed=qm.embed, final_norm=qm.final_norm,
+            blocks=qm.blocks,
+        )
+
+    # ---- forward --------------------------------------------------------
+
+    def __call__(self, tokens, positions, ctx_k, ctx_v, ctx_len):
+        """Cached forward.
+
+        tokens    (B, T) int32 — new tokens (decode: T=1; prefill: B=1);
+        positions (B, T) int32 — absolute position of each new token;
+        ctx_k/v   (L, B, S, KV, hd) — gathered context pages (post-RoPE K);
+        ctx_len   (B,) int32 — valid context tokens per lane.
+
+        Returns (logits (B, T, V), k_new (L, B, T, KV, hd), v_new (same)).
+        """
+        return self._fwd(tokens, positions, ctx_k, ctx_v, ctx_len)
+
+    def _forward(self, tokens, positions, ctx_k, ctx_v, ctx_len):
+        cfg = self.cfg
+        x = L.embed(self.embed, tokens)
+        new_k, new_v = [], []
+        for i, blk in enumerate(self.blocks):
+            x, k, v = self._block(blk, x, positions, ctx_k[i], ctx_v[i], ctx_len)
+            new_k.append(k)
+            new_v.append(v)
+        x = L.norm_apply(self.final_norm, x, cfg)
+        logits = L.lm_logits(self.embed, x)
+        return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+    def _block(self, blk, x, positions, ck, cv, ctx_len):
+        cfg = self.cfg
+        B, T, _ = x.shape
+        S = ck.shape[1]
+        h = L.norm_apply(blk["ln1"], x, cfg)
+        q = blk["attn.wq"](h).reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = blk["attn.wk"](h).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = blk["attn.wv"](h).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, blk["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, blk["k_norm"], cfg.norm_eps)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        k_all = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
+        s = L._gqa_scores(q, k_all, cfg)  # (B, KV, G, T, S+T)
+        # context keys: valid below each lane's ctx_len; new keys: causal
+        # within the chunk (their absolute positions are >= every ctx pos).
+        mask_ctx = jnp.arange(S)[None, None, :] < ctx_len[:, None, None]
+        mask_ctx = jnp.broadcast_to(mask_ctx, (B, T, S))
+        mask_new = jnp.broadcast_to(
+            jnp.tril(jnp.ones((T, T), bool))[None], (B, T, T)
+        )
+        mask = jnp.concatenate([mask_ctx, mask_new], axis=-1)
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        o = L._gqa_out(probs, v_all, cfg)
+        o = o.astype(x.dtype).reshape(B, T, cfg.q_dim)
+        x = x + blk["attn.wo"](o)
+        h = L.norm_apply(blk["ln2"], x, cfg)
+        up = blk["mlp.wi"](h)
+        if cfg.mlp == "swiglu":
+            up = jax.nn.silu(up) * blk["mlp.wg"](h)
+        else:
+            up = jax.nn.gelu(up)
+        return x + blk["mlp.wo"](up), k, v

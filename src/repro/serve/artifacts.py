@@ -1,0 +1,119 @@
+"""Persistent quantized artifacts: quantize once, serve forever.
+
+``save_quantized`` persists a ``QuantizedModel`` through the atomic
+checkpoint store (checkpoint/store.py): packed int32 weights, per-layer
+scales and diagonal rescales, and fp embed/norm params go into npz shards;
+everything regenerable — the incoherence transforms — is stored only as
+(kind, n, seed) metadata in the manifest, alongside the full ``ArchConfig``
+and ``QuipConfig``.  ``load_quantized`` rebuilds the model without touching
+the QuIP pipeline, so ``launch/serve.py --load-quantized <dir>`` starts
+serving packed 2-bit weights with no calibration pass.
+
+Layout::
+
+    <dir>/step_00000000/shard_*.npz + manifest.json
+
+with array keys ``embed/tok``, ``final_norm/scale``,
+``blocks/<i>/<ln1|ln2|q_norm|k_norm>/...`` and
+``blocks/<i>/<linear>/{packed,s,D}``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.checkpoint.store import load_arrays, save_checkpoint
+from repro.configs.base import ArchConfig
+from repro.core.quantizer import (
+    QuantizedLinear,
+    QuipConfig,
+    linear_from_arrays,
+    linear_to_arrays,
+)
+
+__all__ = ["save_quantized", "load_quantized", "ARTIFACT_FORMAT"]
+
+ARTIFACT_FORMAT = 1
+_NORM_KEYS = ("ln1", "ln2", "q_norm", "k_norm")
+
+
+def save_quantized(
+    directory, qm, qcfg: QuipConfig, *, extra_meta: Optional[dict] = None
+) -> pathlib.Path:
+    """Persist a ``launch.quantize.QuantizedModel`` (+ its QuipConfig)."""
+    blocks = []
+    linear_meta: dict[str, dict] = {}
+    for i, blk in enumerate(qm.blocks):
+        bt: dict = {}
+        for name, val in blk.items():
+            if isinstance(val, QuantizedLinear):
+                arrays, meta = linear_to_arrays(val)
+                bt[name] = arrays
+                linear_meta[f"{i}/{name}"] = meta
+            else:
+                bt[name] = val
+        blocks.append(bt)
+    tree = {"embed": qm.embed, "final_norm": qm.final_norm, "blocks": blocks}
+    meta = {
+        "kind": "quip_quantized_model",
+        "format": ARTIFACT_FORMAT,
+        "arch_config": dataclasses.asdict(qm.cfg),
+        "quip_config": dataclasses.asdict(qcfg),
+        "n_blocks": len(qm.blocks),
+        "linears": linear_meta,
+        **(extra_meta or {}),
+    }
+    return save_checkpoint(directory, 0, tree, extra_meta=meta)
+
+
+def load_quantized(directory):
+    """-> (QuantizedModel, meta).  No re-quantization: packed weights load
+    directly and transforms regenerate from their stored seeds."""
+    from repro.launch.quantize import QuantizedModel  # deferred: avoid cycle
+
+    arrays, _step, meta = load_arrays(directory)
+    if meta.get("kind") != "quip_quantized_model":
+        raise ValueError(
+            f"{directory} is not a quantized artifact "
+            f"(manifest kind={meta.get('kind')!r})"
+        )
+    cfg_dict = dict(meta["arch_config"])
+    cfg_dict["shape_skips"] = tuple(cfg_dict.get("shape_skips", ()))  # json list
+    cfg = ArchConfig(**cfg_dict)
+
+    def subtree(prefix: str) -> dict:
+        out: dict = {}
+        plen = len(prefix)
+        for key, arr in arrays.items():
+            if key.startswith(prefix):
+                out[key[plen:]] = jnp.asarray(arr)
+        return out
+
+    blocks = []
+    for i in range(meta["n_blocks"]):
+        blk: dict = {}
+        for norm in _NORM_KEYS:
+            sub = subtree(f"blocks/{i}/{norm}/")
+            if sub:
+                blk[norm] = sub
+            elif f"blocks/{i}/{norm}" in arrays:  # bare array (q/k_norm)
+                blk[norm] = jnp.asarray(arrays[f"blocks/{i}/{norm}"])
+        for lkey, lmeta in meta["linears"].items():
+            idx, name = lkey.split("/", 1)
+            if int(idx) != i:
+                continue
+            blk[name] = linear_from_arrays(
+                subtree(f"blocks/{i}/{name}/"), lmeta
+            )
+        blocks.append(blk)
+    qm = QuantizedModel(
+        cfg=cfg,
+        embed=subtree("embed/"),
+        final_norm=subtree("final_norm/"),
+        blocks=blocks,
+        stats=meta.get("stats", []),
+    )
+    return qm, meta

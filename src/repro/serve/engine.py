@@ -1,0 +1,280 @@
+"""Continuous-batching engine: per-step batch assembly over paged KV.
+
+Each :meth:`Engine.step`:
+
+  1. moves arrived requests into the FCFS queue;
+  2. plans the step under the token budget (decode-prioritized, chunked
+     prefill with leftover budget; admission claims pages);
+  3. ensures every decode lane has a page for its next token, evicting the
+     newest running sequence under page pressure (evicted requests requeue
+     and later re-prefill their prompt + generated prefix);
+  4. executes prefill chunks (B=1, fixed chunk width) and one batched
+     decode forward (fixed ``n_slots`` lanes, per-lane positions), writing
+     new K/V into the pool and appending greedy tokens.
+
+All device calls are shape-static: one compile for decode, one for
+prefill, one each for gather/scatter — new requests join mid-flight
+without recompilation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.adapter import CachedDecoder
+from repro.serve.kv_cache import PagedKVPool, pages_needed
+from repro.serve.scheduler import (
+    Request,
+    RequestState,
+    StepPlan,
+    TokenBudgetFCFS,
+)
+
+__all__ = ["Engine", "EngineConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_seq_len: int  # per-sequence token capacity (prompt + generation)
+    n_slots: int = 8  # concurrent resident sequences (decode lanes)
+    page_size: int = 16
+    n_pages: Optional[int] = None  # default: no overcommit (+1 scratch)
+    token_budget: int = 64  # tokens processed per step
+    prefill_chunk: int = 32
+    record_logits: bool = False  # keep per-emission logits (tests/--check)
+
+    @property
+    def pages_per_seq(self) -> int:
+        return pages_needed(self.max_seq_len, self.page_size)
+
+    def total_pages(self) -> int:
+        if self.n_pages is not None:
+            return self.n_pages
+        return self.n_slots * self.pages_per_seq + 1
+
+
+class Engine:
+    def __init__(self, adapter: CachedDecoder, ecfg: EngineConfig, dtype=None):
+        self.adapter = adapter
+        self.ecfg = ecfg
+        self.pool = PagedKVPool(
+            adapter.cfg,
+            n_pages=ecfg.total_pages(),
+            page_size=ecfg.page_size,
+            n_slots=ecfg.n_slots,
+            max_pages_per_seq=ecfg.pages_per_seq,
+            dtype=dtype,
+        )
+        self.scheduler = TokenBudgetFCFS(
+            token_budget=ecfg.token_budget, prefill_chunk=ecfg.prefill_chunk
+        )
+        self.running: list[Request] = []
+        self.finished: list[Request] = []
+        self.stats = {
+            "steps": 0,
+            "decode_tokens": 0,
+            "prefill_tokens": 0,
+            "evictions": 0,
+        }
+        self._t0: Optional[float] = None
+
+    # ---- submission -----------------------------------------------------
+
+    def submit(
+        self, prompt: np.ndarray, max_new: int, arrival: float = 0.0
+    ) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError("empty prompt")
+        if not self.pool.fits(prompt.size + max_new):
+            raise ValueError(
+                f"request needs {prompt.size + max_new} tokens; pool capacity "
+                f"is {self.pool.seq_capacity_tokens()} per sequence / "
+                f"{self.pool.n_pages - 1} pages total"
+            )
+        req = Request(prompt=prompt, max_new=max_new, arrival=arrival)
+        self.scheduler.submit(req)
+        return req
+
+    # ---- main loop ------------------------------------------------------
+
+    def now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        return time.perf_counter() - self._t0
+
+    def reset_clock(self) -> None:
+        """Restart the engine-relative clock (e.g. after a warm-up run, so
+        arrival offsets of a measured workload start from zero)."""
+        self._t0 = None
+
+    def reset_stats(self) -> None:
+        """Zero the cumulative counters (pairs with reset_clock after a
+        warm-up run, so reported stats cover only the measured workload)."""
+        self.stats = {k: 0 for k in self.stats}
+        self.pool.peak_pages_in_use = self.pool.pages_in_use
+
+    def run(self, max_steps: Optional[int] = None) -> list[Request]:
+        """Drive until every submitted request is finished.
+
+        ``max_steps`` bounds steps that DID work (a runaway-loop backstop);
+        idle iterations waiting on future arrivals don't consume it — an
+        open-loop workload may spend arbitrarily long between arrivals.
+        """
+        todo = self.scheduler.pending + len(self.running)
+        budget_tokens = sum(
+            r.max_new + len(r.prefix)
+            for r in (*self.scheduler.waiting, *self.scheduler.queue, *self.running)
+        )
+        max_steps = max_steps or 1000 + 20 * budget_tokens
+        done0 = len(self.finished)
+        worked_steps = stalls = 0
+        while self.scheduler.pending or self.running:
+            if self.step():
+                worked_steps, stalls = worked_steps + 1, 0
+                if worked_steps > max_steps:
+                    raise RuntimeError(
+                        f"engine did not drain in {max_steps} working steps"
+                    )
+            elif self.scheduler.waiting:
+                # idle until the next virtual arrival
+                time.sleep(max(
+                    0.0, min(0.01, self.scheduler.waiting[0].arrival - self.now())
+                ))
+            else:
+                stalls += 1  # arrived work exists but nothing progressed
+                if stalls > 10_000:
+                    raise RuntimeError(
+                        "engine stalled: pending requests but no step "
+                        "makes progress (pool misconfigured?)"
+                    )
+        assert len(self.finished) - done0 == todo
+        return self.finished[done0:]
+
+    def step(self) -> bool:
+        """One engine step; returns whether any token work was done."""
+        now = self.now()
+        self.scheduler.admit_arrivals(now)
+        plan = self.scheduler.plan(self.running, self.pool)
+        decode = self._ensure_decode_pages(plan)
+        worked = False
+        for req, n in plan.prefill:
+            if req.state is not RequestState.PREFILL:
+                continue  # evicted by the page-ensure pass above
+            self._run_prefill_chunk(req, n, now)
+            worked = True
+        if decode:
+            self._run_decode(decode, now)
+            worked = True
+        self.stats["steps"] += 1
+        return worked
+
+    # ---- internals ------------------------------------------------------
+
+    def _evict(self, victim: Request) -> None:
+        self.pool.release(victim.slot)
+        self.running.remove(victim)
+        self.scheduler.requeue(victim)
+        self.stats["evictions"] += 1
+
+    def _ensure_decode_pages(self, plan: StepPlan) -> list[Request]:
+        """Claim a page for each decode lane's next token, evicting under
+        pressure.  Lanes are served oldest-first and the victim is always
+        the NEWEST running request — possibly the asking lane itself —
+        so requests already granted pages this step are never clawed back
+        (strict-FCFS preemption)."""
+        active = []
+        for r in sorted(plan.decode, key=lambda r: (r.arrival, r.rid)):
+            if r.state is not RequestState.DECODE:
+                continue  # already evicted as someone else's victim
+            while not self.pool.extend(r.slot, self.pool.length(r.slot) + 1):
+                victim = max(self.running, key=lambda q: (q.arrival, q.rid))
+                self._evict(victim)
+                if victim is r:
+                    break
+            else:
+                active.append(r)
+        return active
+
+    def _finish(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        self.pool.release(req.slot)
+        req.slot = None
+        self.running.remove(req)
+        self.finished.append(req)
+
+    def _run_prefill_chunk(self, req: Request, n: int, now: float) -> None:
+        prefix = req.prefix
+        start = req.prefill_pos
+        C = self.ecfg.prefill_chunk
+        chunk = np.zeros((1, C), np.int32)
+        chunk[0, :n] = prefix[start : start + n]
+        positions = (np.arange(C, dtype=np.int32) + start)[None]
+        ctx_k, ctx_v = self.pool.gather([req.slot])
+        logits, k_new, v_new = self.adapter(
+            jnp.asarray(chunk),
+            jnp.asarray(positions),
+            ctx_k,
+            ctx_v,
+            jnp.asarray([start], jnp.int32),
+        )
+        self.pool.write_span(req.slot, start, n, k_new[:, 0], v_new[:, 0])
+        req.prefill_pos = start + n
+        self.stats["prefill_tokens"] += n
+        if req.prefill_pos == len(prefix):
+            req.state = RequestState.DECODE
+            last = np.asarray(logits[0, n - 1])
+            req.emit(
+                int(np.argmax(last)), now,
+                last if self.ecfg.record_logits else None,
+            )
+            if req.done:
+                self._finish(req)
+
+    def _run_decode(self, decode: list[Request], now: float) -> None:
+        B = self.ecfg.n_slots
+        assert len(decode) <= B
+        slots: list[Optional[int]] = [None] * B
+        tokens = np.zeros((B, 1), np.int32)
+        positions = np.zeros((B, 1), np.int32)
+        ctx_len = np.zeros((B,), np.int32)
+        for b, r in enumerate(decode):
+            slots[b] = r.slot
+            tokens[b, 0] = r.out_tokens[-1]
+            ctx_len[b] = self.pool.length(r.slot)
+            positions[b, 0] = ctx_len[b]
+        ctx_k, ctx_v = self.pool.gather(slots)
+        logits, k_new, v_new = self.adapter(
+            jnp.asarray(tokens),
+            jnp.asarray(positions),
+            ctx_k,
+            ctx_v,
+            jnp.asarray(ctx_len),
+        )
+        self.pool.write(
+            slots, [int(p) for p in positions[:, 0]], k_new[:, :, 0], v_new[:, :, 0]
+        )
+        logits_np = np.asarray(logits[:, 0])
+        for b, r in enumerate(decode):
+            r.emit(
+                int(np.argmax(logits_np[b])), now,
+                logits_np[b] if self.ecfg.record_logits else None,
+            )
+            self.stats["decode_tokens"] += 1
+            if r.done:
+                self._finish(r)
+
+    # ---- reporting ------------------------------------------------------
+
+    def summary(self) -> dict:
+        return {
+            **self.stats,
+            "peak_pages_in_use": self.pool.peak_pages_in_use,
+            "peak_occupancy": self.pool.peak_pages_in_use
+            / max(1, self.pool.n_pages - 1),
+            "finished": len(self.finished),
+        }

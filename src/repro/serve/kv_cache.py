@@ -1,0 +1,212 @@
+"""Slot-based paged KV-cache pool (vLLM-style, pure JAX).
+
+Physical storage is one tensor per K/V of shape
+
+    (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+
+and each admitted sequence owns a *slot*: a row of a block table mapping
+logical page index -> physical page.  Pages are claimed lazily as the
+sequence grows (``extend``) and returned on ``release``, so the pool can
+overcommit: ``n_slots * max_pages_per_seq`` may exceed ``n_pages``.  The
+engine resolves page exhaustion by evicting a victim sequence.
+
+Physical page 0 is reserved as a scratch page: padded batch lanes and
+padded prefill tokens scatter their (ignored) writes there, which keeps
+every device op shape-static — one compile for gather, one for scatter.
+
+Keys are stored post-RoPE, matching ``models.layers.cache_store``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+__all__ = ["PagedKVPool", "pages_needed"]
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter(phys: jax.Array, pages: jax.Array, offs: jax.Array,
+             vals: jax.Array) -> jax.Array:
+    """phys (L, P, ps, KV, hd); pages/offs (T,); vals (L, T, KV, hd)."""
+    return phys.at[:, pages, offs].set(vals)
+
+
+@jax.jit
+def _gather(phys: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """phys (L, P, ps, KV, hd), block_tables (B, Pmax) ->
+    (L, B, Pmax*ps, KV, hd) contiguous per-sequence windows."""
+    g = phys[:, block_tables]  # (L, B, Pmax, ps, KV, hd)
+    L, B = g.shape[0], g.shape[1]
+    return g.reshape(L, B, -1, *phys.shape[-2:])
+
+
+@dataclasses.dataclass
+class _Slot:
+    pages: list  # physical page ids, logical order
+    length: int  # valid tokens written
+
+
+class PagedKVPool:
+    """Page accounting (host) + paged K/V storage (device).
+
+    ``admit(n_tokens)`` -> slot id or None (not enough free pages/slots);
+    ``extend(slot, new_len)`` -> bool (claims pages to cover ``new_len``);
+    ``release(slot)`` returns all pages.  ``gather``/``write`` move data.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        n_pages: int,
+        page_size: int,
+        n_slots: int,
+        max_pages_per_seq: int,
+        dtype=None,
+    ):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
+        self.cfg = cfg
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.n_slots = n_slots
+        self.max_pages_per_seq = max_pages_per_seq
+        dt = dtype or jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        self._free_pages = list(range(n_pages - 1, 0, -1))  # pop() -> low ids
+        self._free_slots = list(range(n_slots - 1, -1, -1))
+        self._slots: dict[int, _Slot] = {}
+        self.peak_pages_in_use = 0
+
+    # ---- accounting -----------------------------------------------------
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free_pages)
+
+    @property
+    def occupancy(self) -> float:
+        return self.pages_in_use / (self.n_pages - 1)
+
+    def seq_capacity_tokens(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+    def fits(self, n_tokens: int) -> bool:
+        """Whether a sequence of n_tokens can EVER be resident."""
+        return (
+            n_tokens <= self.seq_capacity_tokens()
+            and pages_needed(n_tokens, self.page_size) <= self.n_pages - 1
+        )
+
+    def admit(self, n_tokens: int) -> Optional[int]:
+        need = max(1, pages_needed(n_tokens, self.page_size))
+        if not self._free_slots or need > len(self._free_pages):
+            return None
+        if need > self.max_pages_per_seq:
+            return None
+        slot = self._free_slots.pop()
+        self._slots[slot] = _Slot(
+            pages=[self._free_pages.pop() for _ in range(need)], length=0
+        )
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return slot
+
+    def extend(self, slot: int, new_len: int) -> bool:
+        """Claim pages so the slot can hold ``new_len`` tokens."""
+        st = self._slots[slot]
+        need = pages_needed(new_len, self.page_size) - len(st.pages)
+        if need <= 0:
+            return True
+        if (
+            need > len(self._free_pages)
+            or len(st.pages) + need > self.max_pages_per_seq
+        ):
+            return False
+        for _ in range(need):
+            st.pages.append(self._free_pages.pop())
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return True
+
+    def release(self, slot: int) -> None:
+        st = self._slots.pop(slot)
+        self._free_pages.extend(st.pages)
+        self._free_slots.append(slot)
+
+    def length(self, slot: int) -> int:
+        return self._slots[slot].length
+
+    # ---- device ops -----------------------------------------------------
+
+    def block_table(self, slot_ids: list[Optional[int]]) -> np.ndarray:
+        """(B, max_pages_per_seq) int32; missing slots/pages -> scratch 0."""
+        bt = np.zeros((len(slot_ids), self.max_pages_per_seq), np.int32)
+        for b, s in enumerate(slot_ids):
+            if s is None:
+                continue
+            pages = self._slots[s].pages
+            bt[b, : len(pages)] = pages
+        return bt
+
+    def gather(self, slot_ids: list[Optional[int]]):
+        """-> (k, v) each (L, B, max_pages_per_seq*page_size, KV, hd)."""
+        bt = jnp.asarray(self.block_table(slot_ids))
+        return _gather(self.k, bt), _gather(self.v, bt)
+
+    def _addr(self, slot: Optional[int], pos: int) -> tuple[int, int]:
+        if slot is None:
+            return 0, 0  # scratch
+        st = self._slots[slot]
+        page = st.pages[pos // self.page_size]
+        return page, pos % self.page_size
+
+    def write(
+        self,
+        slot_ids: list[Optional[int]],
+        positions: list[int],
+        k_new: jax.Array,
+        v_new: jax.Array,
+    ) -> None:
+        """Scatter one token per lane: k_new/v_new (L, B, KV, hd).
+
+        Lane b writes at absolute position ``positions[b]`` of slot
+        ``slot_ids[b]``; ``None`` lanes go to the scratch page.  Also
+        advances each written slot's valid length to ``positions[b]+1``.
+        """
+        pages = np.zeros(len(slot_ids), np.int32)
+        offs = np.zeros(len(slot_ids), np.int32)
+        for b, (s, p) in enumerate(zip(slot_ids, positions)):
+            pages[b], offs[b] = self._addr(s, p)
+        self.k = _scatter(self.k, jnp.asarray(pages), jnp.asarray(offs), k_new)
+        self.v = _scatter(self.v, jnp.asarray(pages), jnp.asarray(offs), v_new)
+        for s, p in zip(slot_ids, positions):
+            if s is not None:
+                self._slots[s].length = max(self._slots[s].length, p + 1)
+
+    def write_span(
+        self, slot: int, start: int, n_valid: int, k_new: jax.Array,
+        v_new: jax.Array,
+    ) -> None:
+        """Scatter a prefill chunk: k_new/v_new (L, T, KV, hd); the first
+        ``n_valid`` tokens land at positions start..start+n_valid-1, the
+        padded tail goes to the scratch page."""
+        T = k_new.shape[1]
+        pages = np.zeros(T, np.int32)
+        offs = np.zeros(T, np.int32)
+        for t in range(n_valid):
+            pages[t], offs[t] = self._addr(slot, start + t)
+        self.k = _scatter(self.k, jnp.asarray(pages), jnp.asarray(offs), k_new)
+        self.v = _scatter(self.v, jnp.asarray(pages), jnp.asarray(offs), v_new)
+        self._slots[slot].length = max(self._slots[slot].length, start + n_valid)

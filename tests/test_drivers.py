@@ -61,8 +61,28 @@ def test_quantize_driver_2bit_close_to_fp(tmp_path):
 
 @pytest.mark.slow
 def test_serve_driver_quantized_generation():
+    """In-process quantize -> engine serve; --check verifies the cached
+    decode against the recompute oracle (rc != 0 on divergence)."""
     rc = sv.main([
-        "--arch", "qwen3-14b", "--smoke", "--batch", "2",
+        "--arch", "qwen3-14b", "--smoke", "--requests", "2",
         "--prompt-len", "16", "--gen", "4", "--quantize", "--bits", "4",
+        "--check",
+    ])
+    assert rc == 0
+
+
+@pytest.mark.slow
+def test_quantize_artifact_then_serve(tmp_path):
+    """quantize --out-dir -> serve --load-quantized, no re-quantization."""
+    rc = qz.main([
+        "--arch", "qwen3-14b", "--smoke", "--bits", "2",
+        "--calib-segments", "4", "--calib-len", "32",
+        "--out-dir", str(tmp_path / "art"),
+    ])
+    assert rc == 0
+    rc = sv.main([
+        "--arch", "qwen3-14b", "--smoke", "--requests", "4",
+        "--prompt-len", "16", "--gen", "4",
+        "--load-quantized", str(tmp_path / "art"), "--check",
     ])
     assert rc == 0

@@ -8,6 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 from conftest import make_hessian, make_weights
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import incoherence as inc

@@ -64,11 +64,11 @@ def _same_structure(tree_a, axes_tree) -> bool:
 
     paths_a = {
         tuple(str(p) for p in path)
-        for path, _ in jax.tree.flatten_with_path(tree_a)[0]
+        for path, _ in jax.tree_util.tree_flatten_with_path(tree_a)[0]
     }
     paths_b = {
         tuple(str(p) for p in path)
-        for path, _ in jax.tree.flatten_with_path(
+        for path, _ in jax.tree_util.tree_flatten_with_path(
             axes_tree, is_leaf=is_axes
         )[0]
     }
@@ -104,9 +104,9 @@ def test_axes_rank_matches_param_rank(arch):
             isinstance(e, (str, type(None))) for e in v
         )
 
-    flat_p = jax.tree.flatten_with_path(aparams)[0]
+    flat_p = jax.tree_util.tree_flatten_with_path(aparams)[0]
     flat_a = {tuple(str(q) for q in path): ax
-              for path, ax in jax.tree.flatten_with_path(axes, is_leaf=is_axes)[0]}
+              for path, ax in jax.tree_util.tree_flatten_with_path(axes, is_leaf=is_axes)[0]}
     for path, leaf in flat_p:
         key = tuple(str(q) for q in path)
         assert len(flat_a[key]) == leaf.ndim, (arch, key, flat_a[key], leaf.shape)
