@@ -6,7 +6,10 @@ Synthetic open-loop workload: request arrival times are drawn from a
 Poisson process (``--rate`` req/s), prompt lengths jittered around
 ``--prompt-len``.  Reports throughput (tok/s), time-to-first-token and
 inter-token latency percentiles (p50/p99), and peak KV-page occupancy —
-the numbers that matter for a continuous-batching deployment.
+the numbers that matter for a continuous-batching deployment.  The record
+is written to ``BENCH_serving.json`` (``--out``) so perf regressions are
+visible PR-over-PR.  ``--paged`` decodes in place over the page pool
+(paged-attention path); ``--kv-int8`` stores int8 KV pages.
 """
 from __future__ import annotations
 
@@ -46,8 +49,13 @@ def main(argv=None):
     ap.add_argument("--pages", type=int, default=None)
     ap.add_argument("--token-budget", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode in place over the page pool (no per-step "
+                         "dense KV gather)")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV pages with per-(token, head) scales")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default=None)
+    ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch)
@@ -83,6 +91,8 @@ def main(argv=None):
         n_pages=args.pages,
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
+        paged_decode=args.paged,
+        kv_int8=args.kv_int8,
     ))
     # warm the jit caches so compile time doesn't pollute latency stats
     warm = engine.submit(np.asarray(prompts[0]), max_new=2, arrival=0.0)
@@ -113,6 +123,8 @@ def main(argv=None):
     rec = {
         "label": ("quip-%db" % args.bits) if args.quantize else "fp",
         "arch": cfg.name,
+        "decode_path": "paged" if args.paged else "gather-dense",
+        "kv_pages": "int8" if args.kv_int8 else "fp",
         "requests": args.requests,
         "rate_req_s": args.rate,
         "wall_s": round(wall, 3),

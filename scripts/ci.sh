@@ -15,8 +15,12 @@ python -c 'import hypothesis' 2>/dev/null \
 
 if [ "${CI_FAST:-0}" = "1" ]; then
   python -m pytest -q -m "not slow"
+  # paged-attention kernel parity (interpret mode) must run even if the
+  # trimmed selection above ever stops covering it — the fast path can't
+  # be allowed to silently drift from the gather-dense oracle
+  python -m pytest -q tests/test_paged_attention.py
 else
-  python -m pytest -q
+  python -m pytest -q   # includes tests/test_paged_attention.py
 fi
 
 # end-to-end serving: fp engine, in-process quantize, and the persistent
@@ -36,6 +40,21 @@ python -m repro.launch.quantize --arch qwen3-14b --smoke --bits 2 \
 python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" --check
 
-PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8
+# paged fast path: token-identical to the oracle for fp, quantized-artifact,
+# and int8-KV serving
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" \
+  --paged --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --kv-int8 --check
+
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
+  --paged --out "$tmp/BENCH_serving.json"
+PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
+  --out "$tmp/BENCH_decode.json"
 
 echo "[ci] OK"

@@ -75,17 +75,28 @@ class QuantizedLinear:
         Wq = packing.unpack(self.packed, self.bits, self.n).astype(jnp.float32)
         return inc.incoherence_postprocess(Wq, self.state)
 
-    def __call__(self, x: jax.Array) -> jax.Array:
-        """y = x @ W_eff^T with x (..., n) — structured inference path."""
+    def __call__(
+        self, x: jax.Array, *, use_kernel: Optional[bool] = None
+    ) -> jax.Array:
+        """y = x @ W_eff^T with x (..., n) — structured inference path.
+
+        ``use_kernel`` overrides the layer default for this call: the
+        serving engine's paged decode passes ``True`` so every projection
+        dispatches through the Pallas ``quant_matmul`` path (jnp oracle
+        off-TPU) regardless of how the layer was built.
+        """
         st = self.state
         h = x if st.D is None else x / st.D
         h = inc.apply_transform(st.V, h)
-        z = self._matmul(h)
+        z = self._matmul(h, use_kernel=use_kernel)
         return inc.apply_transform(st.U, z, inverse=True)
 
-    def _matmul(self, h: jax.Array) -> jax.Array:
+    def _matmul(
+        self, h: jax.Array, use_kernel: Optional[bool] = None
+    ) -> jax.Array:
         """z = h @ deq(Wq)^T, deq(q) = (2s/maxq)·q − s."""
-        if self.use_kernel:
+        uk = self.use_kernel if use_kernel is None else use_kernel
+        if uk:
             from repro.kernels.quant_matmul import ops as qmm
 
             return qmm.quant_matmul(

@@ -1,9 +1,11 @@
 """Pallas TPU kernels for QuIP's compute hot spots.
 
-quant_matmul/  packed 2/3/4-bit weight x activation matmul (W2A16 serving)
-kron_mul/      fused (A ⊗ B) x incoherence transform (two MXU dots)
-hadamard/      randomized Hadamard transform as kron-decomposed MXU dots
-ldlq/          in-block sequential LDLQ rounding, gridded over row blocks
+quant_matmul/     packed 2/3/4-bit weight x activation matmul (W2A16 serving)
+kron_mul/         fused (A ⊗ B) x incoherence transform (two MXU dots)
+hadamard/         randomized Hadamard transform as kron-decomposed MXU dots
+ldlq/             in-block sequential LDLQ rounding, gridded over row blocks
+paged_attention/  GQA decode attention in place over the paged KV pool
+                  (scalar-prefetch block tables, online softmax, int8 pages)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 public wrapper w/ padding + CPU fallback), ref.py (pure-jnp oracle used by

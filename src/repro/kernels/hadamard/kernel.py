@@ -27,7 +27,8 @@ from repro.kernels.compat import CompilerParams
 
 def sylvester(n: int) -> np.ndarray:
     """Unnormalized H_n (n a power of two) via Sylvester's construction."""
-    assert n & (n - 1) == 0, n
+    if n <= 0 or n & (n - 1):
+        raise ValueError(f"Hadamard order must be a power of two, got {n}")
     H = np.ones((1, 1), np.float32)
     while H.shape[0] < n:
         H = np.block([[H, H], [H, -H]])
@@ -64,7 +65,14 @@ def hadamard_kernel(
 ) -> jax.Array:
     """x: (N, a*b); signs: (a*b,); H factors unnormalized Sylvester."""
     N, n = x.shape
-    assert n == a * b and N % bB == 0
+    if n != a * b:
+        raise ValueError(
+            f"x feature dim {n} != a*b = {a}*{b} = {a * b}"
+        )
+    if N % bB:
+        raise ValueError(
+            f"row count N={N} must be a multiple of the batch tile bB={bB}"
+        )
     return pl.pallas_call(
         functools.partial(_had_kernel, a=a, b=b),
         grid=(N // bB,),

@@ -23,7 +23,10 @@ def on_tpu() -> bool:
 @functools.lru_cache(maxsize=32)
 def _factors(n: int) -> tuple[int, int]:
     """Split n = a*b (powers of two) with b <= 128 lane-aligned."""
-    assert n & (n - 1) == 0 and n >= 2, n
+    if n < 2 or n & (n - 1):
+        raise ValueError(
+            f"Hadamard transform dim must be a power of two >= 2, got {n}"
+        )
     b = min(n, 128)
     return n // b, b
 

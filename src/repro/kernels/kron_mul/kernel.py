@@ -58,7 +58,14 @@ def kron_mul_kernel(
 ) -> jax.Array:
     """x: (N, p*q); A: (p, p); B: (q, q) -> (N, p*q).  N % bB == 0."""
     N, n = x.shape
-    assert n == p * q and N % bB == 0, (N, n, p, q, bB)
+    if n != p * q:
+        raise ValueError(
+            f"x feature dim {n} != p*q = {p}*{q} = {p * q}"
+        )
+    if N % bB:
+        raise ValueError(
+            f"row count N={N} must be a multiple of the batch tile bB={bB}"
+        )
     grid = (N // bB,)
     return pl.pallas_call(
         functools.partial(_kron_kernel, p=p, q=q),

@@ -64,7 +64,14 @@ def ldlq_block_kernel(
 
     Returns (Q, E): quantized block and its true error (W_block - Q)."""
     M, n = Wb.shape
-    assert n == nb and M % bM == 0, (Wb.shape, nb, bM)
+    if n != nb:
+        raise ValueError(
+            f"W block has {n} columns but the kernel was asked for nb={nb}"
+        )
+    if M % bM:
+        raise ValueError(
+            f"row count M={M} must be a multiple of the row tile bM={bM}"
+        )
     grid = (M // bM,)
     return pl.pallas_call(
         functools.partial(_ldlq_kernel, nb=nb, maxq=maxq),

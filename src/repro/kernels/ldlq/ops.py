@@ -39,7 +39,11 @@ def ldlq_pallas(
     if not (on_tpu() or interpret or force_kernel):
         return ldlq_blocked(W, Udot, maxq, block=min(block, W.shape[1]))
     m, n = W.shape
-    assert n % block == 0, (n, block)
+    if n % block:
+        raise ValueError(
+            f"W column count n={n} must be a multiple of the LDLQ block "
+            f"size {block}"
+        )
     nb = n // block
     bM = min(256, _ceil_to(m, 8))
     Mp = _ceil_to(m, bM)

@@ -1,0 +1,9 @@
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ops import paged_gqa_decode
+from repro.kernels.paged_attention.ref import paged_gqa_decode_ref
+
+__all__ = [
+    "paged_attention_kernel",
+    "paged_gqa_decode",
+    "paged_gqa_decode_ref",
+]

@@ -1,0 +1,207 @@
+"""Pallas TPU kernel: GQA decode attention directly against the paged KV pool.
+
+The serving engine used to materialize a dense ``(L, B, Pmax*ps, KV, hd)``
+copy of every context page per decode step (``PagedKVPool.gather``) — an
+O(allocated-pages) HBM copy per emitted token that un-does the bandwidth win
+2-bit weights buy (DESIGN.md §7).  This kernel reads the **physical page
+pool in place**:
+
+* the grid is ``(lane, kv_head, page)`` with the page dimension innermost
+  ("arbitrary"), so the fp32 output tile is revisited as an online-softmax
+  accumulator (running max ``m``, normalizer ``l``, unnormalized ``o``);
+* per-lane **block tables** and **context lengths** ride in scalar-prefetch
+  (SMEM) — the k/v BlockSpec index maps dereference ``bt[lane, page]`` to
+  DMA exactly one physical page ``(ps, hd)`` slice per kv head per step.
+  Pages past ``ctx_len`` resolve to the scratch page and are masked out;
+* the layer index is baked into the index map, so the kernel addresses the
+  full ``(L, P, ps, KV, hd)`` pool tensor without an XLA slice copy;
+* int8 pages carry per-(token, head) fp32 scales (``(L, P, ps, KV)``),
+  dequantized on the VPU right after the DMA — KV reads stay 1 byte/elem.
+
+The new token's own K/V never touches the pool here: the wrapper (ops.py)
+folds the self-attention term into the accumulator analytically and
+normalizes, so decode needs no concat and no pre-scatter.  Outputs are the
+*unnormalized* accumulator plus ``(m, l)`` statistics for that merge.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+
+_NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _pa_kernel(
+    bt_ref,  # (B, Pa) int32 scalar-prefetch block table
+    cl_ref,  # (B,)    int32 scalar-prefetch context lengths
+    q_ref,  # (1, 1, G, hd)
+    k_ref,  # (1, 1, ps, 1, hd)
+    v_ref,  # (1, 1, ps, 1, hd)
+    *refs,  # [ks_ref (1,1,ps,1), vs_ref (1,1,ps,1)], o_ref, m_ref, l_ref
+    page_size: int,
+    int8_pages: bool,
+):
+    if int8_pages:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = refs
+    else:
+        o_ref, m_ref, l_ref = refs
+    b, p = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, hd)
+    k = k_ref[0, 0, :, 0].astype(jnp.float32)  # (ps, hd)
+    v = v_ref[0, 0, :, 0].astype(jnp.float32)
+    if int8_pages:
+        k = k * ks_ref[0, 0, :, 0][:, None]
+        v = v * vs_ref[0, 0, :, 0][:, None]
+    hd = q.shape[-1]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (hd**-0.5)  # (G, ps)
+
+    # positions covered by this physical page; everything at or past the
+    # lane's ctx_len (incl. whole pages resolved to the scratch page) is
+    # masked.  pmat is gated explicitly so a fully-masked page contributes
+    # exactly zero (exp(NEG - NEG) == 1 would poison the accumulator).
+    pos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1
+    )
+    valid = pos < cl_ref[b]  # (1, ps), broadcasts over G
+    s = jnp.where(valid, s, _NEG)
+    m_prev = m_ref[0, 0]  # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pmat = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (G, ps)
+    l_ref[0, 0] = alpha * l_ref[0, 0] + jnp.sum(pmat, -1, keepdims=True)
+    o_ref[0, 0] = o_ref[0, 0] * alpha + jax.lax.dot_general(
+        pmat, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0, 0] = m_new
+
+
+def _check_operands(q, k_pages, v_pages, block_tables, ctx_len, layer,
+                    k_scale, v_scale):
+    if q.ndim != 4:
+        raise ValueError(
+            f"q must be (B, KV, G, hd) grouped queries, got shape {q.shape}"
+        )
+    B, KV, G, hd = q.shape
+    if k_pages.ndim != 5 or v_pages.shape != k_pages.shape:
+        raise ValueError(
+            "k_pages/v_pages must both be (L, n_pages, page_size, KV, hd); "
+            f"got k_pages {k_pages.shape}, v_pages {v_pages.shape}"
+        )
+    L, P, ps, KVp, hdp = k_pages.shape
+    if (KVp, hdp) != (KV, hd):
+        raise ValueError(
+            f"page pool carries (KV={KVp}, hd={hdp}) but queries expect "
+            f"(KV={KV}, hd={hd})"
+        )
+    if not 0 <= layer < L:
+        raise ValueError(f"layer {layer} out of range for {L}-layer pool")
+    if block_tables.ndim != 2 or block_tables.shape[0] != B:
+        raise ValueError(
+            f"block_tables must be (B={B}, pages_attended), got "
+            f"{block_tables.shape}"
+        )
+    if ctx_len.shape != (B,):
+        raise ValueError(f"ctx_len must be (B={B},), got {ctx_len.shape}")
+    int8_pages = k_pages.dtype == jnp.int8
+    if int8_pages:
+        if k_scale is None or v_scale is None:
+            raise ValueError("int8 pages require k_scale and v_scale")
+        if k_scale.shape != (L, P, ps, KV) or v_scale.shape != (L, P, ps, KV):
+            raise ValueError(
+                f"page scales must be (L, P, ps, KV)={(L, P, ps, KV)}, got "
+                f"k_scale {k_scale.shape}, v_scale {v_scale.shape}"
+            )
+    elif k_scale is not None or v_scale is not None:
+        raise ValueError("page scales only apply to int8 pages")
+    return int8_pages
+
+
+@functools.partial(jax.jit, static_argnames=("layer", "interpret"))
+def paged_attention_kernel(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Online-softmax decode attention of layer ``layer`` against the pool.
+
+    q            (B, KV, G, hd) — grouped post-RoPE queries, one token/lane;
+    k/v_pages    (L, P, ps, KV, hd) physical pool (fp, or int8 + scales);
+    block_tables (B, Pa) int32 physical page per logical page (Pa is the
+                 *attended* prefix of the lane's allocation, bucketed by the
+                 caller — step cost scales with context, not allocation);
+    ctx_len      (B,) int32 valid context tokens per lane.
+
+    Returns ``(o, m, l)``: unnormalized accumulator (B, KV, G, hd) and the
+    running max / normalizer (B, KV, G, 1), all fp32 — see ops.py for the
+    self-token merge + normalization.
+    """
+    int8_pages = _check_operands(
+        q, k_pages, v_pages, block_tables, ctx_len, layer, k_scale, v_scale
+    )
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[2]
+    Pa = block_tables.shape[1]
+
+    kv_spec = pl.BlockSpec(
+        (1, 1, ps, 1, hd), lambda b, h, p, bt, cl: (layer, bt[b, p], 0, h, 0)
+    )
+    sc_spec = pl.BlockSpec(
+        (1, 1, ps, 1), lambda b, h, p, bt, cl: (layer, bt[b, p], 0, h)
+    )
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)),
+        kv_spec,
+        kv_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if int8_pages:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, Pa),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, p, bt, cl: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 1), lambda b, h, p, bt, cl: (b, h, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _pa_kernel, page_size=ps, int8_pages=int8_pages
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, ctx_len, *operands)

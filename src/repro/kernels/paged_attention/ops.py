@@ -1,0 +1,84 @@
+"""Public wrapper around the paged-attention Pallas kernel.
+
+``paged_gqa_decode`` is what the serving adapter's fast path calls once per
+layer per decode step.  It handles:
+
+* backend dispatch — the Pallas kernel on TPU (or under ``interpret``/
+  ``force_kernel`` for tests), the jnp oracle elsewhere (this CPU
+  container), exactly like ``kernels.quant_matmul.ops``;
+* the **self-token merge**: the kernel accumulates only over context pages
+  and returns ``(o, m, l)``; the new token's own (K, V) — which is never
+  read back from the pool — is folded in analytically:
+
+      m' = max(m, s_self);  o' = o·e^{m−m'} + v_self·e^{s_self−m'}
+      l' = l·e^{m−m'} + e^{s_self−m'};      out = o' / l'
+
+  which equals softmax over [context, self] up to fp reassociation, so the
+  fast path needs neither a pre-attention scatter nor a KV concat.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_kernel
+from repro.kernels.paged_attention.ref import paged_gqa_decode_ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def paged_gqa_decode(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """One-token GQA decode attention against the physical page pool.
+
+    q (B, H, hd) post-RoPE queries; k_new/v_new (B, KV, hd) the token's own
+    post-RoPE K/V (not yet scattered); k/v_pages the full (L, P, ps, KV, hd)
+    pool (+ per-(token, head) scales for int8 pages); block_tables (B, Pa)
+    bucketed to the attended prefix; ctx_len (B,).  -> (B, H, hd) q.dtype.
+    """
+    if not (on_tpu() or interpret or force_kernel):
+        return paged_gqa_decode_ref(
+            q, k_new, v_new, k_pages, v_pages, block_tables, ctx_len,
+            layer=layer, k_scale=k_scale, v_scale=v_scale,
+        )
+
+    B, H, hd = q.shape
+    KV = k_new.shape[1]
+    if H % KV:
+        raise ValueError(
+            f"n_heads {H} must be a multiple of n_kv_heads {KV}"
+        )
+    qg = q.reshape(B, KV, H // KV, hd)
+    o, m, l = paged_attention_kernel(
+        qg, k_pages, v_pages, block_tables, ctx_len,
+        layer=layer, k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+    )
+    qf = qg.astype(jnp.float32)
+    s_self = jnp.einsum(
+        "bkgd,bkd->bkg", qf, k_new.astype(jnp.float32)
+    ) * (hd**-0.5)
+    m0, l0 = m[..., 0], l[..., 0]
+    m_tot = jnp.maximum(m0, s_self)
+    a_ctx = jnp.exp(m0 - m_tot)
+    a_self = jnp.exp(s_self - m_tot)
+    num = o * a_ctx[..., None] + (
+        v_new.astype(jnp.float32)[:, :, None, :] * a_self[..., None]
+    )
+    den = l0 * a_ctx + a_self
+    out = num / den[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)

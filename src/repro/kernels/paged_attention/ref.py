@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for paged GQA decode attention.
+
+Gathers exactly the attended pages of one layer from the physical pool
+(advanced indexing — never the whole allocation, never all layers),
+concatenates the new token's own K/V, and runs a plain masked softmax.
+This mirrors the gather-dense adapter math, so it doubles as BOTH the
+parity oracle for the Pallas kernel (tests) and the fast CPU path the
+serving engine dispatches to off-TPU (ops.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gather_layer(pages, scale, layer, block_tables):
+    """(L, P, ps, KV, hd)[layer, bt] -> (B, Pa*ps, KV, hd) fp32."""
+    g = pages[layer, block_tables]  # (B, Pa, ps, KV, hd)
+    g = g.astype(jnp.float32)
+    if scale is not None:
+        g = g * scale[layer, block_tables][..., None]
+    B = g.shape[0]
+    return g.reshape(B, -1, *pages.shape[-2:])
+
+
+def paged_gqa_decode_ref(
+    q: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """One-token GQA attention vs paged context + the token itself.
+
+    q (B, H, hd); k_new/v_new (B, KV, hd) — the token's own (post-RoPE) K/V,
+    NOT yet in the pool; k/v_pages (L, P, ps, KV, hd); block_tables (B, Pa);
+    ctx_len (B,).  Returns (B, H, hd) in q.dtype.
+    """
+    B, H, hd = q.shape
+    KV = k_new.shape[1]
+    G = H // KV
+    kc = _gather_layer(k_pages, k_scale, layer, block_tables)
+    vc = _gather_layer(v_pages, v_scale, layer, block_tables)
+    S = kc.shape[1]
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s_ctx = jnp.einsum("bkgd,bskd->bkgs", qg, kc) * (hd**-0.5)
+    valid = jnp.arange(S)[None, :] < ctx_len[:, None]
+    s_ctx = jnp.where(
+        valid[:, None, None], s_ctx, jnp.finfo(s_ctx.dtype).min
+    )
+    s_self = jnp.einsum(
+        "bkgd,bkd->bkg", qg, k_new.astype(jnp.float32)
+    ) * (hd**-0.5)
+    s = jnp.concatenate([s_ctx, s_self[..., None]], axis=-1)
+    probs = jax.nn.softmax(s, axis=-1)
+    v_all = jnp.concatenate(
+        [vc, v_new.astype(jnp.float32)[:, None]], axis=1
+    )
+    o = jnp.einsum("bkgs,bskd->bkgd", probs, v_all)
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -75,9 +75,21 @@ def quant_matmul_kernel(
     B, K = x.shape
     vals = 32 // bits
     Kp, M = packed.shape
-    assert Kp * vals == K, (Kp, vals, K)
-    assert B % bB == 0 and M % bM == 0 and K % bK == 0, (B, M, K, bB, bM, bK)
-    assert bK % vals == 0
+    if Kp * vals != K:
+        raise ValueError(
+            f"packed rows {Kp} x {vals} vals/word = {Kp * vals} does not "
+            f"cover the reduction dim K={K} of x {x.shape} at {bits} bits"
+        )
+    if B % bB or M % bM or K % bK:
+        raise ValueError(
+            f"dims (B={B}, M={M}, K={K}) must be multiples of tiles "
+            f"(bB={bB}, bM={bM}, bK={bK}) — pad via ops.quant_matmul"
+        )
+    if bK % vals:
+        raise ValueError(
+            f"K tile bK={bK} must be a multiple of vals-per-word {vals} "
+            f"({bits}-bit packing)"
+        )
     grid = (B // bB, M // bM, K // bK)
     return pl.pallas_call(
         functools.partial(_qmm_kernel, bits=bits, n_k_tiles=grid[2]),

@@ -12,8 +12,11 @@ Requests arrive staggered (``--arrival-gap``), join the decode batch while
 earlier requests are mid-generation, and decode through the KV-cached
 adapter — for quantized models that is the packed
 ``D⁻¹ → V → quant_matmul → Uᵀ`` path, NOT per-token prefix recompute.
-``--check`` verifies the engine's greedy tokens/logits against the
-single-request recompute reference.
+``--paged`` decodes in place over the page pool (paged-attention kernel
+path, no per-step dense KV gather); ``--kv-int8`` stores int8 KV pages.
+``--check`` verifies the engine's greedy tokens against the recompute
+reference (or, for lossy int8 pages, against the gather-dense engine
+oracle over the same page contents).
 """
 from __future__ import annotations
 
@@ -57,7 +60,7 @@ def quantized_generate(qm, prompt, gen: int):
     return toks[:, prompt.shape[1]:]
 
 
-def build_engine(adapter, *, max_seq_len, args) -> "Engine":
+def build_engine(adapter, *, max_seq_len, args, paged=None) -> "Engine":
     from repro.serve import Engine, EngineConfig
 
     ecfg = EngineConfig(
@@ -67,6 +70,8 @@ def build_engine(adapter, *, max_seq_len, args) -> "Engine":
         n_pages=args.pages,
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
+        paged_decode=getattr(args, "paged", False) if paged is None else paged,
+        kv_int8=getattr(args, "kv_int8", False),
     )
     return Engine(adapter, ecfg)
 
@@ -109,6 +114,12 @@ def main(argv=None):
                     help="physical KV pages (default: no overcommit)")
     ap.add_argument("--token-budget", type=int, default=64)
     ap.add_argument("--prefill-chunk", type=int, default=32)
+    ap.add_argument("--paged", action="store_true",
+                    help="decode in place over the page pool (paged-"
+                         "attention kernel path; no per-step dense KV "
+                         "gather) instead of the gather-dense oracle")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="store KV pages int8 with per-(token, head) scales")
     ap.add_argument("--check", action="store_true",
                     help="verify engine tokens against the recompute path")
     ap.add_argument("--seed", type=int, default=0)
@@ -201,7 +212,31 @@ def main(argv=None):
         engine_toks = np.stack(
             [np.asarray(r.out_tokens, np.int32) for r in done]
         )
-        if qm is not None:
+        if args.kv_int8 and not args.paged:
+            raise SystemExit(
+                "--kv-int8 --check needs --paged: int8 pages are lossy vs "
+                "the dense references, so the only independent oracle is "
+                "the gather-dense engine over the same int8 page contents "
+                "— without --paged that oracle IS the engine under test"
+            )
+        if args.kv_int8:
+            # int8 pages are lossy vs the dense references; the oracle is
+            # a gather-dense engine decoding the same int8 page contents
+            oracle = build_engine(
+                adapter, max_seq_len=args.prompt_len + args.gen, args=args,
+                paged=False,
+            )
+            oref = [
+                oracle.submit(np.asarray(prompts[i]), max_new=args.gen)
+                for i in range(args.requests)
+            ]
+            oracle.run()
+            ref = np.stack([
+                np.asarray(r.out_tokens, np.int32)
+                for r in sorted(oref, key=lambda r: r.rid)
+            ])
+            ref_label = "gather-dense int8 engine"
+        elif qm is not None:
             ref = np.asarray(quantized_generate(qm, jnp.asarray(prompts), args.gen))
             ref_label = "quantized recompute"
         else:

@@ -4,9 +4,11 @@ Pieces (each usable on its own):
 
   * :mod:`repro.serve.kv_cache`  — slot-based paged KV pool (admit/extend/
     evict page accounting + gather/scatter device ops);
-  * :mod:`repro.serve.adapter`   — one cached prefill/decode forward over
-    both the fp ``Model`` params and a QuIP ``QuantizedModel`` (packed
-    ``D⁻¹ → V → quant_matmul → Uᵀ`` path, no per-token recompute);
+  * :mod:`repro.serve.adapter`   — dual-path cached forward over both the
+    fp ``Model`` params and a QuIP ``QuantizedModel`` (packed
+    ``D⁻¹ → V → quant_matmul → Uᵀ`` path, no per-token recompute):
+    gather-dense reference oracle + fused paged decode that reads the
+    page pool in place (``kernels/paged_attention``);
   * :mod:`repro.serve.scheduler` — request lifecycle + token-budget FCFS
     scheduling with chunked prefill;
   * :mod:`repro.serve.engine`    — per-step batch assembly: new requests

@@ -9,13 +9,20 @@ every projection runs the packed ``D⁻¹ → V → quant_matmul → Uᵀ`` stru
 path — this replaces the old per-token full-recompute serving loop with a
 real KV-cached decode for quantized weights.
 
-The single forward handles both phases:
+Two decode paths share the block structure:
 
-  * chunked prefill: ``tokens (1, C)`` attending to previously-written
-    context pages + itself (causal);
-  * batched decode: ``tokens (B, 1)`` with per-lane absolute positions, so
-    sequences of different lengths decode in one batch (continuous
-    batching).
+  * **gather-dense (reference oracle)** — :meth:`__call__`: the engine
+    gathers every context page into a dense ``(L, B, S, KV, hd)`` window
+    and the forward concatenates new K/V.  Handles chunked prefill
+    (``tokens (1, C)``) and batched decode (``tokens (B, 1)``).
+  * **paged fast path** — :meth:`decode_paged`: one jitted dispatch that
+    (1) runs every projection — routing ``QuantizedLinear`` through the
+    Pallas ``quant_matmul`` kernel path instead of the XLA unpack
+    fallback, (2) computes attention *in place* against the physical page
+    pool via ``kernels.paged_attention`` (per-lane block tables + context
+    lengths, self-token folded in analytically), and (3) scatters the new
+    K/V into the donated pool tensors.  No per-step dense KV copy exists
+    anywhere in this path.
 
 Masking uses the same where-set convention as the quantized recompute path
 so cached logits match it bit-for-bit up to matmul reassociation.
@@ -29,8 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.core.quantizer import QuantizedLinear
+from repro.kernels.paged_attention.ops import paged_gqa_decode
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
+from repro.serve.kv_cache import quantize_kv_int8
 
 __all__ = ["CachedDecoder"]
 
@@ -72,6 +82,8 @@ class CachedDecoder:
     embed: dict
     final_norm: dict
     blocks: list
+    paged: bool = False  # engine default: decode via the paged fast path
+    paged_interpret: bool = False  # force the Pallas kernel (interpret) off-TPU
 
     def __post_init__(self):
         if self.cfg.family != "dense":
@@ -81,31 +93,38 @@ class CachedDecoder:
         # blocks close over their params -> jit treats them as constants;
         # one compile per (adapter, tokens/ctx shape) pair.
         self._fwd = jax.jit(self._forward)
+        # fused decode: pool tensors are donated and updated in place by
+        # the trailing scatter — one dispatch per engine decode step.
+        self._fwd_paged = jax.jit(self._forward_paged, donate_argnums=(6, 7))
+        self._fwd_paged_q = jax.jit(
+            self._forward_paged_q, donate_argnums=(6, 7, 8, 9)
+        )
 
     # ---- constructors ---------------------------------------------------
 
     @classmethod
-    def from_model(cls, model, params) -> "CachedDecoder":
+    def from_model(cls, model, params, **kw) -> "CachedDecoder":
         return cls(
             cfg=model.cfg,
             embed=params["embed"],
             final_norm=params["final_norm"],
             blocks=_fp_blocks(params, model.cfg),
+            **kw,
         )
 
     @classmethod
-    def from_quantized(cls, qm) -> "CachedDecoder":
+    def from_quantized(cls, qm, **kw) -> "CachedDecoder":
         # QuantizedModel.blocks already has the expected structure, with
         # QuantizedLinear instances as the projection callables.
         return cls(
             cfg=qm.cfg, embed=qm.embed, final_norm=qm.final_norm,
-            blocks=qm.blocks,
+            blocks=qm.blocks, **kw,
         )
 
-    # ---- forward --------------------------------------------------------
+    # ---- gather-dense reference path ------------------------------------
 
     def __call__(self, tokens, positions, ctx_k, ctx_v, ctx_len):
-        """Cached forward.
+        """Cached forward (gather-dense reference).
 
         tokens    (B, T) int32 — new tokens (decode: T=1; prefill: B=1);
         positions (B, T) int32 — absolute position of each new token;
@@ -133,14 +152,7 @@ class CachedDecoder:
         B, T, _ = x.shape
         S = ck.shape[1]
         h = L.norm_apply(blk["ln1"], x, cfg)
-        q = blk["attn.wq"](h).reshape(B, T, cfg.n_heads, cfg.head_dim)
-        k = blk["attn.wk"](h).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
-        v = blk["attn.wv"](h).reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
-        if cfg.qk_norm:
-            q = L.rms_norm(q, blk["q_norm"], cfg.norm_eps)
-            k = L.rms_norm(k, blk["k_norm"], cfg.norm_eps)
-        q = L.rope(q, positions, cfg.rope_theta)
-        k = L.rope(k, positions, cfg.rope_theta)
+        q, k, v = self._qkv(blk, h, positions)
         k_all = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
         v_all = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
         s = L._gqa_scores(q, k_all, cfg)  # (B, KV, G, T, S+T)
@@ -152,15 +164,137 @@ class CachedDecoder:
             jnp.tril(jnp.ones((T, T), bool))[None], (B, T, T)
         )
         mask = jnp.concatenate([mask_ctx, mask_new], axis=-1)
-        s = jnp.where(mask[:, None, None], s, -1e30)
+        s = jnp.where(mask[:, None, None], s, jnp.finfo(s.dtype).min)
         probs = jax.nn.softmax(s, axis=-1)
         o = L._gqa_out(probs, v_all, cfg)
         o = o.astype(x.dtype).reshape(B, T, cfg.q_dim)
         x = x + blk["attn.wo"](o)
+        return self._mlp(blk, x), k, v
+
+    # ---- shared block pieces --------------------------------------------
+
+    def _proj(self, blk, name, h):
+        """Apply one projection; on the paged fast path QuantizedLinear
+        goes through the Pallas quant_matmul kernel dispatch (batched
+        decode matvec, affine dequant in the epilogue) instead of the XLA
+        unpack fallback."""
+        f = blk[name]
+        if isinstance(f, QuantizedLinear):
+            return f(h, use_kernel=True)
+        return f(h)
+
+    def _qkv(self, blk, h, positions, *, kernel_proj: bool = False):
+        """(q, k, v) each (B, T, heads, hd), qk-normed + RoPE'd."""
+        cfg = self.cfg
+        B, T, _ = h.shape
+        proj = (lambda n: self._proj(blk, n, h)) if kernel_proj else (
+            lambda n: blk[n](h)
+        )
+        q = proj("attn.wq").reshape(B, T, cfg.n_heads, cfg.head_dim)
+        k = proj("attn.wk").reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        v = proj("attn.wv").reshape(B, T, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = L.rms_norm(q, blk["q_norm"], cfg.norm_eps)
+            k = L.rms_norm(k, blk["k_norm"], cfg.norm_eps)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        return q, k, v
+
+    def _mlp(self, blk, x, *, kernel_proj: bool = False):
+        cfg = self.cfg
         h = L.norm_apply(blk["ln2"], x, cfg)
-        up = blk["mlp.wi"](h)
+        proj = (lambda n, z: self._proj(blk, n, z)) if kernel_proj else (
+            lambda n, z: blk[n](z)
+        )
+        up = proj("mlp.wi", h)
         if cfg.mlp == "swiglu":
-            up = jax.nn.silu(up) * blk["mlp.wg"](h)
+            up = jax.nn.silu(up) * proj("mlp.wg", h)
         else:
             up = jax.nn.gelu(up)
-        return x + blk["mlp.wo"](up), k, v
+        return x + proj("mlp.wo", up)
+
+    # ---- paged fast path -------------------------------------------------
+
+    def decode_paged(self, tokens, positions, block_tables, ctx_len,
+                     pages, offs, pool):
+        """Fused decode step against ``pool`` (PagedKVPool), in place.
+
+        tokens/positions (B, 1) int32; block_tables (B, Pa) int32 bucketed
+        to the attended prefix; ctx_len (B,) int32; pages/offs (B,) int32
+        physical address of each lane's new token (scratch for pad lanes).
+
+        Mutates ``pool.k``/``pool.v`` (+ scales for int8 pools) via donated
+        buffers and returns logits (B, 1, V).  The caller still owns the
+        host-side length accounting (``pool.note_written``).
+        """
+        args = (
+            jnp.asarray(tokens), jnp.asarray(positions),
+            jnp.asarray(block_tables), jnp.asarray(ctx_len),
+            jnp.asarray(pages), jnp.asarray(offs),
+        )
+        if pool.is_int8:
+            logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                self._fwd_paged_q(
+                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+                )
+            )
+        else:
+            logits, pool.k, pool.v = self._fwd_paged(*args, pool.k, pool.v)
+        return logits
+
+    def _paged_trunk(self, tokens, positions, block_tables, ctx_len,
+                     pool_k, pool_v, k_scale, v_scale):
+        """Embed -> blocks (paged attention) -> logits; returns the new
+        per-layer K/V stacked (L, B, KV, hd) for the trailing scatter."""
+        cfg = self.cfg
+        x = L.embed(self.embed, tokens)  # (B, 1, D)
+        new_k, new_v = [], []
+        for i, blk in enumerate(self.blocks):
+            x, k, v = self._block_paged(
+                blk, x, positions, i, pool_k, pool_v, k_scale, v_scale,
+                block_tables, ctx_len,
+            )
+            new_k.append(k)
+            new_v.append(v)
+        x = L.norm_apply(self.final_norm, x, cfg)
+        logits = L.lm_logits(self.embed, x)
+        return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+    def _forward_paged(self, tokens, positions, block_tables, ctx_len,
+                       pages, offs, pool_k, pool_v):
+        logits, kn, vn = self._paged_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            None, None,
+        )
+        pool_k = pool_k.at[:, pages, offs].set(kn.astype(pool_k.dtype))
+        pool_v = pool_v.at[:, pages, offs].set(vn.astype(pool_v.dtype))
+        return logits, pool_k, pool_v
+
+    def _forward_paged_q(self, tokens, positions, block_tables, ctx_len,
+                         pages, offs, pool_k, pool_v, k_scale, v_scale):
+        logits, kn, vn = self._paged_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            k_scale, v_scale,
+        )
+        kq, ks = quantize_kv_int8(kn)
+        vq, vs = quantize_kv_int8(vn)
+        pool_k = pool_k.at[:, pages, offs].set(kq)
+        pool_v = pool_v.at[:, pages, offs].set(vq)
+        k_scale = k_scale.at[:, pages, offs].set(ks)
+        v_scale = v_scale.at[:, pages, offs].set(vs)
+        return logits, pool_k, pool_v, k_scale, v_scale
+
+    def _block_paged(self, blk, x, positions, layer, pool_k, pool_v,
+                     k_scale, v_scale, block_tables, ctx_len):
+        cfg = self.cfg
+        B = x.shape[0]
+        h = L.norm_apply(blk["ln1"], x, cfg)
+        q, k, v = self._qkv(blk, h, positions, kernel_proj=True)
+        o = paged_gqa_decode(
+            q[:, 0], k[:, 0], v[:, 0], pool_k, pool_v, block_tables,
+            ctx_len, layer=layer, k_scale=k_scale, v_scale=v_scale,
+            interpret=self.paged_interpret,
+        )
+        o = o.astype(x.dtype).reshape(B, 1, cfg.q_dim)
+        x = x + self._proj(blk, "attn.wo", o)
+        return self._mlp(blk, x, kernel_proj=True), k[:, 0], v[:, 0]

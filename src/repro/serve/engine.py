@@ -12,8 +12,20 @@ Each :meth:`Engine.step`:
      decode forward (fixed ``n_slots`` lanes, per-lane positions), writing
      new K/V into the pool and appending greedy tokens.
 
-All device calls are shape-static: one compile for decode, one for
-prefill, one each for gather/scatter — new requests join mid-flight
+Decode runs one of two adapter paths:
+
+  * gather-dense (default off, reference oracle): materialize every
+    context page into a dense ``(L, B, Pmax*ps, KV, hd)`` window, forward,
+    scatter new K/V back — an O(allocated pages) copy per emitted token;
+  * **paged** (``EngineConfig.paged_decode`` / ``CachedDecoder.paged``):
+    hand the adapter per-lane block tables + context lengths and let the
+    paged-attention kernel read the pool in place; the new token's K/V is
+    scattered inside the same jitted dispatch (donated buffers).  Block
+    tables are bucketed to the next power of two of the *attended* page
+    count, so step cost tracks live context, not allocation (a handful of
+    compiles per pool geometry, reused across steps).
+
+All device calls are shape-static per bucket: new requests join mid-flight
 without recompilation.
 """
 from __future__ import annotations
@@ -26,7 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.adapter import CachedDecoder
-from repro.serve.kv_cache import PagedKVPool, pages_needed
+from repro.serve.kv_cache import PagedKVPool, page_bucket, pages_needed
 from repro.serve.scheduler import (
     Request,
     RequestState,
@@ -46,6 +58,8 @@ class EngineConfig:
     token_budget: int = 64  # tokens processed per step
     prefill_chunk: int = 32
     record_logits: bool = False  # keep per-emission logits (tests/--check)
+    paged_decode: bool = False  # decode in place over the page pool
+    kv_int8: bool = False  # int8 KV pages + per-(token, head) scales
 
     @property
     def pages_per_seq(self) -> int:
@@ -61,6 +75,9 @@ class Engine:
     def __init__(self, adapter: CachedDecoder, ecfg: EngineConfig, dtype=None):
         self.adapter = adapter
         self.ecfg = ecfg
+        self.paged = ecfg.paged_decode or adapter.paged
+        if ecfg.kv_int8:
+            dtype = jnp.int8
         self.pool = PagedKVPool(
             adapter.cfg,
             n_pages=ecfg.total_pages(),
@@ -235,6 +252,15 @@ class Engine:
             if req.done:
                 self._finish(req)
 
+    def _active_pages(self, max_ctx: int) -> int:
+        """Pages to attend this step: covers the longest live context,
+        rounded up to a power of two so the paged dispatch compiles a
+        handful of bucket shapes instead of one per context length."""
+        return page_bucket(
+            pages_needed(max_ctx, self.ecfg.page_size),
+            self.pool.max_pages_per_seq,
+        )
+
     def _run_decode(self, decode: list[Request], now: float) -> None:
         B = self.ecfg.n_slots
         assert len(decode) <= B
@@ -247,17 +273,25 @@ class Engine:
             tokens[b, 0] = r.out_tokens[-1]
             ctx_len[b] = self.pool.length(r.slot)
             positions[b, 0] = ctx_len[b]
-        ctx_k, ctx_v = self.pool.gather(slots)
-        logits, k_new, v_new = self.adapter(
-            jnp.asarray(tokens),
-            jnp.asarray(positions),
-            ctx_k,
-            ctx_v,
-            jnp.asarray(ctx_len),
-        )
-        self.pool.write(
-            slots, [int(p) for p in positions[:, 0]], k_new[:, :, 0], v_new[:, :, 0]
-        )
+        pos_list = [int(p) for p in positions[:, 0]]
+        if self.paged:
+            bt = self.pool.block_table(slots)
+            bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
+            pages, offs = self.pool.addresses(slots, pos_list)
+            logits = self.adapter.decode_paged(
+                tokens, positions, bt, ctx_len, pages, offs, self.pool
+            )
+            self.pool.note_written(slots, pos_list)
+        else:
+            ctx_k, ctx_v = self.pool.gather(slots)
+            logits, k_new, v_new = self.adapter(
+                jnp.asarray(tokens),
+                jnp.asarray(positions),
+                ctx_k,
+                ctx_v,
+                jnp.asarray(ctx_len),
+            )
+            self.pool.write(slots, pos_list, k_new[:, :, 0], v_new[:, :, 0])
         logits_np = np.asarray(logits[:, 0])
         for b, r in enumerate(decode):
             r.emit(

@@ -15,6 +15,12 @@ padded prefill tokens scatter their (ignored) writes there, which keeps
 every device op shape-static — one compile for gather, one for scatter.
 
 Keys are stored post-RoPE, matching ``models.layers.cache_store``.
+
+Pages may be stored int8 (``dtype=jnp.int8``): values are quantized
+per-(token, head) on scatter (symmetric, scale = max|x|/127, matching
+``models.layers._quantize_kv``) with fp32 scales in parallel
+``(L, P, ps, KV)`` tensors.  ``gather`` dequantizes; the paged-attention
+kernel reads the int8 pages + scales directly (1 byte/elem of KV traffic).
 """
 from __future__ import annotations
 
@@ -28,18 +34,51 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 
-__all__ = ["PagedKVPool", "pages_needed"]
+__all__ = ["PagedKVPool", "pages_needed", "quantize_kv_int8"]
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
 
 
+def page_bucket(n_pages: int, cap: int) -> int:
+    """Round a page count up to a power of two, clamped to ``cap``.
+
+    The paged decode dispatch is shape-static per block-table width; both
+    the engine and the decode micro-benchmark bucket through here so the
+    benchmark always measures the dispatch shape production uses.
+    """
+    b = 1
+    while b < max(1, n_pages):
+        b *= 2
+    return min(b, cap)
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter(phys: jax.Array, pages: jax.Array, offs: jax.Array,
              vals: jax.Array) -> jax.Array:
     """phys (L, P, ps, KV, hd); pages/offs (T,); vals (L, T, KV, hd)."""
-    return phys.at[:, pages, offs].set(vals)
+    return phys.at[:, pages, offs].set(vals.astype(phys.dtype))
+
+
+def quantize_kv_int8(vals: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(token, head) symmetric int8 for (..., hd) values.
+
+    Shared by the pool's scatter and the adapter's fused paged-decode step,
+    so both write bit-identical pages; delegates to the dense cache path's
+    quantizer so the two KV representations can never drift apart.
+    """
+    from repro.models.layers import _quantize_kv
+
+    return _quantize_kv(vals)
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_q(phys: jax.Array, scales: jax.Array, pages: jax.Array,
+               offs: jax.Array, vals: jax.Array):
+    """int8 variant: quantize vals (L, T, KV, hd), store values + scales."""
+    q, sc = quantize_kv_int8(vals)
+    return phys.at[:, pages, offs].set(q), scales.at[:, pages, offs].set(sc)
 
 
 @jax.jit
@@ -49,6 +88,18 @@ def _gather(phys: jax.Array, block_tables: jax.Array) -> jax.Array:
     g = phys[:, block_tables]  # (L, B, Pmax, ps, KV, hd)
     L, B = g.shape[0], g.shape[1]
     return g.reshape(L, B, -1, *phys.shape[-2:])
+
+
+@functools.partial(jax.jit, static_argnames=("dtype",))
+def _gather_q(phys: jax.Array, scales: jax.Array, block_tables: jax.Array,
+              dtype) -> jax.Array:
+    """int8 variant of :func:`_gather`: dequantize to ``dtype``."""
+    g = phys[:, block_tables].astype(jnp.float32)
+    s = scales[:, block_tables]
+    L, B = g.shape[0], g.shape[1]
+    return (g * s[..., None]).astype(dtype).reshape(
+        L, B, -1, *phys.shape[-2:]
+    )
 
 
 @dataclasses.dataclass
@@ -82,10 +133,17 @@ class PagedKVPool:
         self.n_pages = n_pages
         self.n_slots = n_slots
         self.max_pages_per_seq = max_pages_per_seq
-        dt = dtype or jnp.dtype(cfg.dtype)
+        dt = jnp.dtype(dtype) if dtype is not None else jnp.dtype(cfg.dtype)
+        # fp dtype handed out by gather (and used for dequantized int8 reads)
+        self._fp_dtype = jnp.dtype(cfg.dtype) if dt == jnp.int8 else dt
         shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
         self.k = jnp.zeros(shape, dt)
         self.v = jnp.zeros(shape, dt)
+        if dt == jnp.int8:
+            self.k_scale = jnp.zeros(shape[:-1], jnp.float32)
+            self.v_scale = jnp.zeros(shape[:-1], jnp.float32)
+        else:
+            self.k_scale = self.v_scale = None
         self._free_pages = list(range(n_pages - 1, 0, -1))  # pop() -> low ids
         self._free_slots = list(range(n_slots - 1, -1, -1))
         self._slots: dict[int, _Slot] = {}
@@ -148,6 +206,10 @@ class PagedKVPool:
     def length(self, slot: int) -> int:
         return self._slots[slot].length
 
+    @property
+    def is_int8(self) -> bool:
+        return self.k_scale is not None
+
     # ---- device ops -----------------------------------------------------
 
     def block_table(self, slot_ids: list[Optional[int]]) -> np.ndarray:
@@ -161,8 +223,16 @@ class PagedKVPool:
         return bt
 
     def gather(self, slot_ids: list[Optional[int]]):
-        """-> (k, v) each (L, B, max_pages_per_seq*page_size, KV, hd)."""
+        """-> (k, v) each (L, B, max_pages_per_seq*page_size, KV, hd).
+
+        int8 pools dequantize on the way out, so callers always see fp.
+        """
         bt = jnp.asarray(self.block_table(slot_ids))
+        if self.is_int8:
+            return (
+                _gather_q(self.k, self.k_scale, bt, self._fp_dtype),
+                _gather_q(self.v, self.v_scale, bt, self._fp_dtype),
+            )
         return _gather(self.k, bt), _gather(self.v, bt)
 
     def _addr(self, slot: Optional[int], pos: int) -> tuple[int, int]:
@@ -171,6 +241,41 @@ class PagedKVPool:
         st = self._slots[slot]
         page = st.pages[pos // self.page_size]
         return page, pos % self.page_size
+
+    def addresses(
+        self, slot_ids: list[Optional[int]], positions: list[int]
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Physical (pages, offsets) int32 for one token per lane; ``None``
+        lanes resolve to the scratch page.  Feeds the fused decode dispatch
+        (adapter scatters in place) — pair with :meth:`note_written`."""
+        pages = np.zeros(len(slot_ids), np.int32)
+        offs = np.zeros(len(slot_ids), np.int32)
+        for b, (s, p) in enumerate(zip(slot_ids, positions)):
+            pages[b], offs[b] = self._addr(s, p)
+        return pages, offs
+
+    def note_written(
+        self, slot_ids: list[Optional[int]], positions: list[int]
+    ) -> None:
+        """Host-side length accounting for tokens a fused device step
+        already scattered into the pool."""
+        for s, p in zip(slot_ids, positions):
+            if s is not None:
+                self._slots[s].length = max(self._slots[s].length, p + 1)
+
+    def _scatter_kv(self, pages: np.ndarray, offs: np.ndarray,
+                    k_new: jax.Array, v_new: jax.Array) -> None:
+        pages, offs = jnp.asarray(pages), jnp.asarray(offs)
+        if self.is_int8:
+            self.k, self.k_scale = _scatter_q(
+                self.k, self.k_scale, pages, offs, k_new
+            )
+            self.v, self.v_scale = _scatter_q(
+                self.v, self.v_scale, pages, offs, v_new
+            )
+        else:
+            self.k = _scatter(self.k, pages, offs, k_new)
+            self.v = _scatter(self.v, pages, offs, v_new)
 
     def write(
         self,
@@ -185,15 +290,9 @@ class PagedKVPool:
         ``slot_ids[b]``; ``None`` lanes go to the scratch page.  Also
         advances each written slot's valid length to ``positions[b]+1``.
         """
-        pages = np.zeros(len(slot_ids), np.int32)
-        offs = np.zeros(len(slot_ids), np.int32)
-        for b, (s, p) in enumerate(zip(slot_ids, positions)):
-            pages[b], offs[b] = self._addr(s, p)
-        self.k = _scatter(self.k, jnp.asarray(pages), jnp.asarray(offs), k_new)
-        self.v = _scatter(self.v, jnp.asarray(pages), jnp.asarray(offs), v_new)
-        for s, p in zip(slot_ids, positions):
-            if s is not None:
-                self._slots[s].length = max(self._slots[s].length, p + 1)
+        pages, offs = self.addresses(slot_ids, positions)
+        self._scatter_kv(pages, offs, k_new, v_new)
+        self.note_written(slot_ids, positions)
 
     def write_span(
         self, slot: int, start: int, n_valid: int, k_new: jax.Array,
@@ -207,6 +306,5 @@ class PagedKVPool:
         offs = np.zeros(T, np.int32)
         for t in range(n_valid):
             pages[t], offs[t] = self._addr(slot, start + t)
-        self.k = _scatter(self.k, jnp.asarray(pages), jnp.asarray(offs), k_new)
-        self.v = _scatter(self.v, jnp.asarray(pages), jnp.asarray(offs), v_new)
+        self._scatter_kv(pages, offs, k_new, v_new)
         self._slots[slot].length = max(self._slots[slot].length, start + n_valid)

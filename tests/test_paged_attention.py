@@ -1,0 +1,188 @@
+"""Paged-attention kernel parity sweeps: interpret-mode Pallas kernel
+(+ self-token merge epilogue) vs the dense gather oracle, across ragged
+context lengths, page-boundary-straddling contexts, GQA group sizes, and
+int8 pages — plus the ValueError shape-check contract for the Pallas
+kernel entry points (usable errors under ``python -O``)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attention import (
+    paged_attention_kernel,
+    paged_gqa_decode,
+    paged_gqa_decode_ref,
+)
+
+
+def _setup(
+    *, L=2, P=9, ps=4, KV=2, G=2, hd=16, B=3, Pa=3, int8=False, seed=0
+):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    H = KV * G
+    if int8:
+        kp = jax.random.randint(ks[0], (L, P, ps, KV, hd), -127, 128, jnp.int8)
+        vp = jax.random.randint(ks[1], (L, P, ps, KV, hd), -127, 128, jnp.int8)
+        k_sc = jnp.abs(jax.random.normal(ks[4], (L, P, ps, KV))) * 0.02 + 1e-3
+        v_sc = jnp.abs(jax.random.normal(ks[5], (L, P, ps, KV))) * 0.02 + 1e-3
+    else:
+        kp = jax.random.normal(ks[0], (L, P, ps, KV, hd), jnp.float32)
+        vp = jax.random.normal(ks[1], (L, P, ps, KV, hd), jnp.float32)
+        k_sc = v_sc = None
+    q = jax.random.normal(ks[2], (B, H, hd), jnp.float32)
+    kn = jax.random.normal(ks[3], (B, KV, hd), jnp.float32) * 0.5
+    vn = jax.random.normal(ks[3], (B, KV, hd), jnp.float32) * 0.5
+    # every lane gets a distinct page permutation (physical != logical)
+    rng = np.random.default_rng(seed)
+    bt = jnp.asarray(
+        np.stack([rng.permutation(np.arange(1, P))[:Pa] for _ in range(B)]),
+        jnp.int32,
+    )
+    return q, kn, vn, kp, vp, bt, k_sc, v_sc
+
+
+def _both(q, kn, vn, kp, vp, bt, cl, layer, k_sc=None, v_sc=None):
+    out_k = paged_gqa_decode(
+        q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=k_sc, v_scale=v_sc,
+        interpret=True,
+    )
+    out_r = paged_gqa_decode_ref(
+        q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=k_sc, v_scale=v_sc,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_kernel_matches_oracle_gqa_groups(G):
+    q, kn, vn, kp, vp, bt, *_ = _setup(G=G, seed=G)
+    cl = jnp.array([7, 4, 11], jnp.int32)  # ragged, mid-page
+    for layer in range(kp.shape[0]):
+        _both(q, kn, vn, kp, vp, bt, cl, layer)
+
+
+def test_kernel_page_boundary_straddles():
+    """ctx_len exactly at page edges, one past, empty, and full."""
+    q, kn, vn, kp, vp, bt, *_ = _setup(ps=4, Pa=3, seed=11)
+    for cl in ([4, 8, 12], [5, 9, 1], [0, 3, 12], [1, 4, 5]):
+        _both(q, kn, vn, kp, vp, bt, jnp.asarray(cl, jnp.int32), 1)
+
+
+def test_kernel_int8_pages():
+    q, kn, vn, kp, vp, bt, k_sc, v_sc = _setup(int8=True, seed=5)
+    cl = jnp.array([6, 2, 9], jnp.int32)
+    _both(q, kn, vn, kp, vp, bt, cl, 0, k_sc, v_sc)
+
+
+def test_kernel_ignores_unattended_page_contents():
+    """Pages past ctx_len (incl. scratch-page fill in the block table) must
+    not leak into the output, whatever they contain."""
+    q, kn, vn, kp, vp, bt, *_ = _setup(seed=7)
+    # all lanes share one block table row so the attended/poisoned page
+    # sets are disjoint across the batch
+    bt = jnp.broadcast_to(bt[:1], bt.shape)
+    cl = jnp.array([3, 4, 2], jnp.int32)  # only the first page matters
+    out1 = paged_gqa_decode(
+        q, kn, vn, kp, vp, bt, cl, layer=0, interpret=True
+    )
+    # poison every page the block tables point at beyond page 0 of each lane
+    poisoned = kp.at[:, np.asarray(bt[0, 1:])].set(1e4)
+    out2 = paged_gqa_decode(
+        q, kn, vn, poisoned, vp, bt, cl, layer=0, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+def test_epilogue_self_attention_dominates_empty_context():
+    """ctx_len = 0 lanes reduce to pure self-attention: out == v_new."""
+    q, kn, vn, kp, vp, bt, *_ = _setup(seed=3)
+    cl = jnp.zeros((3,), jnp.int32)
+    out = paged_gqa_decode(q, kn, vn, kp, vp, bt, cl, layer=0, interpret=True)
+    B, H, hd = out.shape
+    KV = vn.shape[1]
+    want = jnp.repeat(vn, H // KV, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# shape-check contract (ValueError with named dims, survives python -O)
+# ---------------------------------------------------------------------------
+
+
+def test_paged_kernel_shape_errors():
+    q, kn, vn, kp, vp, bt, *_ = _setup()
+    cl = jnp.array([1, 1, 1], jnp.int32)
+    with pytest.raises(ValueError, match="KV"):
+        paged_attention_kernel(
+            q.reshape(3, 2, 2, 16)[:, :1], kp, vp, bt, cl, layer=0,
+            interpret=True,
+        )
+    with pytest.raises(ValueError, match="layer"):
+        paged_attention_kernel(
+            q.reshape(3, 2, 2, 16), kp, vp, bt, cl, layer=99, interpret=True
+        )
+    with pytest.raises(ValueError, match="block_tables"):
+        paged_attention_kernel(
+            q.reshape(3, 2, 2, 16), kp, vp, bt[:2], cl, layer=0,
+            interpret=True,
+        )
+    with pytest.raises(ValueError, match="ctx_len"):
+        paged_attention_kernel(
+            q.reshape(3, 2, 2, 16), kp, vp, bt, cl[:2], layer=0,
+            interpret=True,
+        )
+    with pytest.raises(ValueError, match="int8"):
+        qq, knn, vnn, kq, vq, btq, ksc, vsc = _setup(int8=True)
+        paged_attention_kernel(
+            qq.reshape(3, 2, 2, 16), kq, vq, btq, cl, layer=0, interpret=True
+        )
+
+
+def test_quant_matmul_kernel_shape_errors():
+    from repro.core import packing
+    from repro.kernels.quant_matmul.kernel import quant_matmul_kernel
+
+    packed = packing.pack(jnp.zeros((128, 128), jnp.int32), 2)
+    x = jnp.zeros((8, 128), jnp.float32)
+    with pytest.raises(ValueError, match="reduction dim"):
+        quant_matmul_kernel(
+            x, packed[:4], bits=2, bB=8, bM=128, bK=128, interpret=True
+        )
+    with pytest.raises(ValueError, match="multiples of tiles"):
+        quant_matmul_kernel(
+            jnp.zeros((10, 128), jnp.float32), packed, bits=2, bB=8, bM=128,
+            bK=128, interpret=True,
+        )
+    with pytest.raises(ValueError, match="vals-per-word"):
+        quant_matmul_kernel(
+            x, packed, bits=2, bB=8, bM=128, bK=8, interpret=True
+        )
+
+
+def test_other_kernel_entry_shape_errors():
+    from repro.kernels.hadamard.kernel import hadamard_kernel, sylvester
+    from repro.kernels.kron_mul.kernel import kron_mul_kernel
+    from repro.kernels.ldlq.kernel import ldlq_block_kernel
+
+    with pytest.raises(ValueError, match="power of two"):
+        sylvester(12)
+    with pytest.raises(ValueError, match="a\\*b"):
+        hadamard_kernel(
+            jnp.zeros((8, 64)), jnp.ones((64,)), jnp.ones((4, 4)),
+            jnp.ones((8, 8)), a=4, b=8, bB=8, interpret=True,
+        )
+    with pytest.raises(ValueError, match="p\\*q"):
+        kron_mul_kernel(
+            jnp.zeros((8, 64)), jnp.ones((4, 4)), jnp.ones((8, 8)),
+            p=4, q=8, bB=8, interpret=True,
+        )
+    with pytest.raises(ValueError, match="columns"):
+        ldlq_block_kernel(
+            jnp.zeros((8, 64)), jnp.zeros((8, 64)), jnp.zeros((128, 128)),
+            nb=128, bM=8, interpret=True,
+        )
