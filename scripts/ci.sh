@@ -52,9 +52,22 @@ python -m repro.launch.serve --arch qwen3-14b --smoke \
 python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --kv-int8 --check
 
+# tensor-parallel serving (serve/distributed.py) on a forced multi-device
+# CPU host: the full distributed test file, then a 2-way model-parallel
+# serve that must be token-identical to the single-device oracle
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m pytest -q tests/test_distributed.py
+
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --mesh 1,2 --check
+
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --out "$tmp/BENCH_serving.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
+# TP scaling record (token parity + per-device pool bytes ≈ 1/mp)
+PYTHONPATH=src python benchmarks/serving_tp.py --smoke --requests 6 \
+  --out "$tmp/BENCH_tp.json"
 
 echo "[ci] OK"

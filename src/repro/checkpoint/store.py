@@ -126,13 +126,21 @@ def latest_step(directory: str | os.PathLike) -> Optional[int]:
 
 
 def load_arrays(
-    directory: str | os.PathLike, *, step: Optional[int] = None
-) -> tuple[dict[str, np.ndarray], int, dict]:
+    directory: str | os.PathLike,
+    *,
+    step: Optional[int] = None,
+    placer: Optional[Any] = None,
+) -> tuple[dict[str, Any], int, dict]:
     """Load a checkpoint as a flat ``path -> array`` dict, no ``like`` tree.
 
     This is the structure-free restore used by consumers that rebuild
     their objects from manifest metadata (e.g. serve/artifacts.py, where
     the tree holds QuantizedLinear fields that are not plain pytrees).
+
+    ``placer``: optional ``f(key, np_array) -> array`` applied to each
+    leaf as it streams out of its npz shard — the distributed loader
+    commits every leaf straight to its device sharding here, so a large
+    artifact never exists as one unsharded host+device copy.
     Returns (arrays, step, meta).
     """
     directory = pathlib.Path(directory)
@@ -142,11 +150,12 @@ def load_arrays(
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = directory / f"step_{step:08d}"
     manifest = json.loads((path / _MANIFEST).read_text())
-    arrays: dict[str, np.ndarray] = {}
+    arrays: dict[str, Any] = {}
     for i in range(manifest["n_shards"]):
         with np.load(path / f"shard_{i:05d}.npz") as z:
             for k in z.files:
-                arrays[k.replace("::", "/")] = z[k]
+                key = k.replace("::", "/")
+                arrays[key] = z[k] if placer is None else placer(key, z[k])
     return arrays, step, manifest.get("meta", {})
 
 

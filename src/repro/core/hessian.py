@@ -43,6 +43,23 @@ class HessianAccumulator:
             cnt = jnp.float32(Xf.shape[0])
         return HessianAccumulator(H=self.H + Xf.T @ Xf, count=self.count + cnt)
 
+    def update_segments(self, X: jax.Array) -> "HessianAccumulator":
+        """Fold a batch of calibration segments in, ONE update per segment.
+
+        X: (B, S, n).  Fixed per-segment granularity makes the final H
+        independent of how the caller chunks the calibration batch: any
+        chunking is the same left-fold of identical (S, n) products, so a
+        streaming driver (launch/quantize.py) is bit-identical to the
+        one-shot path that materializes every segment at once — provided
+        the per-segment inputs themselves are (i.e. the caller's forward
+        pass is batch-size-invariant on its backend; asserted for the CPU
+        calibration path in tests/test_drivers.py).
+        """
+        acc = self
+        for seg in range(X.shape[0]):
+            acc = acc.update(X[seg])
+        return acc
+
     def finalize(self) -> jax.Array:
         """Mean second moment; damping is applied later (Alg. 1 line 1)."""
         return self.H / jnp.maximum(self.count, 1.0)

@@ -12,7 +12,18 @@ pool in place**:
 * per-lane **block tables** and **context lengths** ride in scalar-prefetch
   (SMEM) — the k/v BlockSpec index maps dereference ``bt[lane, page]`` to
   DMA exactly one physical page ``(ps, hd)`` slice per kv head per step.
-  Pages past ``ctx_len`` resolve to the scratch page and are masked out;
+  The page index is **clamped to the lane's last valid page**: block tables
+  are bucketed to the longest live context in the batch, so a short lane
+  would otherwise stream its trailing scratch/dead pages from HBM just to
+  mask them — with the clamp, every grid step past the lane's end re-asks
+  for the page already resident in VMEM and Mosaic skips the DMA (the
+  revisited-block convention).  Positions past ``ctx_len`` are still masked
+  out of the softmax, so clamped steps contribute exactly zero.  Dead
+  block-table entries past a lane's last valid page are therefore never
+  dereferenced — EXCEPT ``bt[lane, 0]``: an empty lane (``ctx_len == 0``)
+  has no valid page to clamp to, so its steps all read entry 0, which
+  must hold a real page id (the engine zero-fills block tables, and
+  physical page 0 is the reserved scratch page);
 * the layer index is baked into the index map, so the kernel addresses the
   full ``(L, P, ps, KV, hd)`` pool tensor without an XLA slice copy;
 * int8 pages carry per-(token, head) fp32 scales (``(L, P, ps, KV)``),
@@ -164,11 +175,22 @@ def paged_attention_kernel(
     ps = k_pages.shape[2]
     Pa = block_tables.shape[1]
 
+    def _page(bt, cl, b, p):
+        # clamp to the lane's last valid page: grid steps past a short
+        # lane's context re-DMA the block already in VMEM (Mosaic elides
+        # the copy), instead of streaming dead/scratch pages to mask them.
+        # An EMPTY lane (cl == 0) clamps to entry 0, which must be a valid
+        # page id (engine convention: zero-fill -> scratch page 0)
+        last = jnp.maximum(pl.cdiv(cl[b], ps) - 1, 0)
+        return bt[b, jnp.minimum(p, last)]
+
     kv_spec = pl.BlockSpec(
-        (1, 1, ps, 1, hd), lambda b, h, p, bt, cl: (layer, bt[b, p], 0, h, 0)
+        (1, 1, ps, 1, hd),
+        lambda b, h, p, bt, cl: (layer, _page(bt, cl, b, p), 0, h, 0),
     )
     sc_spec = pl.BlockSpec(
-        (1, 1, ps, 1), lambda b, h, p, bt, cl: (layer, bt[b, p], 0, h)
+        (1, 1, ps, 1),
+        lambda b, h, p, bt, cl: (layer, _page(bt, cl, b, p), 0, h),
     )
     in_specs = [
         pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)),

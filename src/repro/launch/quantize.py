@@ -10,6 +10,16 @@ This driver operates on smoke-scale dense models end-to-end on CPU (the
 per-layer math is size-agnostic; at cluster scale the same schedule runs
 layer-parallel over the model axis — DESIGN.md §3).
 
+Hessian accumulation is **streaming**: calibration segments pass through
+each block ``--calib-chunk`` segments at a time and feed
+``HessianAccumulator.update`` per segment, so per-block activation memory
+is O(chunk · seg_len · d_ff) instead of O(batch · seg_len · d_ff).  The
+accumulator's fixed per-segment fold makes H bit-identical for every
+chunk size, including the one-shot path (``--calib-chunk 0``), as long
+as the backend's forward pass is batch-size-invariant — true for the CPU
+calibration path this driver runs on (tests/test_drivers.py pins it);
+on other backends the chunkings agree to reassociation error.
+
     PYTHONPATH=src python -m repro.launch.quantize --arch qwen3-14b --smoke \
         --bits 2 --method ldlq
 """
@@ -143,6 +153,38 @@ def _get_path(tree, path):
     return tree
 
 
+def _block_linears(cfg) -> tuple[str, ...]:
+    return tuple(
+        n for n in _DENSE_LINEARS if n != "mlp.wg" or cfg.mlp == "swiglu"
+    )
+
+
+def block_hessians(
+    lp, x: jax.Array, cfg, positions: jax.Array, *, chunk: int = 0
+) -> dict[str, jax.Array]:
+    """Per-linear proxy Hessians for one block, streaming over segments.
+
+    ``x`` (B, S, d) is the calibration activation entering the block;
+    activations at each linear's input are materialized only ``chunk``
+    segments at a time (``chunk <= 0``: the whole batch at once — the
+    one-shot path).  Each segment is folded through
+    ``HessianAccumulator.update`` individually, so the result is
+    bit-identical for every chunk size.
+    """
+    from repro.core.hessian import HessianAccumulator
+
+    B = x.shape[0]
+    chunk = B if chunk <= 0 else min(chunk, B)
+    accs: dict[str, HessianAccumulator] = {}
+    for i0 in range(0, B, chunk):
+        _, taps = _block_taps(lp, x[i0 : i0 + chunk], cfg, positions)
+        for name in _block_linears(cfg):
+            X = taps[name].astype(jnp.float32)
+            acc = accs.get(name) or HessianAccumulator.create(X.shape[-1])
+            accs[name] = acc.update_segments(X)
+    return {name: acc.finalize() for name, acc in accs.items()}
+
+
 def quantize_dense_model(
     params,
     cfg,
@@ -151,12 +193,20 @@ def quantize_dense_model(
     *,
     seed: int = 0,
     verbose: bool = True,
+    calib_chunk: int = 8,
 ) -> QuantizedModel:
-    """Block-by-block QuIP over a dense decoder (params from Model.init)."""
+    """Block-by-block QuIP over a dense decoder (params from Model.init).
+
+    ``calib_chunk``: calibration segments materialized at once per block
+    (streaming Hessians; <= 0 keeps the whole batch resident — the
+    one-shot path, bit-identical to any chunking).
+    """
     from repro.models.transformer import unstack_layers
 
     n_layers = cfg.n_layers
     layer_params = unstack_layers(params)
+    B = calib_tokens.shape[0]
+    chunk = B if calib_chunk <= 0 else min(calib_chunk, B)
     positions = jnp.arange(calib_tokens.shape[1], dtype=jnp.int32)
     x = L.embed(params["embed"], calib_tokens)
 
@@ -164,9 +214,9 @@ def quantize_dense_model(
     all_stats = []
     for i, lp in enumerate(layer_params):
         t0 = time.time()
-        # taps from the quantized-prefix activations (paper: Hessian from
-        # the quantized transformer up to this point)
-        _, taps = _block_taps(lp, x, cfg, positions)
+        # Hessians from the quantized-prefix activations (paper: H from the
+        # quantized transformer up to this point), streamed chunk by chunk
+        hessians = block_hessians(lp, x, cfg, positions, chunk=chunk)
         blk = {
             "ln1": lp["ln1"],
             "ln2": lp["ln2"],
@@ -175,25 +225,25 @@ def quantize_dense_model(
             blk["q_norm"] = lp["attn"]["q_norm"]
             blk["k_norm"] = lp["attn"]["k_norm"]
         stats_blk = {}
-        for name in _DENSE_LINEARS:
-            if name == "mlp.wg" and cfg.mlp != "swiglu":
-                continue
+        for name in _block_linears(cfg):
             W = _get_path(lp, name).T  # stored (in, out) -> quantize (out, in)
-            X = taps[name].reshape(-1, W.shape[1]).astype(jnp.float32)
-            H = X.T @ X / X.shape[0]
             # per-layer seed from the STABLE linear index — hash(name) varies
             # with PYTHONHASHSEED across processes, which would make saved
             # artifacts irreproducible (their transforms regenerate by seed)
             layer, st = quantize_layer(
-                W, H, qcfg,
+                W, hessians[name], qcfg,
                 seed=seed * 1000 + i * 10 + _DENSE_LINEARS.index(name),
             )
             blk[name] = layer
             stats_blk[name] = st
         blocks.append(blk)
         all_stats.append(stats_blk)
-        # advance calibration activations through the QUANTIZED block
-        x = _quantized_block_forward(blk, x, cfg, positions)
+        # advance calibration activations through the QUANTIZED block, in
+        # the same segment chunks (never the full batch's d_ff activations)
+        x = jnp.concatenate([
+            _quantized_block_forward(blk, x[i0 : i0 + chunk], cfg, positions)
+            for i0 in range(0, B, chunk)
+        ])
         if verbose:
             mean_proxy = float(
                 np.mean([s["proxy_loss"] for s in stats_blk.values()])
@@ -235,6 +285,10 @@ def main(argv=None):
                     choices=["kronecker", "hadamard", "none"])
     ap.add_argument("--calib-segments", type=int, default=16)
     ap.add_argument("--calib-len", type=int, default=128)
+    ap.add_argument("--calib-chunk", type=int, default=8,
+                    help="calibration segments materialized at once per "
+                         "block (streaming Hessians; 0 = whole batch, the "
+                         "one-shot path — bit-identical either way)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
     ap.add_argument("--out-dir", default=None,
@@ -263,7 +317,8 @@ def main(argv=None):
         transform=args.transform,
         use_kernel=False,
     )
-    qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=args.seed)
+    qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=args.seed,
+                              calib_chunk=args.calib_chunk)
 
     if args.out_dir:
         from repro.serve.artifacts import save_quantized

@@ -17,6 +17,16 @@ path, no per-step dense KV gather); ``--kv-int8`` stores int8 KV pages.
 ``--check`` verifies the engine's greedy tokens against the recompute
 reference (or, for lossy int8 pages, against the gather-dense engine
 oracle over the same page contents).
+
+``--mesh DP,MP`` serves tensor-parallel over a (data, model) device mesh
+(serve/distributed.py): packed weights shard column/row-parallel, the KV
+page pool shards over KV heads, and paged decode runs under shard_map
+with no cross-device KV traffic.  On CPU, force a multi-device host
+first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+``--temperature``/``--top-p`` enable per-request nucleus sampling
+(greedy when 0 — the default and the only ``--check`` mode);
+``--stop-token`` (repeatable) finishes a request early on emission.
 """
 from __future__ import annotations
 
@@ -120,25 +130,76 @@ def main(argv=None):
                          "gather) instead of the gather-dense oracle")
     ap.add_argument("--kv-int8", action="store_true",
                     help="store KV pages int8 with per-(token, head) scales")
+    ap.add_argument("--mesh", default=None, metavar="DP,MP",
+                    help="serve tensor-parallel over a (data, model) mesh: "
+                         "packed weights + KV page pool + paged decode all "
+                         "shard over the model axis (serve/distributed.py)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="per-request sampling seed base")
+    ap.add_argument("--stop-token", type=int, action="append", default=None,
+                    help="finish a request when it emits this token "
+                         "(repeatable)")
     ap.add_argument("--check", action="store_true",
                     help="verify engine tokens against the recompute path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    from repro.serve import CachedDecoder
+    from repro.serve import CachedDecoder, DistributedCachedDecoder, \
+        make_serving_mesh
     from repro.serve.artifacts import load_quantized
+    from repro.serve.scheduler import SamplingParams
+
+    if args.temperature == 0 and args.top_p < 1.0:
+        raise SystemExit(
+            "--top-p only applies to non-greedy decoding; pass "
+            "--temperature > 0 (temperature 0 is exact greedy argmax)"
+        )
+    if args.check and args.temperature > 0:
+        raise SystemExit(
+            "--check verifies greedy tokens against a greedy oracle; "
+            "drop --temperature (or --check)"
+        )
+    if args.check and args.stop_token:
+        raise SystemExit(
+            "--check compares full fixed-length token streams; the "
+            "references don't model early stop — drop --stop-token"
+        )
+    mesh = None
+    if args.mesh:
+        try:
+            dp, mp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            raise SystemExit(f"--mesh expects DP,MP (e.g. 1,2), "
+                             f"got {args.mesh!r}")
+        try:
+            mesh = make_serving_mesh(dp, mp)
+        except ValueError as e:
+            raise SystemExit(f"--mesh: {e}")
 
     qm = None
     if args.load_quantized:
         try:
-            qm, meta = load_quantized(args.load_quantized)
+            if mesh is not None:
+                # leaves stream straight onto their mesh placement
+                adapter, meta = DistributedCachedDecoder.load(
+                    args.load_quantized, mesh=mesh
+                )
+                cfg = adapter.cfg
+                if args.check:  # plain copy for the single-device oracle
+                    qm, _ = load_quantized(args.load_quantized)
+            else:
+                qm, meta = load_quantized(args.load_quantized)
+                cfg = qm.cfg
+                adapter = CachedDecoder.from_quantized(qm)
         except (FileNotFoundError, ValueError, KeyError) as e:
             raise SystemExit(
                 f"--load-quantized: {e} (expected a directory written by "
                 f"launch/quantize.py --out-dir)"
             )
-        cfg = qm.cfg
-        adapter = CachedDecoder.from_quantized(qm)
         label = f"quip-{meta['quip_config']['bits']}bit[artifact]"
         print(f"[serve] loaded quantized artifact: {cfg.name} "
               f"{meta['quip_config']['bits']}-bit ({args.load_quantized})")
@@ -146,6 +207,11 @@ def main(argv=None):
         cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(args.seed))
+        if cfg.family != "dense" and mesh is not None:
+            raise SystemExit(
+                "--mesh drives the dense-family engine adapter; other "
+                "families serve through the batch fallback (single device)"
+            )
         if cfg.family != "dense":
             if args.quantize:
                 raise SystemExit(
@@ -173,10 +239,16 @@ def main(argv=None):
             qcfg = QuipConfig(bits=args.bits, method="ldlq", use_kernel=False)
             qm = quantize_dense_model(params, cfg, qcfg, calib.tokens,
                                       seed=args.seed, verbose=False)
-            adapter = CachedDecoder.from_quantized(qm)
+            adapter = (
+                DistributedCachedDecoder.from_quantized(qm, mesh=mesh)
+                if mesh is not None else CachedDecoder.from_quantized(qm)
+            )
             label = f"quip-{args.bits}bit"
         else:
-            adapter = CachedDecoder.from_model(model, params)
+            adapter = (
+                DistributedCachedDecoder.from_model(model, params, mesh=mesh)
+                if mesh is not None else CachedDecoder.from_model(model, params)
+            )
             label = "fp"
 
     prompts = make_calibration(
@@ -187,11 +259,27 @@ def main(argv=None):
     engine = build_engine(
         adapter, max_seq_len=args.prompt_len + args.gen, args=args
     )
+    if mesh is not None:
+        pool = engine.pool
+        print(f"[serve] mesh data={dp} model={mp}: KV pool "
+              f"{pool.total_bytes()} B total, {pool.device_bytes()} B/device")
+    stop_tokens = tuple(args.stop_token or ())
+    try:  # validate the sampling flags before the admission loop, so bad
+        # values don't surface as a misleading pool-capacity error below
+        sampling = [
+            SamplingParams(temperature=args.temperature, top_p=args.top_p,
+                           seed=args.sample_seed + i)
+            for i in range(args.requests)
+        ]
+    except ValueError as e:
+        raise SystemExit(f"bad sampling flags: {e}")
     try:
         for i in range(args.requests):
             engine.submit(
                 np.asarray(prompts[i]), max_new=args.gen,
                 arrival=i * args.arrival_gap,
+                sampling=sampling[i],
+                stop_tokens=stop_tokens,
             )
     except ValueError as e:
         raise SystemExit(f"cannot admit request: {e} "
@@ -221,10 +309,18 @@ def main(argv=None):
             )
         if args.kv_int8:
             # int8 pages are lossy vs the dense references; the oracle is
-            # a gather-dense engine decoding the same int8 page contents
+            # a gather-dense engine decoding the same int8 page contents —
+            # always a SINGLE-DEVICE engine, so --mesh --kv-int8 --check
+            # verifies TP against the unsharded implementation
+            oracle_adapter = adapter
+            if mesh is not None:
+                oracle_adapter = (
+                    CachedDecoder.from_quantized(qm) if qm is not None
+                    else CachedDecoder.from_model(model, params)
+                )
             oracle = build_engine(
-                adapter, max_seq_len=args.prompt_len + args.gen, args=args,
-                paged=False,
+                oracle_adapter, max_seq_len=args.prompt_len + args.gen,
+                args=args, paged=False,
             )
             oref = [
                 oracle.submit(np.asarray(prompts[i]), max_new=args.gen)

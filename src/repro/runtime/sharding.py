@@ -30,6 +30,7 @@ __all__ = [
     "constrain",
     "logical_to_pspec",
     "param_shardings",
+    "shard_put",
 ]
 
 MeshAxes = Union[str, tuple, None]
@@ -69,6 +70,10 @@ def default_rules(multi_pod: bool = False) -> dict[str, MeshAxes]:
         "expert_embed": "data",
         "expert_ff": None,
         "layers": None,            # scan-stacked layer axis: never sharded
+        # serving page pool: shard over KV HEADS ("kv_heads"), never over
+        # physical pages — block-table indexing must resolve locally on
+        # every device (serve/distributed.py)
+        "pages": None,
         "conv": None,
         "state": None,
         "norm": None,
@@ -244,3 +249,8 @@ def param_shardings(ctx: MeshContext, abstract_params, logical_axes):
         abstract_params,
         is_leaf=is_axes,
     )
+
+
+def shard_put(ctx: MeshContext, tree, logical_axes):
+    """device_put a params pytree onto the mesh by its logical axes."""
+    return jax.device_put(tree, param_shardings(ctx, tree, logical_axes))

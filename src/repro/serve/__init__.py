@@ -14,16 +14,22 @@ Pieces (each usable on its own):
   * :mod:`repro.serve.engine`    — per-step batch assembly: new requests
     join the decode batch while others are mid-generation;
   * :mod:`repro.serve.artifacts` — persistent quantized checkpoints
-    (packed ints + scales + regenerable transform seeds).
+    (packed ints + scales + regenerable transform seeds);
+  * :mod:`repro.serve.distributed` — tensor-parallel runtime: packed
+    weights, the physical page pool (over KV heads), and the paged
+    decode dispatch all shard over the model mesh axis.
 """
 from repro.serve.adapter import CachedDecoder
 from repro.serve.artifacts import load_quantized, save_quantized
+from repro.serve.distributed import DistributedCachedDecoder, make_serving_mesh
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.kv_cache import PagedKVPool
 from repro.serve.scheduler import Request, TokenBudgetFCFS
 
 __all__ = [
     "CachedDecoder",
+    "DistributedCachedDecoder",
+    "make_serving_mesh",
     "Engine",
     "EngineConfig",
     "PagedKVPool",

@@ -40,7 +40,7 @@ from repro.core.quantizer import QuantizedLinear
 from repro.kernels.paged_attention.ops import paged_gqa_decode
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
-from repro.serve.kv_cache import quantize_kv_int8
+from repro.serve.kv_cache import PagedKVPool, quantize_kv_int8
 
 __all__ = ["CachedDecoder"]
 
@@ -120,6 +120,19 @@ class CachedDecoder:
             cfg=qm.cfg, embed=qm.embed, final_norm=qm.final_norm,
             blocks=qm.blocks, **kw,
         )
+
+    # ---- engine hooks ----------------------------------------------------
+
+    def make_pool(self, **kw) -> PagedKVPool:
+        """Build the engine's KV pool.  Distributed adapters override this
+        to place the physical pages sharded over their mesh."""
+        return PagedKVPool(self.cfg, **kw)
+
+    def _place(self, x, dtype=None):
+        """Device placement for small per-step host arrays (tokens, block
+        tables, context lengths, page addresses).  Distributed adapters
+        override to commit them replicated on the mesh."""
+        return jnp.asarray(x, dtype)
 
     # ---- gather-dense reference path ------------------------------------
 
@@ -228,9 +241,9 @@ class CachedDecoder:
         host-side length accounting (``pool.note_written``).
         """
         args = (
-            jnp.asarray(tokens), jnp.asarray(positions),
-            jnp.asarray(block_tables), jnp.asarray(ctx_len),
-            jnp.asarray(pages), jnp.asarray(offs),
+            self._place(tokens), self._place(positions),
+            self._place(block_tables), self._place(ctx_len),
+            self._place(pages), self._place(offs),
         )
         if pool.is_int8:
             logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
@@ -290,11 +303,21 @@ class CachedDecoder:
         B = x.shape[0]
         h = L.norm_apply(blk["ln1"], x, cfg)
         q, k, v = self._qkv(blk, h, positions, kernel_proj=True)
-        o = paged_gqa_decode(
-            q[:, 0], k[:, 0], v[:, 0], pool_k, pool_v, block_tables,
-            ctx_len, layer=layer, k_scale=k_scale, v_scale=v_scale,
-            interpret=self.paged_interpret,
+        o = self._paged_attention(
+            q[:, 0], k[:, 0], v[:, 0], pool_k, pool_v, k_scale, v_scale,
+            block_tables, ctx_len, layer=layer,
         )
         o = o.astype(x.dtype).reshape(B, 1, cfg.q_dim)
         x = x + self._proj(blk, "attn.wo", o)
         return self._mlp(blk, x, kernel_proj=True), k[:, 0], v[:, 0]
+
+    def _paged_attention(self, q, k_new, v_new, pool_k, pool_v, k_scale,
+                         v_scale, block_tables, ctx_len, *, layer):
+        """One layer of decode attention against the pool.  Distributed
+        adapters override this with a ``shard_map`` over the model axis so
+        each device attends only its local KV-head page slice."""
+        return paged_gqa_decode(
+            q, k_new, v_new, pool_k, pool_v, block_tables, ctx_len,
+            layer=layer, k_scale=k_scale, v_scale=v_scale,
+            interpret=self.paged_interpret,
+        )

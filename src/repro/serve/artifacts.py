@@ -69,12 +69,16 @@ def save_quantized(
     return save_checkpoint(directory, 0, tree, extra_meta=meta)
 
 
-def load_quantized(directory):
+def load_quantized(directory, *, placer=None):
     """-> (QuantizedModel, meta).  No re-quantization: packed weights load
-    directly and transforms regenerate from their stored seeds."""
+    directly and transforms regenerate from their stored seeds.
+
+    ``placer``: optional ``f(key, np_array) -> array`` applied per leaf on
+    the way out of the store — ``serve.distributed.artifact_placer`` uses
+    it to commit packed codes straight to their mesh sharding."""
     from repro.launch.quantize import QuantizedModel  # deferred: avoid cycle
 
-    arrays, _step, meta = load_arrays(directory)
+    arrays, _step, meta = load_arrays(directory, placer=placer)
     if meta.get("kind") != "quip_quantized_model":
         raise ValueError(
             f"{directory} is not a quantized artifact "

@@ -10,7 +10,9 @@ Each :meth:`Engine.step`:
      and later re-prefill their prompt + generated prefix);
   4. executes prefill chunks (B=1, fixed chunk width) and one batched
      decode forward (fixed ``n_slots`` lanes, per-lane positions), writing
-     new K/V into the pool and appending greedy tokens.
+     new K/V into the pool and appending tokens — greedy by default, or
+     per-request temperature/top-p sampling with stop-token support
+     (:class:`repro.serve.scheduler.SamplingParams`).
 
 Decode runs one of two adapter paths:
 
@@ -38,10 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.adapter import CachedDecoder
-from repro.serve.kv_cache import PagedKVPool, page_bucket, pages_needed
+from repro.serve.kv_cache import page_bucket, pages_needed
 from repro.serve.scheduler import (
     Request,
     RequestState,
+    SamplingParams,
     StepPlan,
     TokenBudgetFCFS,
 )
@@ -78,8 +81,9 @@ class Engine:
         self.paged = ecfg.paged_decode or adapter.paged
         if ecfg.kv_int8:
             dtype = jnp.int8
-        self.pool = PagedKVPool(
-            adapter.cfg,
+        # the adapter owns pool construction so distributed adapters can
+        # hand back a pool whose physical pages live sharded on their mesh
+        self.pool = adapter.make_pool(
             n_pages=ecfg.total_pages(),
             page_size=ecfg.page_size,
             n_slots=ecfg.n_slots,
@@ -102,7 +106,12 @@ class Engine:
     # ---- submission -----------------------------------------------------
 
     def submit(
-        self, prompt: np.ndarray, max_new: int, arrival: float = 0.0
+        self,
+        prompt: np.ndarray,
+        max_new: int,
+        arrival: float = 0.0,
+        sampling: Optional[SamplingParams] = None,
+        stop_tokens: tuple = (),
     ) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
@@ -113,7 +122,11 @@ class Engine:
                 f"is {self.pool.seq_capacity_tokens()} per sequence / "
                 f"{self.pool.n_pages - 1} pages total"
             )
-        req = Request(prompt=prompt, max_new=max_new, arrival=arrival)
+        req = Request(
+            prompt=prompt, max_new=max_new, arrival=arrival,
+            sampling=sampling or SamplingParams(),
+            stop_tokens=tuple(stop_tokens),
+        )
         self.scheduler.submit(req)
         return req
 
@@ -192,6 +205,31 @@ class Engine:
 
     # ---- internals ------------------------------------------------------
 
+    @staticmethod
+    def _select_token(req: Request, logits: np.ndarray) -> int:
+        """Pick the next token from last-position logits (host-side).
+
+        Greedy (temperature 0) stays a bare argmax — the ``--check``
+        oracle path.  Otherwise: temperature scale, nucleus (top-p)
+        filter, then one draw from the request's own generator.
+        """
+        sp = req.sampling
+        if sp.greedy:
+            return int(np.argmax(logits))
+        z = logits.astype(np.float64) / sp.temperature
+        z -= z.max()
+        p = np.exp(z)
+        p /= p.sum()
+        if sp.top_p < 1.0:
+            order = np.argsort(-p)
+            csum = np.cumsum(p[order])
+            # smallest prefix with mass >= top_p (always keeps the head)
+            keep = order[: int(np.searchsorted(csum, sp.top_p)) + 1]
+            nucleus = np.zeros_like(p)
+            nucleus[keep] = p[keep]
+            p = nucleus / nucleus.sum()
+        return int(req.rng.choice(p.size, p=p))
+
     def _evict(self, victim: Request) -> None:
         self.pool.release(victim.slot)
         self.running.remove(victim)
@@ -246,7 +284,7 @@ class Engine:
             req.state = RequestState.DECODE
             last = np.asarray(logits[0, n - 1])
             req.emit(
-                int(np.argmax(last)), now,
+                self._select_token(req, last), now,
                 last if self.ecfg.record_logits else None,
             )
             if req.done:
@@ -295,7 +333,7 @@ class Engine:
         logits_np = np.asarray(logits[:, 0])
         for b, r in enumerate(decode):
             r.emit(
-                int(np.argmax(logits_np[b])), now,
+                self._select_token(r, logits_np[b]), now,
                 logits_np[b] if self.ecfg.record_logits else None,
             )
             self.stats["decode_tokens"] += 1

@@ -210,6 +210,23 @@ class PagedKVPool:
     def is_int8(self) -> bool:
         return self.k_scale is not None
 
+    def _storage(self) -> list:
+        arrs = [self.k, self.v]
+        if self.is_int8:
+            arrs += [self.k_scale, self.v_scale]
+        return arrs
+
+    def total_bytes(self) -> int:
+        """Logical bytes of KV page storage (all shards together)."""
+        return sum(a.nbytes for a in self._storage())
+
+    def device_bytes(self) -> int:
+        """Bytes of KV page storage resident on ONE device.  For a pool
+        sharded over kv heads this is ~1/mp of :meth:`total_bytes`."""
+        return sum(
+            a.addressable_shards[0].data.nbytes for a in self._storage()
+        )
+
     # ---- device ops -----------------------------------------------------
 
     def block_table(self, slot_ids: list[Optional[int]]) -> np.ndarray:

@@ -23,9 +23,42 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["Request", "RequestState", "StepPlan", "TokenBudgetFCFS"]
+__all__ = [
+    "Request",
+    "RequestState",
+    "SamplingParams",
+    "StepPlan",
+    "TokenBudgetFCFS",
+]
 
 _ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request decoding controls.
+
+    ``temperature == 0`` is exact greedy (argmax — the default and the
+    ``--check`` oracle path).  Otherwise logits are scaled by 1/T, nucleus-
+    filtered to the smallest set with mass >= ``top_p``, and sampled with a
+    per-request ``numpy`` generator seeded by ``seed`` — one draw per
+    emitted token, so a request's token stream is reproducible regardless
+    of batch composition, scheduling order, or eviction/replay.
+    """
+
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
 
 
 class RequestState(enum.Enum):
@@ -40,6 +73,8 @@ class Request:                    # list.remove/in on running queues
     prompt: np.ndarray  # (S,) int32
     max_new: int
     arrival: float = 0.0
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+    stop_tokens: tuple = ()  # emitting any of these finishes the request
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
     state: RequestState = RequestState.QUEUED
@@ -53,6 +88,17 @@ class Request:                    # list.remove/in on running queues
     token_times: list = dataclasses.field(default_factory=list)
     # optional per-emission last-token logits (tests/--check)
     step_logits: list = dataclasses.field(default_factory=list)
+    # lazily-built numpy Generator for non-greedy sampling; survives
+    # eviction (the replayed request continues its draw sequence)
+    _rng: Optional[np.random.Generator] = dataclasses.field(
+        default=None, repr=False
+    )
+
+    @property
+    def rng(self) -> np.random.Generator:
+        if self._rng is None:
+            self._rng = np.random.default_rng(self.sampling.seed)
+        return self._rng
 
     @property
     def prefix(self) -> np.ndarray:
@@ -65,7 +111,9 @@ class Request:                    # list.remove/in on running queues
 
     @property
     def done(self) -> bool:
-        return len(self.out_tokens) >= self.max_new
+        if len(self.out_tokens) >= self.max_new:
+            return True
+        return bool(self.out_tokens) and self.out_tokens[-1] in self.stop_tokens
 
     def emit(self, token: int, now: float, logits=None) -> None:
         if self.t_first is None:

@@ -1,0 +1,275 @@
+"""Tensor-parallel serving tests (serve/distributed.py).
+
+Need a multi-device host: run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (scripts/ci.sh
+does); on the default single-device CPU the whole module skips.
+Everything asserts TOKEN-IDENTICAL behavior vs the single-device engine —
+sharding is a layout choice, never a numerics choice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from conftest import make_hessian, make_weights
+
+from repro.configs import get_smoke_config
+from repro.core.quantizer import QuipConfig, quantize_layer
+from repro.data import make_calibration
+from repro.models import build_model
+from repro.serve import (
+    CachedDecoder,
+    DistributedCachedDecoder,
+    Engine,
+    EngineConfig,
+    make_serving_mesh,
+    save_quantized,
+)
+from repro.serve.distributed import (
+    PACKED_AXES,
+    shard_quantized_linear,
+    shard_quantized_model,
+)
+from repro.runtime.sharding import MeshContext, serving_rules
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_serving_mesh(1, 2)
+
+
+@pytest.fixture(scope="module")
+def ctx(mesh):
+    return MeshContext(mesh=mesh, rules=serving_rules())
+
+
+def _smoke_cfg():
+    return get_smoke_config("qwen3-14b")
+
+
+@pytest.fixture(scope="module")
+def quantized_smoke():
+    from repro.launch.quantize import quantize_dense_model
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_calibration(cfg.vocab, n_segments=4, seg_len=32, seed=7)
+    qcfg = QuipConfig(bits=2, method="ldlq", use_kernel=False)
+    qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=0,
+                              verbose=False)
+    return cfg, qm, qcfg
+
+
+def _run_engine(adapter, prompts, gen, **ecfg_kw):
+    kw = dict(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8, paged_decode=True,
+    )
+    kw.update(ecfg_kw)
+    engine = Engine(adapter, EngineConfig(**kw))
+    reqs = [engine.submit(np.asarray(p), max_new=gen) for p in prompts]
+    engine.run()
+    return engine, [np.asarray(r.out_tokens) for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Sharded quantized linears
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_linear_outputs_match_unsharded(ctx):
+    """Column- and row-parallel packed placements both reproduce the
+    unsharded structured inference path (up to matmul reassociation)."""
+    W, H = make_weights(64, 128, seed=3), make_hessian(128, seed=3)
+    layer, _ = quantize_layer(
+        W, H, QuipConfig(bits=2, use_kernel=False), seed=1,
+        collect_stats=False,
+    )
+    x = make_weights(5, 128, seed=9)
+    y0 = np.asarray(layer(x))
+    for name in ("attn.wq", "attn.wo"):  # one column-, one row-parallel
+        sharded = shard_quantized_linear(layer, ctx, name)
+        y = np.asarray(jax.jit(lambda xx: sharded(xx))(x))
+        np.testing.assert_allclose(y, y0, rtol=0, atol=1e-5)
+
+
+def test_shard_quantized_model_layout_and_originals(ctx, quantized_smoke):
+    """Every packed tensor lands model-axis-sharded per PACKED_AXES; the
+    input model's arrays are untouched (fully replicated, single device)."""
+    _, qm, _ = quantized_smoke
+    sq = shard_quantized_model(qm, ctx)
+    for blk, blk0 in zip(sq.blocks, qm.blocks):
+        for name, axes in PACKED_AXES.items():
+            if name not in blk:
+                continue
+            spec = tuple(blk[name].packed.sharding.spec)
+            want = tuple("model" if a else None for a in axes)
+            assert spec == want, (name, spec)
+            # original stays where it was
+            assert len(blk0[name].packed.devices()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Sharded artifact load round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_artifact_load_roundtrip(tmp_path, mesh, quantized_smoke):
+    """load(mesh=...) streams packed codes straight onto the mesh and the
+    resulting per-linear outputs match the plainly-loaded artifact."""
+    from repro.serve.artifacts import load_quantized
+
+    cfg, qm, qcfg = quantized_smoke
+    save_quantized(tmp_path / "art", qm, qcfg)
+    adapter, meta = DistributedCachedDecoder.load(tmp_path / "art", mesh=mesh)
+    assert meta["quip_config"]["bits"] == 2
+    qm_plain, _ = load_quantized(tmp_path / "art")
+    for blk_s, blk_p in zip(adapter.blocks, qm_plain.blocks):
+        for name in PACKED_AXES:
+            if name not in blk_s:
+                continue
+            lin_s, lin_p = blk_s[name], blk_p[name]
+            assert "model" in tuple(lin_s.packed.sharding.spec)
+            x = make_weights(3, lin_p.n, seed=13)
+            np.testing.assert_allclose(
+                np.asarray(lin_s(x)), np.asarray(lin_p(x)), rtol=0, atol=1e-5
+            )
+
+
+# ---------------------------------------------------------------------------
+# Sharded page pool
+# ---------------------------------------------------------------------------
+
+
+def _adapters(mesh):
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return (
+        CachedDecoder.from_model(model, params),
+        DistributedCachedDecoder.from_model(model, params, mesh=mesh),
+        model, params,
+    )
+
+
+@pytest.mark.parametrize("dtype", [None, jnp.int8])
+def test_sharded_pool_accounting_and_roundtrip(mesh, dtype):
+    """The sharded pool is byte-for-byte the same accounting machine as
+    the single-device pool (admit/extend/release are host-side), its
+    physical pages split over KV heads (device_bytes == total/mp), and
+    write/gather round-trips bit-identically."""
+    plain, dist, *_ = _adapters(mesh)
+    kw = dict(n_pages=9, page_size=4, n_slots=3, max_pages_per_seq=4,
+              dtype=dtype)
+    p0, p1 = plain.make_pool(**kw), dist.make_pool(**kw)
+    mp = mesh.shape["model"]
+    assert p1.total_bytes() == p0.total_bytes()
+    assert p1.device_bytes() == p0.total_bytes() // mp
+    assert tuple(p1.k.sharding.spec) == (None, None, None, "model", None)
+    # identical admit/extend/evict decisions
+    for pool in (p0, p1):
+        a = pool.admit(5)
+        b = pool.admit(9)
+        assert (a, b) == (0, 1)
+        assert pool.extend(a, 8) and not pool.extend(b, 17)
+        pool.release(b)
+        assert pool.pages_in_use == 2
+    # write/gather round-trip through the sharded buffers
+    cfg = _smoke_cfg()
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    k = jax.random.normal(jax.random.PRNGKey(2), (L, 6, KV, hd), jnp.float32)
+    for pool in (p0, p1):
+        pool.write_span(0, 0, 6, k, -k)
+    g0, g1 = p0.gather([0])[0], p1.gather([0])[0]
+    np.testing.assert_array_equal(np.asarray(g0), np.asarray(g1))
+
+
+# ---------------------------------------------------------------------------
+# TP engine vs single-device engine: token parity
+# ---------------------------------------------------------------------------
+
+
+def test_tp_engine_fp_token_parity(mesh):
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=3).tokens
+    _, t0 = _run_engine(plain, prompts, 6)
+    eng, t1 = _run_engine(dist, prompts, 6)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+    assert eng.pool.device_bytes() * mesh.shape["model"] \
+        == eng.pool.total_bytes()
+
+
+def test_tp_engine_quantized_token_parity(mesh, quantized_smoke):
+    """The ISSUE acceptance check: a 2-device model mesh serving sharded
+    packed weights over the sharded pool emits the exact token stream of
+    the single-device paged engine."""
+    cfg, qm, _ = quantized_smoke
+    prompts = make_calibration(cfg.vocab, n_segments=4, seg_len=12,
+                               seed=5).tokens
+    _, t0 = _run_engine(CachedDecoder.from_quantized(qm), prompts, 5)
+    _, t1 = _run_engine(
+        DistributedCachedDecoder.from_quantized(qm, mesh=mesh), prompts, 5
+    )
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_int8_pages_token_parity(mesh):
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=9,
+                               seed=8).tokens
+    _, t0 = _run_engine(plain, prompts, 5, kv_int8=True)
+    _, t1 = _run_engine(dist, prompts, 5, kv_int8=True)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_eviction_token_parity(mesh):
+    """Eviction/requeue (host-side scheduling over the sharded pool) and
+    re-prefill through the sharded gather path keep exact tokens."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8,
+                               seed=4).tokens
+    dist = DistributedCachedDecoder.from_model(model, params, mesh=mesh)
+    eng, t1 = _run_engine(dist, prompts, 8, n_slots=3, page_size=4,
+                          n_pages=10)
+    assert eng.stats["evictions"] > 0
+    plain = CachedDecoder.from_model(model, params)
+    _, t0 = _run_engine(plain, prompts, 8, n_slots=3, page_size=4,
+                        n_pages=10)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_indivisible_kv_heads_fall_back_replicated(quantized_smoke):
+    """A model axis the KV-head count cannot divide degrades to the
+    replicated pool + single-device attention math — same tokens, no
+    crash (the divisibility fallback)."""
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices for an indivisible model axis")
+    cfg, qm, _ = quantized_smoke
+    assert cfg.n_kv_heads % 4 != 0  # smoke config has 2 KV heads
+    mesh4 = make_serving_mesh(1, 4)
+    prompts = make_calibration(cfg.vocab, n_segments=2, seg_len=10,
+                               seed=6).tokens
+    _, t0 = _run_engine(CachedDecoder.from_quantized(qm), prompts, 4)
+    dist = DistributedCachedDecoder.from_quantized(qm, mesh=mesh4)
+    eng, t1 = _run_engine(dist, prompts, 4)
+    assert not dist._pool_sharded
+    assert eng.pool.device_bytes() == eng.pool.total_bytes()
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)

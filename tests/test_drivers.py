@@ -59,6 +59,62 @@ def test_quantize_driver_2bit_close_to_fp(tmp_path):
     assert rec["ppl_quant"] < rec["ppl_fp16"] * 1.25
 
 
+def test_streaming_hessians_bit_identical():
+    """Regression for the streaming calibration path: block Hessians (and
+    thus every downstream packed weight) must be BIT-identical for every
+    chunk size, including the one-shot whole-batch path (chunk=0)."""
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.models.transformer import unstack_layers
+    from repro.models import layers as L
+    from repro.data import make_calibration
+
+    cfg = get_smoke_config("qwen3-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_calibration(cfg.vocab, n_segments=6, seg_len=16, seed=7)
+    positions = jnp.arange(calib.tokens.shape[1], dtype=jnp.int32)
+    x = L.embed(params["embed"], calib.tokens)
+    lp = unstack_layers(params)[0]
+    ref = qz.block_hessians(lp, x, cfg, positions, chunk=0)
+    for chunk in (1, 2, 4, 5):
+        got = qz.block_hessians(lp, x, cfg, positions, chunk=chunk)
+        assert set(got) == set(ref)
+        for name in ref:
+            np.testing.assert_array_equal(
+                np.asarray(got[name]), np.asarray(ref[name]),
+                err_msg=f"{name} @ chunk={chunk}",
+            )
+
+
+@pytest.mark.slow
+def test_streaming_quantize_bit_identical_model():
+    """End-to-end: quantize_dense_model with streaming chunks emits the
+    exact packed codes of the one-shot path (activation advance included)."""
+    from repro.configs import get_smoke_config
+    from repro.core.quantizer import QuipConfig
+    from repro.data import make_calibration
+    from repro.models import build_model
+
+    cfg = get_smoke_config("qwen3-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_calibration(cfg.vocab, n_segments=4, seg_len=24, seed=7)
+    qcfg = QuipConfig(bits=2, method="ldlq", use_kernel=False)
+    qms = [
+        qz.quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=0,
+                                verbose=False, calib_chunk=chunk)
+        for chunk in (0, 1)
+    ]
+    for blk0, blk1 in zip(qms[0].blocks, qms[1].blocks):
+        for name, val in blk0.items():
+            if hasattr(val, "packed"):
+                np.testing.assert_array_equal(
+                    np.asarray(val.packed), np.asarray(blk1[name].packed),
+                    err_msg=name,
+                )
+
+
 @pytest.mark.slow
 def test_serve_driver_quantized_generation():
     """In-process quantize -> engine serve; --check verifies the cached

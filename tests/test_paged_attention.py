@@ -96,6 +96,31 @@ def test_kernel_ignores_unattended_page_contents():
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
 
 
+def test_short_lanes_never_dereference_dead_pages():
+    """The index-map clamp: block tables are bucketed to the LONGEST live
+    context, so short lanes carry dead trailing entries.  With the clamp
+    those entries past entry 0 are never dereferenced (the grid step
+    re-asks for the lane's last valid page and Mosaic skips the DMA) — so
+    even garbage page ids past a lane's end must leave the output
+    untouched.  An EMPTY lane clamps every step to entry 0, which must
+    stay a valid page id (the engine's zero-fill/scratch convention)."""
+    q, kn, vn, kp, vp, bt, *_ = _setup(P=9, ps=4, Pa=3, seed=13)
+    cl = jnp.array([5, 0, 12], jnp.int32)  # lane 0 short, lane 1 EMPTY
+    out1 = paged_gqa_decode(q, kn, vn, kp, vp, bt, cl, layer=1,
+                            interpret=True)
+    # rewrite every dead entry PAST entry 0 to an arbitrary other page:
+    # lane 0 attends 2 pages (keeps bt[0,:2]), lane 1 attends none (its
+    # entry 0 stays — the one slot an empty lane still reads), lane 2 all
+    bt2 = np.asarray(bt).copy()
+    bt2[0, 2:] = bt2[2, 0]
+    bt2[1, 1:] = bt2[0, 0]
+    out2 = paged_gqa_decode(q, kn, vn, kp, vp, jnp.asarray(bt2), cl,
+                            layer=1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # and the clamped kernel still matches the oracle on the ragged batch
+    _both(q, kn, vn, kp, vp, bt, cl, 1)
+
+
 def test_epilogue_self_attention_dominates_empty_context():
     """ctx_len = 0 lanes reduce to pure self-attention: out == v_new."""
     q, kn, vn, kp, vp, bt, *_ = _setup(seed=3)

@@ -363,6 +363,89 @@ def test_engine_eviction_victim_can_be_asking_lane():
         np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
 
 
+def test_sampling_reproducible_and_greedy_default():
+    """Non-greedy decode: same seed -> same stream regardless of batch
+    composition; temperature 0 stays the exact greedy argmax path."""
+    from repro.serve.scheduler import SamplingParams
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    adapter = CachedDecoder.from_model(model, params)
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8, seed=2).tokens
+    gen = 6
+    sp = SamplingParams(temperature=0.9, top_p=0.85, seed=42)
+
+    def run(batch):
+        engine = Engine(adapter, EngineConfig(
+            max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+            token_budget=32, prefill_chunk=8,
+        ))
+        reqs = [
+            engine.submit(np.asarray(prompts[i]), max_new=gen, sampling=sp)
+            for i in batch
+        ]
+        engine.run()
+        return {i: np.asarray(r.out_tokens) for i, r in zip(batch, reqs)}
+
+    solo = run([0])
+    batched = run([0, 1, 2])
+    np.testing.assert_array_equal(solo[0], batched[0])
+    # greedy (default SamplingParams) matches the reference generator
+    from repro.launch.serve import greedy_generate
+
+    engine = Engine(adapter, EngineConfig(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8,
+    ))
+    reqs = [engine.submit(np.asarray(p), max_new=gen) for p in prompts]
+    engine.run()
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_sampling_param_validation():
+    from repro.serve.scheduler import SamplingParams
+
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.5).greedy
+
+
+def test_stop_token_finishes_request_early():
+    """A request stops at its first stop-token emission (token included);
+    the greedy stream up to that point is unchanged."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=2, seg_len=8, seed=2).tokens
+    gen = 8
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    stop = int(ref[0, 2])  # stop request 0 at its 3rd greedy token
+    engine = Engine(
+        CachedDecoder.from_model(model, params),
+        EngineConfig(max_seq_len=prompts.shape[1] + gen, n_slots=4,
+                     page_size=4, token_budget=32, prefill_chunk=8),
+    )
+    r0 = engine.submit(np.asarray(prompts[0]), max_new=gen,
+                       stop_tokens=(stop,))
+    r1 = engine.submit(np.asarray(prompts[1]), max_new=gen)
+    engine.run()
+    want = list(ref[0, : list(ref[0]).index(stop) + 1])
+    np.testing.assert_array_equal(np.asarray(r0.out_tokens), want)
+    assert len(r0.out_tokens) <= 3
+    np.testing.assert_array_equal(np.asarray(r1.out_tokens), ref[1])
+    assert engine.pool.pages_in_use == 0  # early finish released its pages
+
+
 def test_engine_rejects_oversized_request():
     cfg = _smoke_cfg()
     model = build_model(cfg)
