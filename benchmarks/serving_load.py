@@ -9,7 +9,12 @@ inter-token latency percentiles (p50/p99), and peak KV-page occupancy —
 the numbers that matter for a continuous-batching deployment.  The record
 is written to ``BENCH_serving.json`` (``--out``) so perf regressions are
 visible PR-over-PR.  ``--paged`` decodes in place over the page pool
-(paged-attention path); ``--kv-int8`` stores int8 KV pages.
+(paged-attention path); ``--paged-prefill`` batches each tick's prefill
+chunks into one fused cross-request dispatch; ``--kv-int8`` stores int8
+KV pages.  ``--prefix-len N`` switches to a prefix-heavy workload: every
+prompt opens with the same N-token header (system prompt / few-shot
+block), which ``--prefix-cache`` then serves from cached pages instead of
+recomputing (``prefix_hit_tokens`` in the record).
 """
 from __future__ import annotations
 
@@ -52,6 +57,16 @@ def main(argv=None):
     ap.add_argument("--paged", action="store_true",
                     help="decode in place over the page pool (no per-step "
                          "dense KV gather)")
+    ap.add_argument("--paged-prefill", action="store_true",
+                    help="batch each tick's prefill chunks into one fused "
+                         "cross-request dispatch over the page pool")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="map cached prompt-prefix pages on admission "
+                         "(refcounted, copy-on-write) instead of "
+                         "recomputing them")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="prefix-heavy workload: every prompt opens with "
+                         "the same N-token header")
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 KV pages with per-(token, head) scales")
     ap.add_argument("--seed", type=int, default=0)
@@ -92,6 +107,8 @@ def main(argv=None):
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
         paged_decode=args.paged,
+        paged_prefill=args.paged_prefill,
+        prefix_cache=args.prefix_cache,
         kv_int8=args.kv_int8,
     ))
     # warm the jit caches so compile time doesn't pollute latency stats
@@ -103,6 +120,14 @@ def main(argv=None):
     lengths = rng.integers(
         max(4, args.prompt_len // 2), args.prompt_len + 1, args.requests
     )
+    if args.prefix_len:
+        # prefix-heavy workload: one shared header, per-request tails
+        header = prompts[0][: min(args.prefix_len, args.prompt_len - 1)]
+        lengths = np.maximum(lengths, len(header) + 1)
+        prompts = np.concatenate(
+            [np.tile(header, (args.requests, 1)), prompts[:, len(header):]],
+            axis=1,
+        )
     for i in range(args.requests):
         engine.submit(np.asarray(prompts[i][: lengths[i]]), max_new=args.gen,
                       arrival=float(arrivals[i]))
@@ -124,6 +149,9 @@ def main(argv=None):
         "label": ("quip-%db" % args.bits) if args.quantize else "fp",
         "arch": cfg.name,
         "decode_path": "paged" if args.paged else "gather-dense",
+        "prefill_path": "paged-batch" if args.paged_prefill else "dense-b1",
+        "prefix_cache": bool(args.prefix_cache),
+        "prefix_len": args.prefix_len,
         "kv_pages": "int8" if args.kv_int8 else "fp",
         "requests": args.requests,
         "rate_req_s": args.rate,
@@ -137,6 +165,12 @@ def main(argv=None):
         "peak_kv_occupancy": round(s["peak_occupancy"], 3),
         "evictions": s["evictions"],
         "engine_steps": s["steps"],
+        "prefill_batch_size": s["prefill_batch_size"],
+        "prefix_hit_tokens": s["prefix_hit_tokens"],
+        "cached_pages": s["cached_pages"],
+        "shared_pages": s["shared_pages"],
+        "max_page_ref": s["max_page_ref"],
+        "cow_copies": s["cow_copies"],
     }
     print(json.dumps(rec, indent=1))
     if args.out:

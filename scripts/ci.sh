@@ -52,6 +52,22 @@ python -m repro.launch.serve --arch qwen3-14b --smoke \
 python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --kv-int8 --check
 
+# batched paged prefill + prefix cache: one fused cross-request prefill
+# dispatch per tick, cached prompt-prefix pages mapped on admission —
+# still token-identical to the dense oracle (the --check oracle always
+# runs the dense path)
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --prefix-cache --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" \
+  --paged --paged-prefill --prefix-cache --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --kv-int8 --check
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -60,12 +76,20 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   python -m repro.launch.serve --arch qwen3-14b --smoke \
-  --requests 4 --prompt-len 16 --gen 8 --paged --mesh 1,2 --check
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --prefix-cache --mesh 1,2 --check
 
+# keep the PR-over-PR serving baseline on the unchanged workload; the
+# prefix-heavy batched-prefill run is a separate labeled record
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --out "$tmp/BENCH_serving.json"
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
+  --paged --paged-prefill --prefix-cache --prefix-len 16 \
+  --out "$tmp/BENCH_serving_prefix.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
+PYTHONPATH=src python benchmarks/prefill_microbench.py --smoke \
+  --requests 1 4 --reps 2 --out "$tmp/BENCH_prefill.json"
 # TP scaling record (token parity + per-device pool bytes ≈ 1/mp)
 PYTHONPATH=src python benchmarks/serving_tp.py --smoke --requests 6 \
   --out "$tmp/BENCH_tp.json"

@@ -1,9 +1,21 @@
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
-from repro.kernels.paged_attention.ops import paged_gqa_decode
-from repro.kernels.paged_attention.ref import paged_gqa_decode_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_kernel,
+    paged_prefill_kernel,
+)
+from repro.kernels.paged_attention.ops import (
+    paged_gqa_decode,
+    paged_gqa_prefill,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_gqa_decode_ref,
+    paged_gqa_prefill_ref,
+)
 
 __all__ = [
     "paged_attention_kernel",
+    "paged_prefill_kernel",
     "paged_gqa_decode",
     "paged_gqa_decode_ref",
+    "paged_gqa_prefill",
+    "paged_gqa_prefill_ref",
 ]

@@ -1,4 +1,13 @@
-"""Pallas TPU kernel: GQA decode attention directly against the paged KV pool.
+"""Pallas TPU kernels: GQA attention directly against the paged KV pool.
+
+Two entry points share one grid shape and one online-softmax core:
+
+* :func:`paged_attention_kernel` — decode: one query token per lane;
+* :func:`paged_prefill_kernel` — chunked prefill: a ``(B, C)`` token chunk
+  batch per dispatch.  The grid grows one trailing "arbitrary" step that
+  folds the chunk's own K/V in with an intra-chunk causal mask, so a
+  whole cross-request prefill chunk batch attends its paged prior context
+  plus itself in a single pass (DESIGN.md §9).
 
 The serving engine used to materialize a dense ``(L, B, Pmax*ps, KV, hd)``
 copy of every context page per decode step (``PagedKVPool.gather``) — an
@@ -48,6 +57,24 @@ from repro.kernels.compat import CompilerParams
 _NEG = float(jnp.finfo(jnp.float32).min)
 
 
+def _online_update(s, valid, v, o_ref, m_ref, l_ref):
+    """One online-softmax accumulation step over a key block.
+
+    s (R, S) scores already NEG-filled outside ``valid``; v (S, hd).
+    ``pmat`` is gated explicitly so a fully-masked block contributes
+    exactly zero (``exp(NEG - NEG) == 1`` would poison the accumulator).
+    """
+    m_prev = m_ref[0, 0]  # (R, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    pmat = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (R, S)
+    l_ref[0, 0] = alpha * l_ref[0, 0] + jnp.sum(pmat, -1, keepdims=True)
+    o_ref[0, 0] = o_ref[0, 0] * alpha + jax.lax.dot_general(
+        pmat, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[0, 0] = m_new
+
+
 def _pa_kernel(
     bt_ref,  # (B, Pa) int32 scalar-prefetch block table
     cl_ref,  # (B,)    int32 scalar-prefetch context lengths
@@ -83,22 +110,13 @@ def _pa_kernel(
 
     # positions covered by this physical page; everything at or past the
     # lane's ctx_len (incl. whole pages resolved to the scratch page) is
-    # masked.  pmat is gated explicitly so a fully-masked page contributes
-    # exactly zero (exp(NEG - NEG) == 1 would poison the accumulator).
+    # masked.
     pos = p * page_size + jax.lax.broadcasted_iota(
         jnp.int32, (1, page_size), 1
     )
     valid = pos < cl_ref[b]  # (1, ps), broadcasts over G
     s = jnp.where(valid, s, _NEG)
-    m_prev = m_ref[0, 0]  # (G, 1)
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    pmat = jnp.where(valid, jnp.exp(s - m_new), 0.0)  # (G, ps)
-    l_ref[0, 0] = alpha * l_ref[0, 0] + jnp.sum(pmat, -1, keepdims=True)
-    o_ref[0, 0] = o_ref[0, 0] * alpha + jax.lax.dot_general(
-        pmat, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    m_ref[0, 0] = m_new
+    _online_update(s, valid, v, o_ref, m_ref, l_ref)
 
 
 def _check_operands(q, k_pages, v_pages, block_tables, ctx_len, layer,
@@ -227,3 +245,201 @@ def paged_attention_kernel(
         ),
         interpret=interpret,
     )(block_tables, ctx_len, *operands)
+
+
+def _prefill_kernel(
+    bt_ref,  # (B, Pa) int32 scalar-prefetch block table
+    cl_ref,  # (B,)    int32 scalar-prefetch PRIOR-context lengths
+    q_ref,  # (1, 1, G*C, hd) chunk queries, rows G-major / chunk-pos-minor
+    k_ref,  # (1, 1, ps, 1, hd) one physical context page
+    v_ref,  # (1, 1, ps, 1, hd)
+    kc_ref,  # (1, C, 1, hd) the chunk's own K (not yet in the pool)
+    vc_ref,  # (1, C, 1, hd)
+    *refs,  # [ks_ref (1,1,ps,1), vs_ref (1,1,ps,1)], o_ref, m_ref, l_ref
+    page_size: int,
+    chunk: int,
+    int8_pages: bool,
+):
+    if int8_pages:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref = refs
+    else:
+        o_ref, m_ref, l_ref = refs
+    b, p = pl.program_id(0), pl.program_id(2)
+    n_ctx = pl.num_programs(2) - 1  # trailing step is the chunk block
+
+    @pl.when(p == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G*C, hd)
+    scale = q.shape[-1] ** -0.5
+
+    @pl.when(p < n_ctx)
+    def _ctx_page():
+        # identical to the decode page step: every chunk token attends all
+        # prior-context positions < cl, so the whole (G*C)-row tile shares
+        # one page mask.
+        k = k_ref[0, 0, :, 0].astype(jnp.float32)  # (ps, hd)
+        v = v_ref[0, 0, :, 0].astype(jnp.float32)
+        if int8_pages:
+            k = k * ks_ref[0, 0, :, 0][:, None]
+            v = v * vs_ref[0, 0, :, 0][:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G*C, ps)
+        pos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1
+        )
+        valid = pos < cl_ref[b]
+        s = jnp.where(valid, s, _NEG)
+        _online_update(s, valid, v, o_ref, m_ref, l_ref)
+
+    @pl.when(p == n_ctx)
+    def _chunk_block():
+        # the chunk attends itself causally: row r is chunk position
+        # r % chunk (G-major row layout), key column t valid iff t <= pos.
+        # Every row keeps its self column, so the merged softmax is finite
+        # even for ctx_len == 0 lanes and padded tail tokens.
+        kc = kc_ref[0, :, 0].astype(jnp.float32)  # (C, hd)
+        vc = vc_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, kc, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale  # (G*C, C)
+        rows = s.shape[0]
+        row_pos = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 0) % chunk
+        col = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 1)
+        causal = col <= row_pos
+        s = jnp.where(causal, s, _NEG)
+        _online_update(s, causal, vc, o_ref, m_ref, l_ref)
+        o_ref[0, 0] = o_ref[0, 0] / l_ref[0, 0]  # normalize in place
+
+
+def _check_prefill_operands(q, k_chunk, v_chunk, k_pages, v_pages,
+                            block_tables, ctx_len, layer, k_scale, v_scale):
+    if q.ndim != 5:
+        raise ValueError(
+            f"q must be (B, KV, G, C, hd) grouped chunk queries, got shape "
+            f"{q.shape}"
+        )
+    B, KV, G, C, hd = q.shape
+    if k_chunk.shape != (B, C, KV, hd) or v_chunk.shape != k_chunk.shape:
+        raise ValueError(
+            f"k_chunk/v_chunk must both be (B={B}, C={C}, KV={KV}, hd={hd}); "
+            f"got k_chunk {k_chunk.shape}, v_chunk {v_chunk.shape}"
+        )
+    # pool/table/scale checks are shared with the decode entry; a
+    # single-chunk-position view of q has its (B, KV, G, hd) shape
+    return _check_operands(
+        q[:, :, :, 0], k_pages, v_pages, block_tables, ctx_len, layer,
+        k_scale, v_scale,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("layer", "interpret"))
+def paged_prefill_kernel(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal chunked-prefill attention of layer ``layer`` against the pool.
+
+    q            (B, KV, G, C, hd) grouped post-RoPE chunk queries — lane b's
+                 chunk token t sits at absolute position ``ctx_len[b] + t``;
+    k/v_chunk    (B, C, KV, hd) the chunk's own post-RoPE K/V (NOT yet
+                 scattered into the pool);
+    k/v_pages    (L, P, ps, KV, hd) physical pool (fp, or int8 + scales);
+    block_tables (B, Pa) int32, bucketed to the longest PRIOR context;
+    ctx_len      (B,) int32 valid prior-context tokens per lane (the chunk's
+                 start position) — ragged, 0 for fresh admissions.
+
+    Grid is ``(lane, kv_head, page+1)``: the context pages stream through
+    the decode kernel's online-softmax step (index-map clamp included), and
+    the one extra trailing step folds in the intra-chunk causal block and
+    normalizes.  Returns the normalized output (B, KV, G, C, hd) fp32.
+    """
+    int8_pages = _check_prefill_operands(
+        q, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len, layer,
+        k_scale, v_scale,
+    )
+    B, KV, G, C, hd = q.shape
+    ps = k_pages.shape[2]
+    Pa = block_tables.shape[1]
+    qf = q.reshape(B, KV, G * C, hd)
+
+    def _page(bt, cl, b, p):
+        # same clamp as decode: steps at/past a lane's last valid page
+        # (including the whole trailing chunk step) re-ask for the page
+        # already resident, and Mosaic elides the DMA.
+        last = jnp.maximum(pl.cdiv(cl[b], ps) - 1, 0)
+        return bt[b, jnp.minimum(p, last)]
+
+    kv_spec = pl.BlockSpec(
+        (1, 1, ps, 1, hd),
+        lambda b, h, p, bt, cl: (layer, _page(bt, cl, b, p), 0, h, 0),
+    )
+    sc_spec = pl.BlockSpec(
+        (1, 1, ps, 1),
+        lambda b, h, p, bt, cl: (layer, _page(bt, cl, b, p), 0, h),
+    )
+    chunk_spec = pl.BlockSpec(
+        (1, C, 1, hd), lambda b, h, p, bt, cl: (b, 0, h, 0)
+    )
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, G * C, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)
+        ),
+        kv_spec,
+        kv_spec,
+        chunk_spec,
+        chunk_spec,
+    ]
+    operands = [qf, k_pages, v_pages, k_chunk, v_chunk]
+    if int8_pages:
+        in_specs += [sc_spec, sc_spec]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, Pa + 1),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec(
+                (1, 1, G * C, hd), lambda b, h, p, bt, cl: (b, h, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, G * C, 1), lambda b, h, p, bt, cl: (b, h, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, G * C, 1), lambda b, h, p, bt, cl: (b, h, 0, 0)
+            ),
+        ],
+    )
+    o, _, _ = pl.pallas_call(
+        functools.partial(
+            _prefill_kernel, page_size=ps, chunk=C, int8_pages=int8_pages
+        ),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, KV, G * C, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G * C, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, KV, G * C, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(block_tables, ctx_len, *operands)
+    return o.reshape(B, KV, G, C, hd)

@@ -1,28 +1,37 @@
-"""Public wrapper around the paged-attention Pallas kernel.
+"""Public wrappers around the paged-attention Pallas kernels.
 
 ``paged_gqa_decode`` is what the serving adapter's fast path calls once per
-layer per decode step.  It handles:
+layer per decode step; ``paged_gqa_prefill`` is its chunked-prefill
+sibling, called once per layer per batched prefill dispatch.  Both handle:
 
 * backend dispatch — the Pallas kernel on TPU (or under ``interpret``/
   ``force_kernel`` for tests), the jnp oracle elsewhere (this CPU
   container), exactly like ``kernels.quant_matmul.ops``;
-* the **self-token merge**: the kernel accumulates only over context pages
-  and returns ``(o, m, l)``; the new token's own (K, V) — which is never
-  read back from the pool — is folded in analytically:
+* for decode, the **self-token merge**: the kernel accumulates only over
+  context pages and returns ``(o, m, l)``; the new token's own (K, V) —
+  which is never read back from the pool — is folded in analytically:
 
       m' = max(m, s_self);  o' = o·e^{m−m'} + v_self·e^{s_self−m'}
       l' = l·e^{m−m'} + e^{s_self−m'};      out = o' / l'
 
   which equals softmax over [context, self] up to fp reassociation, so the
-  fast path needs neither a pre-attention scatter nor a KV concat.
+  fast path needs neither a pre-attention scatter nor a KV concat.  The
+  prefill kernel folds its intra-chunk causal block in as one extra grid
+  step and normalizes in place, so its wrapper only reshapes.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_attention_kernel
-from repro.kernels.paged_attention.ref import paged_gqa_decode_ref
+from repro.kernels.paged_attention.kernel import (
+    paged_attention_kernel,
+    paged_prefill_kernel,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_gqa_decode_ref,
+    paged_gqa_prefill_ref,
+)
 
 
 def on_tpu() -> bool:
@@ -82,3 +91,48 @@ def paged_gqa_decode(
     den = l0 * a_ctx + a_self
     out = num / den[..., None]
     return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_gqa_prefill(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """Chunk-batch causal prefill attention against the physical page pool.
+
+    q (B, C, H, hd) post-RoPE chunk queries (lane b's token t at absolute
+    position ``ctx_len[b] + t``); k_chunk/v_chunk (B, C, KV, hd) the
+    chunk's own post-RoPE K/V (not yet scattered); k/v_pages the full
+    (L, P, ps, KV, hd) pool (+ per-(token, head) scales for int8 pages);
+    block_tables (B, Pa) bucketed to the longest prior context; ctx_len
+    (B,) ragged prior-context lengths.  -> (B, C, H, hd) q.dtype.
+    """
+    if not (on_tpu() or interpret or force_kernel):
+        return paged_gqa_prefill_ref(
+            q, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len,
+            layer=layer, k_scale=k_scale, v_scale=v_scale,
+        )
+
+    B, C, H, hd = q.shape
+    KV = k_chunk.shape[2]
+    if H % KV:
+        raise ValueError(
+            f"n_heads {H} must be a multiple of n_kv_heads {KV}"
+        )
+    G = H // KV
+    qg = q.reshape(B, C, KV, G, hd).transpose(0, 2, 3, 1, 4)
+    o = paged_prefill_kernel(
+        qg, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len,
+        layer=layer, k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+    )  # (B, KV, G, C, hd) normalized fp32
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)

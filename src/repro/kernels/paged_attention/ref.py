@@ -1,11 +1,11 @@
-"""Pure-jnp oracle for paged GQA decode attention.
+"""Pure-jnp oracles for paged GQA attention (decode + chunked prefill).
 
 Gathers exactly the attended pages of one layer from the physical pool
 (advanced indexing — never the whole allocation, never all layers),
-concatenates the new token's own K/V, and runs a plain masked softmax.
-This mirrors the gather-dense adapter math, so it doubles as BOTH the
-parity oracle for the Pallas kernel (tests) and the fast CPU path the
-serving engine dispatches to off-TPU (ops.py).
+concatenates the new token's/chunk's own K/V, and runs a plain masked
+softmax.  This mirrors the gather-dense adapter math, so it doubles as
+BOTH the parity oracle for the Pallas kernels (tests) and the fast CPU
+path the serving engine dispatches to off-TPU (ops.py).
 """
 from __future__ import annotations
 
@@ -64,3 +64,47 @@ def paged_gqa_decode_ref(
     )
     o = jnp.einsum("bkgs,bskd->bkgd", probs, v_all)
     return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def paged_gqa_prefill_ref(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Chunked-prefill GQA attention vs paged prior context + the chunk.
+
+    q (B, C, H, hd) post-RoPE chunk queries; k_chunk/v_chunk (B, C, KV, hd)
+    the chunk's own (post-RoPE) K/V, NOT yet in the pool; k/v_pages
+    (L, P, ps, KV, hd); block_tables (B, Pa); ctx_len (B,) prior-context
+    tokens per lane.  Chunk token t of lane b attends context positions
+    ``< ctx_len[b]`` plus chunk positions ``<= t``.  -> (B, C, H, hd).
+    """
+    B, C, H, hd = q.shape
+    KV = k_chunk.shape[2]
+    G = H // KV
+    kc = _gather_layer(k_pages, k_scale, layer, block_tables)
+    vc = _gather_layer(v_pages, v_scale, layer, block_tables)
+    S = kc.shape[1]
+    neg = jnp.finfo(jnp.float32).min
+    qg = q.reshape(B, C, KV, G, hd).astype(jnp.float32)
+    s_ctx = jnp.einsum("bckgd,bskd->bkgcs", qg, kc) * (hd**-0.5)
+    valid = jnp.arange(S)[None, :] < ctx_len[:, None]  # (B, S)
+    s_ctx = jnp.where(valid[:, None, None, None], s_ctx, neg)
+    s_new = jnp.einsum(
+        "bckgd,btkd->bkgct", qg, k_chunk.astype(jnp.float32)
+    ) * (hd**-0.5)  # (B, KV, G, C, C)
+    causal = jnp.tril(jnp.ones((C, C), bool))
+    s_new = jnp.where(causal, s_new, neg)
+    s = jnp.concatenate([s_ctx, s_new], axis=-1)
+    probs = jax.nn.softmax(s, axis=-1)
+    v_all = jnp.concatenate([vc, v_chunk.astype(jnp.float32)], axis=1)
+    o = jnp.einsum("bkgcs,bskd->bkgcd", probs, v_all)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)

@@ -13,10 +13,15 @@ earlier requests are mid-generation, and decode through the KV-cached
 adapter — for quantized models that is the packed
 ``D⁻¹ → V → quant_matmul → Uᵀ`` path, NOT per-token prefix recompute.
 ``--paged`` decodes in place over the page pool (paged-attention kernel
-path, no per-step dense KV gather); ``--kv-int8`` stores int8 KV pages.
-``--check`` verifies the engine's greedy tokens against the recompute
-reference (or, for lossy int8 pages, against the gather-dense engine
-oracle over the same page contents).
+path, no per-step dense KV gather); ``--paged-prefill`` additionally runs
+each engine tick's prefill chunks as ONE batched cross-request dispatch
+over the pool (chunked-prefill kernel path); ``--prefix-cache`` maps
+previously-seen prompt-prefix pages (hash trie, refcounted copy-on-write)
+into new requests instead of recomputing them; ``--kv-int8`` stores int8
+KV pages.  ``--check`` verifies the engine's greedy tokens against the
+recompute reference (or, for lossy int8 pages, against the gather-dense
+engine oracle over the same page contents) — the oracle always runs the
+dense path.
 
 ``--mesh DP,MP`` serves tensor-parallel over a (data, model) device mesh
 (serve/distributed.py): packed weights shard column/row-parallel, the KV
@@ -70,7 +75,8 @@ def quantized_generate(qm, prompt, gen: int):
     return toks[:, prompt.shape[1]:]
 
 
-def build_engine(adapter, *, max_seq_len, args, paged=None) -> "Engine":
+def build_engine(adapter, *, max_seq_len, args, paged=None,
+                 paged_prefill=None, prefix_cache=None) -> "Engine":
     from repro.serve import Engine, EngineConfig
 
     ecfg = EngineConfig(
@@ -81,6 +87,14 @@ def build_engine(adapter, *, max_seq_len, args, paged=None) -> "Engine":
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
         paged_decode=getattr(args, "paged", False) if paged is None else paged,
+        paged_prefill=(
+            getattr(args, "paged_prefill", False)
+            if paged_prefill is None else paged_prefill
+        ),
+        prefix_cache=(
+            getattr(args, "prefix_cache", False)
+            if prefix_cache is None else prefix_cache
+        ),
         kv_int8=getattr(args, "kv_int8", False),
     )
     return Engine(adapter, ecfg)
@@ -128,6 +142,16 @@ def main(argv=None):
                     help="decode in place over the page pool (paged-"
                          "attention kernel path; no per-step dense KV "
                          "gather) instead of the gather-dense oracle")
+    ap.add_argument("--paged-prefill", action="store_true",
+                    help="prefill as ONE batched cross-request dispatch "
+                         "per engine tick over the page pool (chunked-"
+                         "prefill kernel path) instead of a B=1 "
+                         "gather-dense loop")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="hash-trie prompt-prefix cache over full KV "
+                         "pages: identical prompt prefixes are admitted "
+                         "with their pages mapped (refcounted, copy-on-"
+                         "write), not recomputed")
     ap.add_argument("--kv-int8", action="store_true",
                     help="store KV pages int8 with per-(token, head) scales")
     ap.add_argument("--mesh", default=None, metavar="DP,MP",
@@ -294,18 +318,25 @@ def main(argv=None):
     print(f"[serve] steps={s['steps']} prefill_tokens={s['prefill_tokens']} "
           f"decode_tokens={s['decode_tokens']} evictions={s['evictions']} "
           f"peak_kv_occupancy={s['peak_occupancy']:.0%}")
+    if args.paged_prefill or args.prefix_cache:
+        print(f"[serve] prefill_batch_size={s['prefill_batch_size']} "
+              f"prefix_hit_tokens={s['prefix_hit_tokens']} "
+              f"cached_pages={s['cached_pages']} "
+              f"shared_pages={s['shared_pages']} "
+              f"cow_copies={s['cow_copies']}")
 
     if args.check:
         done = sorted(done, key=lambda r: r.rid)
         engine_toks = np.stack(
             [np.asarray(r.out_tokens, np.int32) for r in done]
         )
-        if args.kv_int8 and not args.paged:
+        if args.kv_int8 and not (args.paged or args.paged_prefill):
             raise SystemExit(
-                "--kv-int8 --check needs --paged: int8 pages are lossy vs "
-                "the dense references, so the only independent oracle is "
-                "the gather-dense engine over the same int8 page contents "
-                "— without --paged that oracle IS the engine under test"
+                "--kv-int8 --check needs --paged (and/or --paged-prefill): "
+                "int8 pages are lossy vs the dense references, so the only "
+                "independent oracle is the gather-dense engine over the "
+                "same int8 page contents — without a paged path that "
+                "oracle IS the engine under test"
             )
         if args.kv_int8:
             # int8 pages are lossy vs the dense references; the oracle is
@@ -320,7 +351,8 @@ def main(argv=None):
                 )
             oracle = build_engine(
                 oracle_adapter, max_seq_len=args.prompt_len + args.gen,
-                args=args, paged=False,
+                args=args, paged=False, paged_prefill=False,
+                prefix_cache=False,
             )
             oref = [
                 oracle.submit(np.asarray(prompts[i]), max_new=args.gen)

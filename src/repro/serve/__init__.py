@@ -3,14 +3,17 @@
 Pieces (each usable on its own):
 
   * :mod:`repro.serve.kv_cache`  — slot-based paged KV pool (admit/extend/
-    evict page accounting + gather/scatter device ops);
+    evict page accounting + gather/scatter device ops) with an optional
+    prompt-prefix cache (hash trie over full pages, refcounted
+    copy-on-write sharing);
   * :mod:`repro.serve.adapter`   — dual-path cached forward over both the
     fp ``Model`` params and a QuIP ``QuantizedModel`` (packed
     ``D⁻¹ → V → quant_matmul → Uᵀ`` path, no per-token recompute):
-    gather-dense reference oracle + fused paged decode that reads the
-    page pool in place (``kernels/paged_attention``);
+    gather-dense reference oracle + fused paged decode AND fused batched
+    cross-request prefill that read the page pool in place
+    (``kernels/paged_attention``);
   * :mod:`repro.serve.scheduler` — request lifecycle + token-budget FCFS
-    scheduling with chunked prefill;
+    scheduling with chunked prefill (one co-batchable group per tick);
   * :mod:`repro.serve.engine`    — per-step batch assembly: new requests
     join the decode batch while others are mid-generation;
   * :mod:`repro.serve.artifacts` — persistent quantized checkpoints

@@ -24,6 +24,14 @@ Two decode paths share the block structure:
     K/V into the donated pool tensors.  No per-step dense KV copy exists
     anywhere in this path.
 
+Prefill has the same split: the gather-dense path runs one ``(1, C)``
+chunk per request, while :meth:`prefill_paged` runs a whole padded
+cross-request chunk batch ``(B, C)`` as one jitted dispatch — projections
+through the ``quant_matmul`` kernel dispatch, causal chunk attention over
+the page pool via ``kernels.paged_attention.paged_gqa_prefill`` (ragged
+per-lane prior-context lengths), and a donated in-place scatter of every
+chunk token's K/V (padded tails land on the scratch page).
+
 Masking uses the same where-set convention as the quantized recompute path
 so cached logits match it bit-for-bit up to matmul reassociation.
 """
@@ -37,7 +45,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
 from repro.core.quantizer import QuantizedLinear
-from repro.kernels.paged_attention.ops import paged_gqa_decode
+from repro.kernels.paged_attention.ops import (
+    paged_gqa_decode,
+    paged_gqa_prefill,
+)
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
 from repro.serve.kv_cache import PagedKVPool, quantize_kv_int8
@@ -98,6 +109,14 @@ class CachedDecoder:
         self._fwd_paged = jax.jit(self._forward_paged, donate_argnums=(6, 7))
         self._fwd_paged_q = jax.jit(
             self._forward_paged_q, donate_argnums=(6, 7, 8, 9)
+        )
+        # fused batched prefill: same donation contract, one dispatch per
+        # engine prefill tick over the whole cross-request chunk batch.
+        self._fwd_prefill = jax.jit(
+            self._forward_prefill_paged, donate_argnums=(6, 7)
+        )
+        self._fwd_prefill_q = jax.jit(
+            self._forward_prefill_paged_q, donate_argnums=(6, 7, 8, 9)
         )
 
     # ---- constructors ---------------------------------------------------
@@ -317,6 +336,107 @@ class CachedDecoder:
         adapters override this with a ``shard_map`` over the model axis so
         each device attends only its local KV-head page slice."""
         return paged_gqa_decode(
+            q, k_new, v_new, pool_k, pool_v, block_tables, ctx_len,
+            layer=layer, k_scale=k_scale, v_scale=v_scale,
+            interpret=self.paged_interpret,
+        )
+
+    # ---- paged batched prefill -------------------------------------------
+
+    def prefill_paged(self, tokens, positions, block_tables, ctx_len,
+                      pages, offs, pool):
+        """Fused cross-request prefill chunk batch against ``pool``.
+
+        tokens/positions (B, C) int32 — lane b carries one request's chunk
+        (front-aligned, zero-padded tail); block_tables (B, Pa) int32
+        bucketed to the longest PRIOR context; ctx_len (B,) int32 prior
+        context per lane (the chunk start); pages/offs (B, C) int32
+        physical address of every chunk token (scratch for padding).
+
+        Mutates ``pool.k``/``pool.v`` (+ scales for int8 pools) via donated
+        buffers and returns logits (B, C, V).  The caller owns the host-
+        side length accounting (``pool.note_span_written``).
+        """
+        args = (
+            self._place(tokens), self._place(positions),
+            self._place(block_tables), self._place(ctx_len),
+            self._place(pages), self._place(offs),
+        )
+        if pool.is_int8:
+            logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                self._fwd_prefill_q(
+                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+                )
+            )
+        else:
+            logits, pool.k, pool.v = self._fwd_prefill(*args, pool.k, pool.v)
+        return logits
+
+    def _prefill_trunk(self, tokens, positions, block_tables, ctx_len,
+                       pool_k, pool_v, k_scale, v_scale):
+        """Embed -> blocks (paged chunk attention) -> logits; returns the
+        chunk's per-layer K/V stacked (L, B, C, KV, hd) for the scatter."""
+        cfg = self.cfg
+        x = L.embed(self.embed, tokens)  # (B, C, D)
+        new_k, new_v = [], []
+        for i, blk in enumerate(self.blocks):
+            x, k, v = self._block_prefill_paged(
+                blk, x, positions, i, pool_k, pool_v, k_scale, v_scale,
+                block_tables, ctx_len,
+            )
+            new_k.append(k)
+            new_v.append(v)
+        x = L.norm_apply(self.final_norm, x, cfg)
+        logits = L.lm_logits(self.embed, x)
+        return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+    def _forward_prefill_paged(self, tokens, positions, block_tables,
+                               ctx_len, pages, offs, pool_k, pool_v):
+        logits, kn, vn = self._prefill_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            None, None,
+        )
+        # kn/vn (L, B, C, KV, hd); pages/offs (B, C) broadcast together
+        pool_k = pool_k.at[:, pages, offs].set(kn.astype(pool_k.dtype))
+        pool_v = pool_v.at[:, pages, offs].set(vn.astype(pool_v.dtype))
+        return logits, pool_k, pool_v
+
+    def _forward_prefill_paged_q(self, tokens, positions, block_tables,
+                                 ctx_len, pages, offs, pool_k, pool_v,
+                                 k_scale, v_scale):
+        logits, kn, vn = self._prefill_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            k_scale, v_scale,
+        )
+        kq, ks = quantize_kv_int8(kn)
+        vq, vs = quantize_kv_int8(vn)
+        pool_k = pool_k.at[:, pages, offs].set(kq)
+        pool_v = pool_v.at[:, pages, offs].set(vq)
+        k_scale = k_scale.at[:, pages, offs].set(ks)
+        v_scale = v_scale.at[:, pages, offs].set(vs)
+        return logits, pool_k, pool_v, k_scale, v_scale
+
+    def _block_prefill_paged(self, blk, x, positions, layer, pool_k, pool_v,
+                             k_scale, v_scale, block_tables, ctx_len):
+        cfg = self.cfg
+        B, C, _ = x.shape
+        h = L.norm_apply(blk["ln1"], x, cfg)
+        q, k, v = self._qkv(blk, h, positions, kernel_proj=True)
+        o = self._paged_prefill_attention(
+            q, k, v, pool_k, pool_v, k_scale, v_scale, block_tables,
+            ctx_len, layer=layer,
+        )
+        o = o.astype(x.dtype).reshape(B, C, cfg.q_dim)
+        x = x + self._proj(blk, "attn.wo", o)
+        return self._mlp(blk, x, kernel_proj=True), k, v
+
+    def _paged_prefill_attention(self, q, k_new, v_new, pool_k, pool_v,
+                                 k_scale, v_scale, block_tables, ctx_len,
+                                 *, layer):
+        """One layer of chunk-batch prefill attention against the pool.
+        Distributed adapters override this with a ``shard_map`` over the
+        model axis, mirroring :meth:`_paged_attention`."""
+        return paged_gqa_prefill(
             q, k_new, v_new, pool_k, pool_v, block_tables, ctx_len,
             layer=layer, k_scale=k_scale, v_scale=v_scale,
             interpret=self.paged_interpret,

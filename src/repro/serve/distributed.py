@@ -20,10 +20,11 @@ Layers the single-device continuous-batching engine over a
     KV-head axis, NEVER on pages: every device owns the full page range
     for its local heads, so block-table indexing resolves locally and
     decode attention moves zero cross-device KV bytes;
-  * **the paged-attention dispatch** — runs under ``shard_map`` over the
-    model axis: each device attends its local KV-head slice of the pool
-    with its local query-head group, and the donated in-place K/V scatter
-    in the same jitted step writes only local pages.
+  * **the paged-attention dispatches** — decode AND batched chunked
+    prefill both run under ``shard_map`` over the model axis: each device
+    attends its local KV-head slice of the pool with its local query-head
+    group, and the donated in-place K/V scatters in the same jitted steps
+    write only local pages.
 
 Everything degrades gracefully: a 1-wide model axis, or an architecture
 whose KV-head count does not divide it, falls back to the replicated
@@ -45,7 +46,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.quantizer import QuantizedLinear
-from repro.kernels.paged_attention.ops import paged_gqa_decode
+from repro.kernels.paged_attention.ops import (
+    paged_gqa_decode,
+    paged_gqa_prefill,
+)
 from repro.runtime.sharding import MeshContext, serving_rules
 from repro.serve.adapter import CachedDecoder
 from repro.serve.kv_cache import PagedKVPool
@@ -242,10 +246,10 @@ class DistributedCachedDecoder(CachedDecoder):
     def make_pool(self, **kw) -> PagedKVPool:
         """Pool with physical pages sharded over KV heads.
 
-        Also (re)wraps the fused decode step with pinned ``out_shardings``
-        so the donated pool buffers come back with the same placement
-        every step — the scatter can never silently drift the pool to a
-        different layout between steps.
+        Also (re)wraps the fused decode AND batched-prefill steps with
+        pinned ``out_shardings`` so the donated pool buffers come back
+        with the same placement every step — the scatters can never
+        silently drift the pool to a different layout between steps.
         """
         pool = PagedKVPool(self.cfg, **kw)
         spec = self.ctx.pspec(POOL_AXES, pool.k.shape)
@@ -262,8 +266,17 @@ class DistributedCachedDecoder(CachedDecoder):
                 donate_argnums=(6, 7, 8, 9),
                 out_shardings=(*out_paged, sc_sh, sc_sh),
             )
+            self._fwd_prefill_q = jax.jit(
+                self._forward_prefill_paged_q,
+                donate_argnums=(6, 7, 8, 9),
+                out_shardings=(*out_paged, sc_sh, sc_sh),
+            )
         self._fwd_paged = jax.jit(
             self._forward_paged, donate_argnums=(6, 7),
+            out_shardings=out_paged,
+        )
+        self._fwd_prefill = jax.jit(
+            self._forward_prefill_paged, donate_argnums=(6, 7),
             out_shardings=out_paged,
         )
         self._pool_sharded = spec[3] is not None
@@ -309,6 +322,54 @@ class DistributedCachedDecoder(CachedDecoder):
 
         def local_q(q, kn, vn, kp, vp, ks, vs, bt, cl):
             return paged_gqa_decode(
+                q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=ks,
+                v_scale=vs, interpret=interpret,
+            )
+
+        f = shard_map(
+            local_q, mesh=self.mesh,
+            in_specs=(h_spec, h_spec, h_spec, kv_spec, kv_spec, sc_spec,
+                      sc_spec, P(), P()),
+            out_specs=h_spec, check_rep=False,
+        )
+        return f(q, k_new, v_new, pool_k, pool_v, k_scale, v_scale,
+                 block_tables, ctx_len)
+
+    def _paged_prefill_attention(self, q, k_new, v_new, pool_k, pool_v,
+                                 k_scale, v_scale, block_tables, ctx_len,
+                                 *, layer):
+        """Chunk-batch prefill attention under ``shard_map``: per shard it
+        is the single-device prefill kernel over the local KV-head page
+        slice (local chunk queries/K/V ride the matching head group), so
+        batched prefill moves no KV bytes across devices.  Falls back to
+        the replicated path when the pool could not shard."""
+        if not self._pool_sharded:
+            return super()._paged_prefill_attention(
+                q, k_new, v_new, pool_k, pool_v, k_scale, v_scale,
+                block_tables, ctx_len, layer=layer,
+            )
+        h_spec = P(None, None, "model", None)  # (B, C, heads, hd)
+        kv_spec = P(None, None, None, "model", None)
+        interpret = self.paged_interpret
+
+        if k_scale is None:
+            def local(q, kn, vn, kp, vp, bt, cl):
+                return paged_gqa_prefill(
+                    q, kn, vn, kp, vp, bt, cl, layer=layer,
+                    interpret=interpret,
+                )
+
+            f = shard_map(
+                local, mesh=self.mesh,
+                in_specs=(h_spec, h_spec, h_spec, kv_spec, kv_spec, P(), P()),
+                out_specs=h_spec, check_rep=False,
+            )
+            return f(q, k_new, v_new, pool_k, pool_v, block_tables, ctx_len)
+
+        sc_spec = P(None, None, None, "model")
+
+        def local_q(q, kn, vn, kp, vp, ks, vs, bt, cl):
+            return paged_gqa_prefill(
                 q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=ks,
                 v_scale=vs, interpret=interpret,
             )

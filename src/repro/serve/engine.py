@@ -8,10 +8,12 @@ Each :meth:`Engine.step`:
   3. ensures every decode lane has a page for its next token, evicting the
      newest running sequence under page pressure (evicted requests requeue
      and later re-prefill their prompt + generated prefix);
-  4. executes prefill chunks (B=1, fixed chunk width) and one batched
-     decode forward (fixed ``n_slots`` lanes, per-lane positions), writing
-     new K/V into the pool and appending tokens — greedy by default, or
-     per-request temperature/top-p sampling with stop-token support
+  4. executes the step's prefill group — one batched paged dispatch over
+     all planned chunks (``paged_prefill``), or a B=1 gather-dense loop
+     (the oracle) — and one batched decode forward (fixed ``n_slots``
+     lanes, per-lane positions), writing new K/V into the pool and
+     appending tokens — greedy by default, or per-request temperature/
+     top-p sampling with stop-token support
      (:class:`repro.serve.scheduler.SamplingParams`).
 
 Decode runs one of two adapter paths:
@@ -26,6 +28,17 @@ Decode runs one of two adapter paths:
     tables are bucketed to the next power of two of the *attended* page
     count, so step cost tracks live context, not allocation (a handful of
     compiles per pool geometry, reused across steps).
+
+Prefill mirrors the decode split (``EngineConfig.paged_prefill``): the
+oracle path re-gathers a dense context window per B=1 chunk, while the
+paged path assembles every chunk the scheduler planned this tick into one
+padded ``(B, C)`` cross-request batch — lanes bucketed to a power of two,
+block tables bucketed to the longest prior context — and runs it as a
+single fused dispatch with a donated in-place scatter.  With
+``EngineConfig.prefix_cache`` the pool additionally maps full pages of
+previously-seen prompt prefixes into newly admitted slots (refcounted,
+copy-on-write), so shared system prompts/few-shot headers are admitted at
+``prefill_pos > 0`` and never recomputed.
 
 All device calls are shape-static per bucket: new requests join mid-flight
 without recompilation.
@@ -62,6 +75,8 @@ class EngineConfig:
     prefill_chunk: int = 32
     record_logits: bool = False  # keep per-emission logits (tests/--check)
     paged_decode: bool = False  # decode in place over the page pool
+    paged_prefill: bool = False  # batched cross-request prefill over the pool
+    prefix_cache: bool = False  # map cached prompt-prefix pages on admit
     kv_int8: bool = False  # int8 KV pages + per-(token, head) scales
 
     @property
@@ -79,6 +94,7 @@ class Engine:
         self.adapter = adapter
         self.ecfg = ecfg
         self.paged = ecfg.paged_decode or adapter.paged
+        self.paged_prefill = ecfg.paged_prefill
         if ecfg.kv_int8:
             dtype = jnp.int8
         # the adapter owns pool construction so distributed adapters can
@@ -89,6 +105,7 @@ class Engine:
             n_slots=ecfg.n_slots,
             max_pages_per_seq=ecfg.pages_per_seq,
             dtype=dtype,
+            prefix_cache=ecfg.prefix_cache,
         )
         self.scheduler = TokenBudgetFCFS(
             token_budget=ecfg.token_budget, prefill_chunk=ecfg.prefill_chunk
@@ -100,6 +117,9 @@ class Engine:
             "decode_tokens": 0,
             "prefill_tokens": 0,
             "evictions": 0,
+            "prefill_batches": 0,
+            "prefill_batch_size": 0,  # widest co-batched prefill group seen
+            "prefix_hit_tokens": 0,  # prompt tokens admitted from the cache
         }
         self._t0: Optional[float] = None
 
@@ -190,12 +210,20 @@ class Engine:
         now = self.now()
         self.scheduler.admit_arrivals(now)
         plan = self.scheduler.plan(self.running, self.pool)
+        self.stats["prefix_hit_tokens"] += plan.prefix_hit_tokens
         decode = self._ensure_decode_pages(plan)
+        # drop chunks whose request the page-ensure pass evicted
+        chunks = [
+            (r, n) for r, n in plan.prefill
+            if r.state is RequestState.PREFILL
+        ]
         worked = False
-        for req, n in plan.prefill:
-            if req.state is not RequestState.PREFILL:
-                continue  # evicted by the page-ensure pass above
-            self._run_prefill_chunk(req, n, now)
+        if chunks:
+            if self.paged_prefill:
+                self._run_prefill_batch(chunks, now)
+            else:
+                for req, n in chunks:
+                    self._run_prefill_chunk(req, n, now)
             worked = True
         if decode:
             self._run_decode(decode, now)
@@ -262,6 +290,25 @@ class Engine:
         self.running.remove(req)
         self.finished.append(req)
 
+    def _after_prefill_chunk(self, req: Request, n: int, last_logits,
+                             now: float) -> None:
+        """Shared chunk epilogue: advance, register cached prompt pages,
+        and emit the first generated token when the prefix completes."""
+        req.prefill_pos += n
+        self.stats["prefill_tokens"] += n
+        if self.pool.prefix_cache:
+            covered = min(req.prefill_pos, len(req.prompt))
+            self.pool.register_prefix(req.slot, req.prompt[:covered])
+        if req.prefill_pos == len(req.prefix):
+            req.state = RequestState.DECODE
+            last = np.asarray(last_logits)
+            req.emit(
+                self._select_token(req, last), now,
+                last if self.ecfg.record_logits else None,
+            )
+            if req.done:
+                self._finish(req)
+
     def _run_prefill_chunk(self, req: Request, n: int, now: float) -> None:
         prefix = req.prefix
         start = req.prefill_pos
@@ -278,17 +325,43 @@ class Engine:
             jnp.asarray([start], jnp.int32),
         )
         self.pool.write_span(req.slot, start, n, k_new[:, 0], v_new[:, 0])
-        req.prefill_pos = start + n
-        self.stats["prefill_tokens"] += n
-        if req.prefill_pos == len(prefix):
-            req.state = RequestState.DECODE
-            last = np.asarray(logits[0, n - 1])
-            req.emit(
-                self._select_token(req, last), now,
-                last if self.ecfg.record_logits else None,
-            )
-            if req.done:
-                self._finish(req)
+        self._after_prefill_chunk(req, n, logits[0, n - 1], now)
+
+    def _run_prefill_batch(self, chunks, now: float) -> None:
+        """One fused dispatch over the step's whole co-batchable prefill
+        group: lanes padded to a power of two (compile reuse across group
+        sizes), chunk width fixed at ``prefill_chunk``, block tables
+        bucketed to the longest prior context in the batch.  Padded lanes
+        and padded chunk tails scatter to the scratch page."""
+        C = self.ecfg.prefill_chunk
+        # lane bucketing shares page_bucket so the pow2 rounding has one
+        # source; group size is bounded by the token budget, never by it
+        B = page_bucket(len(chunks), 1 << 16)
+        tokens = np.zeros((B, C), np.int32)
+        positions = np.tile(np.arange(C, dtype=np.int32), (B, 1))
+        ctx_len = np.zeros((B,), np.int32)
+        slots: list[Optional[int]] = [None] * B
+        starts = [0] * B
+        ns = [0] * B
+        for b, (r, n) in enumerate(chunks):
+            start = r.prefill_pos
+            tokens[b, :n] = r.prefix[start : start + n]
+            positions[b] += start
+            ctx_len[b] = start
+            slots[b], starts[b], ns[b] = r.slot, start, n
+        pages, offs = self.pool.span_addresses(slots, starts, ns, C)
+        bt = self.pool.block_table(slots)
+        bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
+        logits = self.adapter.prefill_paged(
+            tokens, positions, bt, ctx_len, pages, offs, self.pool
+        )
+        self.pool.note_span_written(slots, starts, ns)
+        self.stats["prefill_batches"] += 1
+        self.stats["prefill_batch_size"] = max(
+            self.stats["prefill_batch_size"], len(chunks)
+        )
+        for b, (r, n) in enumerate(chunks):
+            self._after_prefill_chunk(r, n, logits[b, n - 1], now)
 
     def _active_pages(self, max_ctx: int) -> int:
         """Pages to attend this step: covers the longest live context,
@@ -348,5 +421,10 @@ class Engine:
             "peak_pages_in_use": self.pool.peak_pages_in_use,
             "peak_occupancy": self.pool.peak_pages_in_use
             / max(1, self.pool.n_pages - 1),
+            # page-refcount gauges (non-trivial only with the prefix cache)
+            "shared_pages": self.pool.shared_pages,
+            "cached_pages": self.pool.cached_pages,
+            "max_page_ref": self.pool.max_page_ref,
+            "cow_copies": self.pool.cow_copies,
             "finished": len(self.finished),
         }

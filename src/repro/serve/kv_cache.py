@@ -21,11 +21,26 @@ per-(token, head) on scatter (symmetric, scale = max|x|/127, matching
 ``models.layers._quantize_kv``) with fp32 scales in parallel
 ``(L, P, ps, KV)`` tensors.  ``gather`` dequantizes; the paged-attention
 kernel reads the int8 pages + scales directly (1 byte/elem of KV traffic).
+
+Prefix caching (``prefix_cache=True``): every physical page carries a
+refcount, and a hash trie over FULL pages of prompt tokens maps token
+blocks to pages already holding their K/V.  ``admit(tokens=...)`` walks
+the trie and maps matched pages into the new slot (refcount + 1) instead
+of claiming fresh ones, so identical prompt prefixes (system prompts,
+few-shot headers) are never recomputed; the engine starts prefill at
+``length(slot)``.  Shared pages are immutable: any write resolving into a
+page with refcount > 1 copies it first (copy-on-write), and a full-prefix
+hit maps a private copy of its last page at admission so the engine can
+recompute the final prompt token (its logits seed generation) in place.
+The trie holds its own refcount on cached pages, so they survive the
+owner's release and are reclaimed LRU-first only under page pressure
+(DESIGN.md §9).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+from collections import OrderedDict
 from typing import Optional
 
 import jax
@@ -81,6 +96,12 @@ def _scatter_q(phys: jax.Array, scales: jax.Array, pages: jax.Array,
     return phys.at[:, pages, offs].set(q), scales.at[:, pages, offs].set(sc)
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_page(phys: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Copy one physical page across all layers: phys (L, P, ...)."""
+    return phys.at[:, dst].set(phys[:, src])
+
+
 @jax.jit
 def _gather(phys: jax.Array, block_tables: jax.Array) -> jax.Array:
     """phys (L, P, ps, KV, hd), block_tables (B, Pmax) ->
@@ -108,6 +129,16 @@ class _Slot:
     length: int  # valid tokens written
 
 
+@dataclasses.dataclass
+class _PrefixNode:
+    """One full page of cached prompt tokens in the prefix trie."""
+
+    key: tuple  # (parent node id, token-block bytes) — the trie dict key
+    page: int  # physical page holding this block's K/V
+    parent: int  # parent node id (0 = root)
+    children: set = dataclasses.field(default_factory=set)  # child node ids
+
+
 class PagedKVPool:
     """Page accounting (host) + paged K/V storage (device).
 
@@ -125,6 +156,7 @@ class PagedKVPool:
         n_slots: int,
         max_pages_per_seq: int,
         dtype=None,
+        prefix_cache: bool = False,
     ):
         if n_pages < 2:
             raise ValueError("need >= 2 pages (page 0 is reserved scratch)")
@@ -148,6 +180,16 @@ class PagedKVPool:
         self._free_slots = list(range(n_slots - 1, -1, -1))
         self._slots: dict[int, _Slot] = {}
         self.peak_pages_in_use = 0
+        # ---- prefix cache state (inert when prefix_cache is False) ----
+        self.prefix_cache = bool(prefix_cache)
+        self._page_ref = np.zeros(n_pages, np.int32)  # 0 = free/scratch
+        self._trie: OrderedDict[tuple, int] = OrderedDict()  # key -> node id
+        self._nodes: dict[int, _PrefixNode] = {
+            0: _PrefixNode(key=(), page=0, parent=0)  # root (no page)
+        }
+        self._next_node = 1
+        self.cow_copies = 0  # pages copied before a write (COW)
+        self.prefix_hit_pages = 0  # pages mapped from the trie at admit
 
     # ---- accounting -----------------------------------------------------
 
@@ -169,16 +211,67 @@ class PagedKVPool:
             and pages_needed(n_tokens, self.page_size) <= self.n_pages - 1
         )
 
-    def admit(self, n_tokens: int) -> Optional[int]:
-        need = max(1, pages_needed(n_tokens, self.page_size))
-        if not self._free_slots or need > len(self._free_pages):
+    def _claim(self) -> int:
+        page = self._free_pages.pop()
+        self._page_ref[page] = 1
+        return page
+
+    def _decref(self, page: int) -> None:
+        self._page_ref[page] -= 1
+        if self._page_ref[page] == 0:
+            self._free_pages.append(page)
+
+    def _available(self, need: int) -> bool:
+        """Whether ``need`` pages can be produced, reclaiming cache-only
+        pages (LRU-first) if the free list alone cannot cover it."""
+        if need <= len(self._free_pages):
+            return True
+        return self._reclaim(need - len(self._free_pages))
+
+    def admit(self, n_tokens: int, tokens=None) -> Optional[int]:
+        """Claim a slot + pages for a sequence of ``n_tokens``.
+
+        With the prefix cache enabled and ``tokens`` (the request's prompt
+        prefix, int32) provided, full leading pages found in the trie are
+        mapped shared (refcount + 1) instead of claimed, and the slot's
+        ``length`` starts at the cached token count — the caller resumes
+        prefill there.  A hit covering the WHOLE sequence maps a private
+        copy of its last page and caps ``length`` at ``n_tokens - 1``: the
+        engine must still compute (and rewrite, in place of the copy) the
+        final token, whose logits seed generation.
+        """
+        need_total = max(1, pages_needed(n_tokens, self.page_size))
+        if not self._free_slots or need_total > self.max_pages_per_seq:
             return None
-        if need > self.max_pages_per_seq:
+        shared: list[int] = []
+        if self.prefix_cache and tokens is not None:
+            shared = [
+                self._nodes[nid].page
+                for nid in self._prefix_lookup(np.asarray(tokens, np.int32))
+            ]
+            shared = shared[:need_total]
+        full_hit = len(shared) * self.page_size >= n_tokens
+        fresh = need_total - len(shared) + (1 if full_hit else 0)
+        pages = []
+        for pg in shared:  # pin BEFORE any reclaim can free cache-only pages
+            self._page_ref[pg] += 1
+            pages.append(pg)
+        if not self._available(fresh):
+            for pg in shared:
+                self._decref(pg)  # trie still holds one ref -> never frees
             return None
         slot = self._free_slots.pop()
-        self._slots[slot] = _Slot(
-            pages=[self._free_pages.pop() for _ in range(need)], length=0
-        )
+        if full_hit:
+            # copy-on-admit: the engine will rewrite this page's final
+            # token, and shared pages are immutable
+            last = pages.pop()
+            pages.append(self._copy_into_fresh(last))
+            self._page_ref[last] -= 1
+        while len(pages) < need_total:
+            pages.append(self._claim())
+        cached_len = min(len(shared) * self.page_size, n_tokens - 1)
+        self._slots[slot] = _Slot(pages=pages, length=cached_len)
+        self.prefix_hit_pages += len(shared)
         self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
         return slot
 
@@ -188,23 +281,143 @@ class PagedKVPool:
         need = pages_needed(new_len, self.page_size) - len(st.pages)
         if need <= 0:
             return True
-        if (
-            need > len(self._free_pages)
-            or len(st.pages) + need > self.max_pages_per_seq
-        ):
+        if len(st.pages) + need > self.max_pages_per_seq:
+            return False
+        if not self._available(need):
             return False
         for _ in range(need):
-            st.pages.append(self._free_pages.pop())
+            st.pages.append(self._claim())
         self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
         return True
 
     def release(self, slot: int) -> None:
         st = self._slots.pop(slot)
-        self._free_pages.extend(st.pages)
+        for page in st.pages:
+            self._decref(page)
         self._free_slots.append(slot)
 
     def length(self, slot: int) -> int:
         return self._slots[slot].length
+
+    # ---- prefix cache ---------------------------------------------------
+
+    def _page_key(self, parent: int, tokens: np.ndarray, i: int) -> tuple:
+        ps = self.page_size
+        return (parent, tokens[i * ps : (i + 1) * ps].tobytes())
+
+    def _prefix_lookup(self, tokens: np.ndarray) -> list[int]:
+        """Longest chain of cached full pages matching ``tokens``; returns
+        trie node ids (root excluded) and refreshes their LRU position."""
+        out: list[int] = []
+        parent = 0
+        for i in range(len(tokens) // self.page_size):
+            key = self._page_key(parent, tokens, i)
+            nid = self._trie.get(key)
+            if nid is None:
+                break
+            self._trie.move_to_end(key)
+            out.append(nid)
+            parent = nid
+        return out
+
+    def register_prefix(self, slot: int, tokens) -> None:
+        """Insert the slot's fully-written leading pages of ``tokens`` into
+        the trie.  Each inserted node takes its own refcount on the page,
+        so cached K/V outlives the owning sequence; re-registering an
+        already-cached chain is a cheap no-op walk."""
+        if not self.prefix_cache:
+            return
+        tokens = np.asarray(tokens, np.int32)
+        st = self._slots[slot]
+        parent = 0
+        for i in range(min(len(tokens), st.length) // self.page_size):
+            key = self._page_key(parent, tokens, i)
+            nid = self._trie.get(key)
+            if nid is None:
+                page = st.pages[i]
+                nid = self._next_node
+                self._next_node += 1
+                self._trie[key] = nid
+                self._nodes[nid] = _PrefixNode(
+                    key=key, page=page, parent=parent
+                )
+                self._nodes[parent].children.add(nid)
+                self._page_ref[page] += 1
+            parent = nid
+
+    def _remove_node(self, nid: int) -> None:
+        node = self._nodes.pop(nid)
+        del self._trie[node.key]
+        self._nodes[node.parent].children.discard(nid)
+        self._decref(node.page)
+
+    def _reclaim(self, need: int) -> bool:
+        """Free ``need`` pages by dropping cache-only trie leaves —
+        entries whose page no live slot maps (refcount 1) and that have no
+        children — oldest (LRU) first.  Dropping a leaf may expose its
+        parent; loop until satisfied or stuck."""
+        if not self.prefix_cache or need <= 0:
+            return need <= 0
+        freed = 0
+        progress = True
+        while freed < need and progress:
+            progress = False
+            for key, nid in list(self._trie.items()):
+                node = self._nodes[nid]
+                if node.children or self._page_ref[node.page] != 1:
+                    continue
+                self._remove_node(nid)
+                freed += 1
+                progress = True
+                if freed >= need:
+                    break
+        return freed >= need
+
+    def _copy_into_fresh(self, src: int) -> int:
+        """Claim a free page and device-copy ``src`` into it (all layers)."""
+        dst = self._claim()
+        s, d = jnp.int32(src), jnp.int32(dst)
+        self.k = _copy_page(self.k, s, d)
+        self.v = _copy_page(self.v, s, d)
+        if self.is_int8:
+            self.k_scale = _copy_page(self.k_scale, s, d)
+            self.v_scale = _copy_page(self.v_scale, s, d)
+        self.cow_copies += 1
+        return dst
+
+    def _ensure_private(self, slot: int, logical_page: int) -> int:
+        """Copy-on-write guard: writes never mutate a shared page.  If the
+        slot's logical page is mapped by anyone else (refcount > 1), swap
+        in a private copy first."""
+        st = self._slots[slot]
+        page = st.pages[logical_page]
+        if self._page_ref[page] <= 1:
+            return page
+        if not self._available(1):
+            raise RuntimeError(
+                "copy-on-write needs a free page but the pool is exhausted "
+                "(evict a sequence or grow n_pages)"
+            )
+        dst = self._copy_into_fresh(page)
+        st.pages[logical_page] = dst
+        self._page_ref[page] -= 1
+        return dst
+
+    # ---- gauges ---------------------------------------------------------
+
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently mapped by more than one owner."""
+        return int(np.sum(self._page_ref > 1))
+
+    @property
+    def cached_pages(self) -> int:
+        """Full prompt pages resident in the prefix trie."""
+        return len(self._trie)
+
+    @property
+    def max_page_ref(self) -> int:
+        return int(self._page_ref.max())
 
     @property
     def is_int8(self) -> bool:
@@ -264,12 +477,53 @@ class PagedKVPool:
     ) -> tuple[np.ndarray, np.ndarray]:
         """Physical (pages, offsets) int32 for one token per lane; ``None``
         lanes resolve to the scratch page.  Feeds the fused decode dispatch
-        (adapter scatters in place) — pair with :meth:`note_written`."""
+        (adapter scatters in place) — pair with :meth:`note_written`.
+        Write-intent: shared target pages are copy-on-write resolved."""
         pages = np.zeros(len(slot_ids), np.int32)
         offs = np.zeros(len(slot_ids), np.int32)
         for b, (s, p) in enumerate(zip(slot_ids, positions)):
+            if s is not None:
+                self._ensure_private(s, p // self.page_size)
             pages[b], offs[b] = self._addr(s, p)
         return pages, offs
+
+    def span_addresses(
+        self,
+        slot_ids: list[Optional[int]],
+        starts: list[int],
+        n_valids: list[int],
+        width: int,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Physical (pages, offsets), each (B, width) int32, for one prefill
+        chunk per lane: lane b's tokens land at absolute positions
+        ``starts[b] .. starts[b] + n_valids[b] - 1``; the padded tail (and
+        ``None`` lanes) resolves to the scratch page.  Feeds the fused
+        batched-prefill dispatch — pair with :meth:`note_span_written`.
+        Write-intent: shared target pages are copy-on-write resolved."""
+        B = len(slot_ids)
+        pages = np.zeros((B, width), np.int32)
+        offs = np.zeros((B, width), np.int32)
+        for b, (s, start, n) in enumerate(zip(slot_ids, starts, n_valids)):
+            if s is None or n <= 0:
+                continue
+            for lp in range(
+                start // self.page_size, (start + n - 1) // self.page_size + 1
+            ):
+                self._ensure_private(s, lp)
+            for t in range(n):
+                pages[b, t], offs[b, t] = self._addr(s, start + t)
+        return pages, offs
+
+    def note_span_written(
+        self, slot_ids: list[Optional[int]], starts: list[int],
+        n_valids: list[int],
+    ) -> None:
+        """Host-side length accounting for prefill chunks a fused device
+        step already scattered into the pool."""
+        for s, start, n in zip(slot_ids, starts, n_valids):
+            if s is not None and n > 0:
+                st = self._slots[s]
+                st.length = max(st.length, start + n)
 
     def note_written(
         self, slot_ids: list[Optional[int]], positions: list[int]
@@ -317,11 +571,9 @@ class PagedKVPool:
     ) -> None:
         """Scatter a prefill chunk: k_new/v_new (L, T, KV, hd); the first
         ``n_valid`` tokens land at positions start..start+n_valid-1, the
-        padded tail goes to the scratch page."""
+        padded tail goes to the scratch page.  Shared target pages are
+        copy-on-write resolved."""
         T = k_new.shape[1]
-        pages = np.zeros(T, np.int32)
-        offs = np.zeros(T, np.int32)
-        for t in range(n_valid):
-            pages[t], offs[t] = self._addr(slot, start + t)
-        self._scatter_kv(pages, offs, k_new, v_new)
+        pages, offs = self.span_addresses([slot], [start], [n_valid], T)
+        self._scatter_kv(pages[0], offs[0], k_new, v_new)
         self._slots[slot].length = max(self._slots[slot].length, start + n_valid)

@@ -127,7 +127,14 @@ class Request:                    # list.remove/in on running queues
 @dataclasses.dataclass
 class StepPlan:
     decode: list  # Requests in DECODE taking one token this step
-    prefill: list  # (Request, n_tokens) chunks, in execution order
+    # One CO-BATCHABLE prefill group: (Request, n_tokens) chunks, each
+    # request at most once, every chunk <= prefill_chunk wide — the engine
+    # executes the whole group as a single padded cross-request dispatch
+    # on the paged-prefill path (or a B=1 loop on the oracle path).
+    prefill: list
+    # prompt tokens admission skipped this step via prefix-cache hits
+    # (they consumed no token budget and will never be recomputed)
+    prefix_hit_tokens: int = 0
 
 
 class TokenBudgetFCFS:
@@ -165,7 +172,9 @@ class TokenBudgetFCFS:
         decode = [r for r in running if r.state is RequestState.DECODE]
         budget = self.token_budget - len(decode)
         prefill: list[tuple[Request, int]] = []
-        # continue sequences already mid-prefill (oldest first)
+        hit_tokens = 0
+        # continue sequences already mid-prefill (oldest first); every
+        # chunk joins the same co-batchable group as this step's admissions
         for r in sorted(
             (r for r in running if r.state is RequestState.PREFILL),
             key=lambda r: (r.arrival, r.rid),
@@ -176,18 +185,23 @@ class TokenBudgetFCFS:
             if n > 0:
                 prefill.append((r, n))
                 budget -= n
-        # admit new requests while pages + budget allow (strict FCFS)
+        # admit new requests while pages + budget allow (strict FCFS);
+        # prefix-cache hits start prefill past the cached tokens, which
+        # therefore never charge the budget
         while budget > 0 and self.queue:
             r = self.queue[0]
-            slot = pool.admit(len(r.prefix))
+            slot = pool.admit(len(r.prefix), tokens=r.prefix)
             if slot is None:
                 break
             self.queue.popleft()
             r.slot = slot
             r.state = RequestState.PREFILL
-            r.prefill_pos = 0
+            r.prefill_pos = pool.length(slot)
+            hit_tokens += r.prefill_pos
             running.append(r)
-            n = min(self.prefill_chunk, len(r.prefix), budget)
+            n = min(self.prefill_chunk, len(r.prefix) - r.prefill_pos, budget)
             prefill.append((r, n))
             budget -= n
-        return StepPlan(decode=decode, prefill=prefill)
+        return StepPlan(
+            decode=decode, prefill=prefill, prefix_hit_tokens=hit_tokens
+        )

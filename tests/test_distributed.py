@@ -255,6 +255,62 @@ def test_tp_engine_eviction_token_parity(mesh):
         np.testing.assert_array_equal(a, b)
 
 
+def test_tp_engine_batched_prefill_token_parity(mesh):
+    """Batched paged prefill under shard_map (chunk attention over the
+    KV-head-sharded pool) emits the single-device engine's exact tokens."""
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=3).tokens
+    _, t0 = _run_engine(plain, prompts, 6, paged_prefill=True)
+    eng, t1 = _run_engine(dist, prompts, 6, paged_prefill=True)
+    assert eng.stats["prefill_batches"] > 0
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_batched_prefill_int8_token_parity(mesh):
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=9,
+                               seed=8).tokens
+    _, t0 = _run_engine(plain, prompts, 5, paged_prefill=True, kv_int8=True)
+    _, t1 = _run_engine(dist, prompts, 5, paged_prefill=True, kv_int8=True)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_prefix_cache_token_parity(mesh):
+    """Prefix-cache hits over the sharded pool: the COW page copy and
+    shared-page mapping are layout-preserving (host accounting is device-
+    agnostic), so TP serving with prefix caching matches single-device."""
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    base = make_calibration(cfg.vocab, n_segments=1, seg_len=8, seed=5).tokens
+    prompts = np.tile(np.asarray(base), (3, 1))  # 8 tokens == 2 full pages
+
+    def run(adapter):
+        engine = Engine(adapter, EngineConfig(
+            max_seq_len=prompts.shape[1] + 5, n_slots=4, page_size=4,
+            token_budget=32, prefill_chunk=8, paged_decode=True,
+            paged_prefill=True, prefix_cache=True,
+        ))
+        reqs = [
+            engine.submit(np.asarray(p), max_new=5, arrival=0.2 * i)
+            for i, p in enumerate(prompts)
+        ]
+        engine.run()
+        return engine, [np.asarray(r.out_tokens) for r in reqs]
+
+    e0, t0 = run(plain)
+    e1, t1 = run(dist)
+    for a, b in zip(t0, t1):
+        np.testing.assert_array_equal(a, b)
+    s0, s1 = e0.summary(), e1.summary()
+    assert s1["prefix_hit_tokens"] == s0["prefix_hit_tokens"] > 0
+    assert s1["cow_copies"] == s0["cow_copies"] >= 1  # copy-on-admit ran
+
+
 def test_indivisible_kv_heads_fall_back_replicated(quantized_smoke):
     """A model axis the KV-head count cannot divide degrades to the
     replicated pool + single-device attention math — same tokens, no

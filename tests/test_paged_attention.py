@@ -1,8 +1,8 @@
-"""Paged-attention kernel parity sweeps: interpret-mode Pallas kernel
-(+ self-token merge epilogue) vs the dense gather oracle, across ragged
-context lengths, page-boundary-straddling contexts, GQA group sizes, and
-int8 pages — plus the ValueError shape-check contract for the Pallas
-kernel entry points (usable errors under ``python -O``)."""
+"""Paged-attention kernel parity sweeps: interpret-mode Pallas kernels
+(decode + chunked prefill) vs the dense gather oracles, across ragged
+context lengths, page-boundary-straddling contexts/chunks, GQA group
+sizes, and int8 pages — plus the ValueError shape-check contract for the
+Pallas kernel entry points (usable errors under ``python -O``)."""
 from __future__ import annotations
 
 import jax
@@ -14,6 +14,9 @@ from repro.kernels.paged_attention import (
     paged_attention_kernel,
     paged_gqa_decode,
     paged_gqa_decode_ref,
+    paged_gqa_prefill,
+    paged_gqa_prefill_ref,
+    paged_prefill_kernel,
 )
 
 
@@ -135,8 +138,127 @@ def test_epilogue_self_attention_dominates_empty_context():
 
 
 # ---------------------------------------------------------------------------
+# Chunked-prefill kernel parity (interpret mode) vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def _setup_prefill(
+    *, L=2, P=9, ps=4, KV=2, G=2, hd=16, B=3, Pa=3, C=5, int8=False, seed=0
+):
+    q, kn, vn, kp, vp, bt, k_sc, v_sc = _setup(
+        L=L, P=P, ps=ps, KV=KV, G=G, hd=hd, B=B, Pa=Pa, int8=int8, seed=seed
+    )
+    ks = jax.random.split(jax.random.PRNGKey(seed + 100), 3)
+    H = KV * G
+    qc = jax.random.normal(ks[0], (B, C, H, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, C, KV, hd), jnp.float32) * 0.5
+    vc = jax.random.normal(ks[2], (B, C, KV, hd), jnp.float32) * 0.5
+    return qc, kc, vc, kp, vp, bt, k_sc, v_sc
+
+
+def _both_prefill(q, kc, vc, kp, vp, bt, cl, layer, k_sc=None, v_sc=None):
+    out_k = paged_gqa_prefill(
+        q, kc, vc, kp, vp, bt, cl, layer=layer, k_scale=k_sc, v_scale=v_sc,
+        interpret=True,
+    )
+    out_r = paged_gqa_prefill_ref(
+        q, kc, vc, kp, vp, bt, cl, layer=layer, k_scale=k_sc, v_scale=v_sc,
+    )
+    np.testing.assert_allclose(
+        np.asarray(out_k), np.asarray(out_r), rtol=1e-5, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("G", [1, 2, 4])
+def test_prefill_kernel_matches_oracle_gqa_groups(G):
+    q, kc, vc, kp, vp, bt, *_ = _setup_prefill(G=G, seed=G)
+    cl = jnp.array([7, 4, 11], jnp.int32)  # ragged, mid-page
+    for layer in range(kp.shape[0]):
+        _both_prefill(q, kc, vc, kp, vp, bt, cl, layer)
+
+
+def test_prefill_kernel_ragged_and_empty_contexts():
+    """Fresh admissions (ctx 0), page-edge starts, one past the edge, and
+    chunks straddling a page boundary mid-batch."""
+    q, kc, vc, kp, vp, bt, *_ = _setup_prefill(ps=4, Pa=3, C=6, seed=11)
+    for cl in ([0, 0, 0], [4, 8, 12], [5, 9, 1], [0, 3, 11]):
+        _both_prefill(q, kc, vc, kp, vp, bt, jnp.asarray(cl, jnp.int32), 1)
+
+
+def test_prefill_kernel_chunk_wider_than_page():
+    """A chunk spanning multiple pages' worth of tokens (C > ps) keeps its
+    intra-chunk causal structure."""
+    q, kc, vc, kp, vp, bt, *_ = _setup_prefill(ps=4, Pa=4, P=17, C=9, seed=2)
+    cl = jnp.array([3, 0, 7], jnp.int32)
+    _both_prefill(q, kc, vc, kp, vp, bt, cl, 0)
+
+
+def test_prefill_kernel_int8_pages():
+    q, kc, vc, kp, vp, bt, k_sc, v_sc = _setup_prefill(int8=True, seed=5)
+    cl = jnp.array([6, 2, 9], jnp.int32)
+    _both_prefill(q, kc, vc, kp, vp, bt, cl, 0, k_sc, v_sc)
+
+
+def test_prefill_kernel_single_token_chunk_matches_decode():
+    """A C=1 chunk is exactly a decode step: the prefill kernel's causal
+    block degenerates to the decode epilogue's self-token merge."""
+    q, kn, vn, kp, vp, bt, *_ = _setup(seed=9)
+    cl = jnp.array([7, 4, 11], jnp.int32)
+    dec = paged_gqa_decode(
+        q, kn, vn, kp, vp, bt, cl, layer=0, interpret=True
+    )
+    pre = paged_gqa_prefill(
+        q[:, None], kn[:, None], vn[:, None], kp, vp, bt, cl, layer=0,
+        interpret=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(pre[:, 0]), np.asarray(dec), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_prefill_kernel_ignores_unattended_page_contents():
+    """Context pages past ctx_len must not leak into any chunk row."""
+    q, kc, vc, kp, vp, bt, *_ = _setup_prefill(seed=7)
+    bt = jnp.broadcast_to(bt[:1], bt.shape)
+    cl = jnp.array([3, 4, 2], jnp.int32)  # only the first page matters
+    out1 = paged_gqa_prefill(
+        q, kc, vc, kp, vp, bt, cl, layer=0, interpret=True
+    )
+    poisoned = kp.at[:, np.asarray(bt[0, 1:])].set(1e4)
+    out2 = paged_gqa_prefill(
+        q, kc, vc, poisoned, vp, bt, cl, layer=0, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
 # shape-check contract (ValueError with named dims, survives python -O)
 # ---------------------------------------------------------------------------
+
+
+def test_paged_prefill_kernel_shape_errors():
+    q, kc, vc, kp, vp, bt, *_ = _setup_prefill(C=4)
+    cl = jnp.array([1, 1, 1], jnp.int32)
+    B, C, H, hd = q.shape
+    KV = kc.shape[2]
+    qg = q.reshape(B, C, KV, H // KV, hd).transpose(0, 2, 3, 1, 4)
+    with pytest.raises(ValueError, match="grouped chunk queries"):
+        paged_prefill_kernel(q, kc, vc, kp, vp, bt, cl, layer=0,
+                             interpret=True)
+    with pytest.raises(ValueError, match="k_chunk"):
+        paged_prefill_kernel(qg, kc[:, :2], vc, kp, vp, bt, cl, layer=0,
+                             interpret=True)
+    with pytest.raises(ValueError, match="layer"):
+        paged_prefill_kernel(qg, kc, vc, kp, vp, bt, cl, layer=99,
+                             interpret=True)
+    with pytest.raises(ValueError, match="block_tables"):
+        paged_prefill_kernel(qg, kc, vc, kp, vp, bt[:2], cl, layer=0,
+                             interpret=True)
+    with pytest.raises(ValueError, match="int8"):
+        qq, kcc, vcc, kq, vq, btq, ksc, vsc = _setup_prefill(int8=True, C=4)
+        qqg = qq.reshape(B, C, KV, H // KV, hd).transpose(0, 2, 3, 1, 4)
+        paged_prefill_kernel(qqg, kcc, vcc, kq, vq, btq, cl, layer=0,
+                             interpret=True)
 
 
 def test_paged_kernel_shape_errors():

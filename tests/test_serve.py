@@ -297,6 +297,288 @@ def test_engine_paged_interpret_kernel_end_to_end():
     np.testing.assert_array_equal(np.asarray(reqs[0].out_tokens), ref[0])
 
 
+# ---------------------------------------------------------------------------
+# Batched paged prefill (one fused cross-request dispatch per tick)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_batched_prefill_fp_matches_reference():
+    """Cross-request batched paged prefill must emit the exact greedy
+    tokens AND logits of the dense-cache reference."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10, seed=3).tokens
+    gen = 6
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        arrival_gap=0.01, paged_decode=True, paged_prefill=True,
+    )
+    assert engine.stats["prefill_batches"] > 0
+    ref_toks = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref_toks[i])
+    full = np.concatenate([np.asarray(prompts), ref_toks], axis=1)
+    hidden, _ = model.forward(params, {"tokens": jnp.asarray(full)})
+    ref_logits = np.asarray(model.logits(params, hidden))
+    S = prompts.shape[1]
+    for i, r in enumerate(reqs):
+        got = np.stack(r.step_logits)
+        want = ref_logits[i, S - 1 : S - 1 + gen]
+        np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_engine_batched_prefill_batches_multiple_lanes():
+    """Co-arriving requests actually share one prefill dispatch (the
+    scheduler's co-batchable group, not a B=1 loop)."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=4, seg_len=8, seed=3).tokens
+    engine, _ = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, 2,
+        paged_decode=True, paged_prefill=True, token_budget=64,
+    )
+    assert engine.stats["prefill_batch_size"] >= 4
+
+
+def test_engine_batched_prefill_quantized_matches_recompute(quantized_smoke):
+    from repro.launch.serve import quantized_generate
+
+    cfg, qm, _ = quantized_smoke
+    prompts = make_calibration(cfg.vocab, n_segments=4, seg_len=12, seed=5).tokens
+    gen = 5
+    _, reqs = _run_engine(
+        CachedDecoder.from_quantized(qm), prompts, gen, arrival_gap=0.01,
+        paged_decode=True, paged_prefill=True,
+    )
+    ref = np.asarray(quantized_generate(qm, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_batched_prefill_int8_matches_gather_int8():
+    """int8 pages: the batched paged-prefill engine writes the same pages
+    (shared quantizer) the gather-dense int8 engine reads — exact tokens."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=9, seed=8).tokens
+    gen = 5
+    runs = []
+    for paged in (False, True):
+        _, reqs = _run_engine(
+            CachedDecoder.from_model(model, params), prompts, gen,
+            paged_decode=paged, paged_prefill=paged, kv_int8=True,
+        )
+        runs.append([np.asarray(r.out_tokens) for r in reqs])
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_batched_prefill_eviction_under_page_pressure():
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8, seed=4).tokens
+    gen = 8
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        n_slots=3, page_size=4, n_pages=10, paged_decode=True,
+        paged_prefill=True,
+    )
+    assert engine.stats["evictions"] > 0
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_batched_prefill_interpret_kernel_end_to_end():
+    """The actual chunked-prefill Pallas kernel (interpret mode) inside
+    the fused dispatch — not just the jnp fallback — end to end."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=2, seg_len=10, seed=3).tokens
+    gen = 3
+    _, reqs = _run_engine(
+        CachedDecoder.from_model(model, params, paged_interpret=True),
+        prompts, gen, n_slots=2, paged_decode=True, paged_prefill=True,
+    )
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+# ---------------------------------------------------------------------------
+# Prefix cache: trie hits, refcounts, copy-on-write, eviction
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_cache_skips_recompute_same_tokens():
+    """Identical prompts: later admissions map cached pages (hit tokens
+    counted, prefill work reduced) and still emit reference tokens."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = make_calibration(cfg.vocab, n_segments=1, seg_len=12, seed=3).tokens
+    prompts = np.tile(np.asarray(base), (3, 1))
+    gen = 5
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        arrival_gap=0.2, paged_decode=True, paged_prefill=True,
+        prefix_cache=True,
+    )
+    s = engine.summary()
+    # 12-token prompts, 4-token pages: 2 later requests x >= 8 cached
+    assert s["prefix_hit_tokens"] >= 16
+    assert s["cached_pages"] >= 2
+    assert s["prefill_tokens"] <= 3 * 12 - s["prefix_hit_tokens"]
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_prefix_cache_page_aligned_full_hit():
+    """A prompt that is entirely cached full pages: admission maps a
+    private COPY of the last page (copy-on-admit), recomputes only the
+    final token, and emits the reference stream."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    base = make_calibration(cfg.vocab, n_segments=1, seg_len=8, seed=5).tokens
+    prompts = np.tile(np.asarray(base), (2, 1))  # 8 tokens == 2 full pages
+    gen = 4
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        arrival_gap=0.2, paged_decode=True, paged_prefill=True,
+        prefix_cache=True,
+    )
+    s = engine.summary()
+    assert s["prefix_hit_tokens"] == 7  # capped at len(prompt) - 1
+    assert s["cow_copies"] >= 1  # the copy-on-admit of the last page
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_prefix_cache_survives_eviction_pressure():
+    """Prefix cache + overcommitted pool: cache-only pages are reclaimed
+    under pressure, eviction/replay still reproduces exact tokens."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8, seed=4).tokens
+    gen = 8
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        n_slots=3, page_size=4, n_pages=10, paged_decode=True,
+        paged_prefill=True, prefix_cache=True,
+    )
+    assert engine.stats["evictions"] > 0
+    ref = np.asarray(greedy_generate(model, params, prompts, gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def _prefix_pool(**kw):
+    args = dict(n_pages=13, page_size=4, n_slots=4, max_pages_per_seq=4,
+                prefix_cache=True)
+    args.update(kw)
+    return PagedKVPool(_smoke_cfg(), **args)
+
+
+def test_pool_prefix_trie_hit_and_refcounts():
+    cfg = _smoke_cfg()
+    pool = _prefix_pool()
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    toks = np.arange(10, dtype=np.int32)
+    k = jnp.arange(L * 10 * KV * hd, dtype=jnp.float32).reshape(L, 10, KV, hd)
+    a = pool.admit(10, tokens=toks)
+    assert pool.length(a) == 0  # cold cache
+    pool.write_span(a, 0, 10, k, -k)
+    pool.register_prefix(a, toks)
+    assert pool.cached_pages == 2  # two full 4-token pages of the prompt
+    b = pool.admit(10, tokens=toks)
+    assert pool.length(b) == 8  # both full pages mapped
+    assert pool.shared_pages == 2 and pool.max_page_ref == 3
+    gk, gv = pool.gather([b])
+    np.testing.assert_array_equal(np.asarray(gk[:, 0, :8]), np.asarray(k[:, :8]))
+    np.testing.assert_array_equal(np.asarray(gv[:, 0, :8]), np.asarray(-k[:, :8]))
+    # different tokens past page 1 -> only one page matches
+    toks2 = toks.copy()
+    toks2[6] += 1
+    c = pool.admit(10, tokens=toks2)
+    assert pool.length(c) == 4
+    # releasing the original keeps cached pages alive via the trie's refs
+    pool.release(a)
+    d = pool.admit(10, tokens=toks)
+    assert pool.length(d) == 8
+
+
+def test_pool_copy_on_write_divergence():
+    """Writing into a shared page copies it first: the original owner's
+    (and the cache's) view is untouched, the writer's view diverges."""
+    cfg = _smoke_cfg()
+    pool = _prefix_pool()
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    toks = np.arange(8, dtype=np.int32)
+    k = jnp.arange(L * 8 * KV * hd, dtype=jnp.float32).reshape(L, 8, KV, hd)
+    a = pool.admit(10, tokens=toks)
+    pool.write_span(a, 0, 8, k, -k)
+    pool.register_prefix(a, toks)
+    b = pool.admit(10, tokens=toks)
+    assert pool.length(b) == 8 and pool.shared_pages == 2
+    assert pool.cow_copies == 0
+    # b diverges INSIDE the shared prefix (e.g. a fork edited upstream)
+    patch = jnp.full((L, 1, KV, hd), 99.0)
+    pool.write_span(b, 5, 1, patch, patch)
+    assert pool.cow_copies == 1
+    ga, _ = pool.gather([a])
+    np.testing.assert_array_equal(np.asarray(ga[:, 0, :8]), np.asarray(k))
+    gb, _ = pool.gather([b])
+    np.testing.assert_array_equal(np.asarray(gb[:, 0, 5]), np.asarray(patch[:, 0]))
+    np.testing.assert_array_equal(np.asarray(gb[:, 0, 4]), np.asarray(k[:, 4]))
+    # a fresh admit still sees the ORIGINAL cached content
+    c = pool.admit(10, tokens=toks)
+    gc_, _ = pool.gather([c])
+    np.testing.assert_array_equal(np.asarray(gc_[:, 0, :8]), np.asarray(k))
+
+
+def test_pool_prefix_cache_reclaimed_under_pressure():
+    """Cache-only pages (refcount held solely by the trie) are reclaimed
+    LRU-first when admit/extend would otherwise fail."""
+    cfg = _smoke_cfg()
+    pool = _prefix_pool()  # 12 usable pages
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    toks = np.arange(8, dtype=np.int32)
+    k = jnp.zeros((L, 8, KV, hd), jnp.float32)
+    a = pool.admit(8, tokens=toks)
+    pool.write_span(a, 0, 8, k, k)
+    pool.register_prefix(a, toks)
+    pool.release(a)
+    assert pool.cached_pages == 2 and pool.pages_in_use == 2
+    # demand every page: the cached pages must be reclaimed, not block
+    slots = [pool.admit(16) for _ in range(3)]
+    assert all(s is not None for s in slots)
+    assert pool.cached_pages == 0
+    for s in slots:
+        pool.release(s)
+    assert pool.pages_in_use == 0
+
+
 def test_pool_int8_write_gather_roundtrip():
     cfg = _smoke_cfg()
     pool = PagedKVPool(
