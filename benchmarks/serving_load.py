@@ -14,7 +14,10 @@ chunks into one fused cross-request dispatch; ``--kv-int8`` stores int8
 KV pages.  ``--prefix-len N`` switches to a prefix-heavy workload: every
 prompt opens with the same N-token header (system prompt / few-shot
 block), which ``--prefix-cache`` then serves from cached pages instead of
-recomputing (``prefix_hit_tokens`` in the record).
+recomputing (``prefix_hit_tokens`` in the record).  ``--speculative K``
+(with ``--paged``) turns decode ticks into draft-and-verify ticks; the
+record then carries acceptance_rate / accepted_per_tick /
+tokens_per_lane_tick so drafting health is tracked alongside latency.
 """
 from __future__ import annotations
 
@@ -69,9 +72,21 @@ def main(argv=None):
                          "the same N-token header")
     ap.add_argument("--kv-int8", action="store_true",
                     help="int8 KV pages with per-(token, head) scales")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decode depth (needs --paged): draft "
+                         "up to K tokens per lane per tick, verify in one "
+                         "fused dispatch")
+    ap.add_argument("--draft", default="ngram", choices=("ngram",),
+                    help="self-drafter for --speculative")
+    ap.add_argument("--host-sample", action="store_true",
+                    help="host-side token selection (default on the paged "
+                         "path is the fused on-device draw)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
+    if args.speculative and not args.paged:
+        ap.error("--speculative verifies drafts over the paged pool; "
+                 "add --paged")
 
     cfg = get_smoke_config(args.arch)
     if not args.smoke:
@@ -110,6 +125,9 @@ def main(argv=None):
         paged_prefill=args.paged_prefill,
         prefix_cache=args.prefix_cache,
         kv_int8=args.kv_int8,
+        speculative_k=args.speculative,
+        draft=args.draft,
+        device_sample=args.paged and not args.host_sample,
     ))
     # warm the jit caches so compile time doesn't pollute latency stats
     warm = engine.submit(np.asarray(prompts[0]), max_new=2, arrival=0.0)
@@ -171,6 +189,12 @@ def main(argv=None):
         "shared_pages": s["shared_pages"],
         "max_page_ref": s["max_page_ref"],
         "cow_copies": s["cow_copies"],
+        # speculative decode health (0 when --speculative is off)
+        "speculative_k": args.speculative,
+        "acceptance_rate": round(s["acceptance_rate"], 3),
+        "accepted_per_tick": round(s["accepted_per_tick"], 3),
+        "tokens_per_lane_tick": round(s["tokens_per_lane_tick"], 3),
+        "rolled_back_tokens": s["rolled_back_tokens"],
     }
     print(json.dumps(rec, indent=1))
     if args.out:

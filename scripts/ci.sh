@@ -68,6 +68,26 @@ python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
   --kv-int8 --check
 
+# speculative decode: greedy draft-and-verify (one fused (B, K+1) verify
+# dispatch per tick, ngram self-drafting, KV rollback) must stay
+# token-identical to the dense oracle — fp, quantized artifact, and int8
+# pages (whose oracle is the gather-dense int8 engine)
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --speculative 4 --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" \
+  --paged --paged-prefill --speculative 2 --check
+
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --speculative 4 --kv-int8 --check
+
+# host-side sampling debug path stays token-identical too
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --speculative 4 \
+  --host-sample --check
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -79,6 +99,12 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
   --prefix-cache --mesh 1,2 --check
 
+# TP speculative decode under shard_map: still token-identical
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --speculative 4 --mesh 1,2 --check
+
 # keep the PR-over-PR serving baseline on the unchanged workload; the
 # prefix-heavy batched-prefill run is a separate labeled record
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
@@ -88,6 +114,10 @@ PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --out "$tmp/BENCH_serving_prefix.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
+# speculative draft-and-verify vs one-token decode (repetitive + random
+# workloads; asserts token identity internally)
+PYTHONPATH=src python benchmarks/speculative_microbench.py --smoke \
+  --out "$tmp/BENCH_speculative.json"
 PYTHONPATH=src python benchmarks/prefill_microbench.py --smoke \
   --requests 1 4 --reps 2 --out "$tmp/BENCH_prefill.json"
 # TP scaling record (token parity + per-device pool bytes ≈ 1/mp)

@@ -255,11 +255,15 @@ def _prefill_kernel(
     v_ref,  # (1, 1, ps, 1, hd)
     kc_ref,  # (1, C, 1, hd) the chunk's own K (not yet in the pool)
     vc_ref,  # (1, C, 1, hd)
-    *refs,  # [ks_ref (1,1,ps,1), vs_ref (1,1,ps,1)], o_ref, m_ref, l_ref
+    *refs,  # [kself_ref, vself_ref (1,C,1,hd)], [ks_ref, vs_ref
+    #         (1,1,ps,1)], o_ref, m_ref, l_ref
     page_size: int,
     chunk: int,
     int8_pages: bool,
+    has_self: bool,
 ):
+    refs = list(refs)
+    kself_ref, vself_ref = (refs.pop(0), refs.pop(0)) if has_self else (None, None)
     if int8_pages:
         ks_ref, vs_ref, o_ref, m_ref, l_ref = refs
     else:
@@ -313,13 +317,46 @@ def _prefill_kernel(
         row_pos = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 0) % chunk
         col = jax.lax.broadcasted_iota(jnp.int32, (rows, chunk), 1)
         causal = col <= row_pos
+        diag = col == row_pos
+        if has_self:
+            # diagonal override (speculative verify): each token's score
+            # to ITSELF comes from the fp self K, not the chunk array
+            kself = kself_ref[0, :, 0].astype(jnp.float32)  # (C, hd)
+            s_self = jax.lax.dot_general(
+                q, kself, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            ) * scale
+            s = jnp.where(diag, s_self, s)
         s = jnp.where(causal, s, _NEG)
-        _online_update(s, causal, vc, o_ref, m_ref, l_ref)
+        if not has_self:
+            _online_update(s, causal, vc, o_ref, m_ref, l_ref)
+        else:
+            # _online_update with one extra term: the diagonal's value
+            # contribution swaps from vc to the override
+            m_prev = m_ref[0, 0]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            pmat = jnp.where(causal, jnp.exp(s - m_new), 0.0)  # (G*C, C)
+            l_ref[0, 0] = alpha * l_ref[0, 0] + jnp.sum(
+                pmat, -1, keepdims=True
+            )
+            acc = jax.lax.dot_general(
+                pmat, vc, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            vd = vself_ref[0, :, 0].astype(jnp.float32) - vc
+            acc = acc + jax.lax.dot_general(
+                jnp.where(diag, pmat, 0.0), vd, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+            o_ref[0, 0] = o_ref[0, 0] * alpha + acc
+            m_ref[0, 0] = m_new
         o_ref[0, 0] = o_ref[0, 0] / l_ref[0, 0]  # normalize in place
 
 
 def _check_prefill_operands(q, k_chunk, v_chunk, k_pages, v_pages,
-                            block_tables, ctx_len, layer, k_scale, v_scale):
+                            block_tables, ctx_len, layer, k_scale, v_scale,
+                            k_self=None, v_self=None):
     if q.ndim != 5:
         raise ValueError(
             f"q must be (B, KV, G, C, hd) grouped chunk queries, got shape "
@@ -330,6 +367,15 @@ def _check_prefill_operands(q, k_chunk, v_chunk, k_pages, v_pages,
         raise ValueError(
             f"k_chunk/v_chunk must both be (B={B}, C={C}, KV={KV}, hd={hd}); "
             f"got k_chunk {k_chunk.shape}, v_chunk {v_chunk.shape}"
+        )
+    if (k_self is None) != (v_self is None):
+        raise ValueError("k_self and v_self must be given together")
+    if k_self is not None and (
+        k_self.shape != k_chunk.shape or v_self.shape != v_chunk.shape
+    ):
+        raise ValueError(
+            f"k_self/v_self must match k_chunk {k_chunk.shape}; got "
+            f"k_self {k_self.shape}, v_self {v_self.shape}"
         )
     # pool/table/scale checks are shared with the decode entry; a
     # single-chunk-position view of q has its (B, KV, G, hd) shape
@@ -352,6 +398,8 @@ def paged_prefill_kernel(
     layer: int,
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
+    k_self: jax.Array | None = None,
+    v_self: jax.Array | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     """Causal chunked-prefill attention of layer ``layer`` against the pool.
@@ -363,7 +411,11 @@ def paged_prefill_kernel(
     k/v_pages    (L, P, ps, KV, hd) physical pool (fp, or int8 + scales);
     block_tables (B, Pa) int32, bucketed to the longest PRIOR context;
     ctx_len      (B,) int32 valid prior-context tokens per lane (the chunk's
-                 start position) — ragged, 0 for fresh admissions.
+                 start position) — ragged, 0 for fresh admissions;
+    k/v_self     optional (B, C, KV, hd) diagonal override: token t's
+                 attention to ITSELF uses these instead of k/v_chunk (the
+                 speculative verifier passes the fp pre-quantization K/V
+                 here while the chunk arrays carry the int8 round-trip).
 
     Grid is ``(lane, kv_head, page+1)``: the context pages stream through
     the decode kernel's online-softmax step (index-map clamp included), and
@@ -372,8 +424,9 @@ def paged_prefill_kernel(
     """
     int8_pages = _check_prefill_operands(
         q, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len, layer,
-        k_scale, v_scale,
+        k_scale, v_scale, k_self, v_self,
     )
+    has_self = k_self is not None
     B, KV, G, C, hd = q.shape
     ps = k_pages.shape[2]
     Pa = block_tables.shape[1]
@@ -407,6 +460,9 @@ def paged_prefill_kernel(
         chunk_spec,
     ]
     operands = [qf, k_pages, v_pages, k_chunk, v_chunk]
+    if has_self:
+        in_specs += [chunk_spec, chunk_spec]
+        operands += [k_self, v_self]
     if int8_pages:
         in_specs += [sc_spec, sc_spec]
         operands += [k_scale, v_scale]
@@ -429,7 +485,8 @@ def paged_prefill_kernel(
     )
     o, _, _ = pl.pallas_call(
         functools.partial(
-            _prefill_kernel, page_size=ps, chunk=C, int8_pages=int8_pages
+            _prefill_kernel, page_size=ps, chunk=C, int8_pages=int8_pages,
+            has_self=has_self,
         ),
         grid_spec=grid_spec,
         out_shape=[

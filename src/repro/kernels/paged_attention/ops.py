@@ -105,6 +105,8 @@ def paged_gqa_prefill(
     layer: int,
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
+    k_self: jax.Array | None = None,
+    v_self: jax.Array | None = None,
     interpret: bool = False,
     force_kernel: bool = False,
 ) -> jax.Array:
@@ -115,12 +117,16 @@ def paged_gqa_prefill(
     chunk's own post-RoPE K/V (not yet scattered); k/v_pages the full
     (L, P, ps, KV, hd) pool (+ per-(token, head) scales for int8 pages);
     block_tables (B, Pa) bucketed to the longest prior context; ctx_len
-    (B,) ragged prior-context lengths.  -> (B, C, H, hd) q.dtype.
+    (B,) ragged prior-context lengths; k/v_self optional (B, C, KV, hd)
+    DIAGONAL override — each token's attention to itself uses these
+    instead of the chunk arrays (the speculative verifier's int8-exactness
+    hook; see ``paged_gqa_verify``).  -> (B, C, H, hd) q.dtype.
     """
     if not (on_tpu() or interpret or force_kernel):
         return paged_gqa_prefill_ref(
             q, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len,
             layer=layer, k_scale=k_scale, v_scale=v_scale,
+            k_self=k_self, v_self=v_self,
         )
 
     B, C, H, hd = q.shape
@@ -133,6 +139,58 @@ def paged_gqa_prefill(
     qg = q.reshape(B, C, KV, G, hd).transpose(0, 2, 3, 1, 4)
     o = paged_prefill_kernel(
         qg, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len,
-        layer=layer, k_scale=k_scale, v_scale=v_scale, interpret=interpret,
+        layer=layer, k_scale=k_scale, v_scale=v_scale,
+        k_self=k_self, v_self=v_self, interpret=interpret,
     )  # (B, KV, G, C, hd) normalized fp32
     return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)
+
+
+def paged_gqa_verify(
+    q: jax.Array,
+    k_chunk: jax.Array,
+    v_chunk: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    ctx_len: jax.Array,
+    *,
+    layer: int,
+    k_scale: jax.Array | None = None,
+    v_scale: jax.Array | None = None,
+    k_self: jax.Array | None = None,
+    v_self: jax.Array | None = None,
+    interpret: bool = False,
+    force_kernel: bool = False,
+) -> jax.Array:
+    """Speculative-verify attention: the chunked-prefill kernel reused.
+
+    A draft-and-verify tick IS a chunked prefill over the drafted tokens:
+    lane b carries ``[last_emitted, d_1, ..., d_K]`` at absolute positions
+    ``ctx_len[b] .. ctx_len[b] + K``, each token attends the lane's paged
+    prior context plus the causal prefix of the chunk itself, and the
+    chunk width is ``K + 1`` instead of ``prefill_chunk``.  The grid, the
+    index-map clamp, the int8 page handling, and the one trailing
+    intra-chunk causal step are untouched — so the verifier inherits the
+    prefill kernel's whole parity surface (tests/test_paged_attention.py)
+    and any future kernel speedup for free.
+
+    Exactness vs the one-token decode path: for int8 pools the caller
+    passes the int8 ROUND-TRIP of the chunk K/V as ``k/v_chunk`` (what the
+    pool will return for these tokens once scattered) and the fp original
+    as ``k/v_self`` (what one-token decode folds in analytically for the
+    self position) — every score then matches the sequential path exactly.
+    Kept as a named entry so the serving adapter's verify dispatch states
+    its intent, and so a verify-specific kernel schedule (e.g. a
+    K+1-specialized grid) can slot in later without touching the adapter.
+    """
+    if q.shape[1] < 1:
+        raise ValueError(
+            f"verify chunk needs >= 1 token (the last emitted token), "
+            f"got width {q.shape[1]}"
+        )
+    return paged_gqa_prefill(
+        q, k_chunk, v_chunk, k_pages, v_pages, block_tables, ctx_len,
+        layer=layer, k_scale=k_scale, v_scale=v_scale,
+        k_self=k_self, v_self=v_self, interpret=interpret,
+        force_kernel=force_kernel,
+    )

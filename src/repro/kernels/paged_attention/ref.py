@@ -78,6 +78,8 @@ def paged_gqa_prefill_ref(
     layer: int,
     k_scale: jax.Array | None = None,
     v_scale: jax.Array | None = None,
+    k_self: jax.Array | None = None,
+    v_self: jax.Array | None = None,
 ) -> jax.Array:
     """Chunked-prefill GQA attention vs paged prior context + the chunk.
 
@@ -86,6 +88,14 @@ def paged_gqa_prefill_ref(
     (L, P, ps, KV, hd); block_tables (B, Pa); ctx_len (B,) prior-context
     tokens per lane.  Chunk token t of lane b attends context positions
     ``< ctx_len[b]`` plus chunk positions ``<= t``.  -> (B, C, H, hd).
+
+    ``k_self``/``v_self`` (B, C, KV, hd), when given, override the
+    DIAGONAL of the intra-chunk block: token t's attention to itself uses
+    ``k_self[:, t]``/``v_self[:, t]`` instead of the chunk arrays.  The
+    speculative verifier over int8 pools passes the pre-quantization fp
+    K/V here while ``k_chunk``/``v_chunk`` carry the int8 round-trip, so
+    every score matches what one-token decode computes: prior tokens as
+    the pool would return them, self as the analytic fp fold.
     """
     B, C, H, hd = q.shape
     KV = k_chunk.shape[2]
@@ -101,10 +111,21 @@ def paged_gqa_prefill_ref(
     s_new = jnp.einsum(
         "bckgd,btkd->bkgct", qg, k_chunk.astype(jnp.float32)
     ) * (hd**-0.5)  # (B, KV, G, C, C)
+    eye = jnp.eye(C, dtype=bool)
+    if k_self is not None:
+        s_diag = jnp.einsum(
+            "bckgd,bckd->bkgc", qg, k_self.astype(jnp.float32)
+        ) * (hd**-0.5)
+        s_new = jnp.where(eye, s_diag[..., None], s_new)
     causal = jnp.tril(jnp.ones((C, C), bool))
     s_new = jnp.where(causal, s_new, neg)
     s = jnp.concatenate([s_ctx, s_new], axis=-1)
     probs = jax.nn.softmax(s, axis=-1)
     v_all = jnp.concatenate([vc, v_chunk.astype(jnp.float32)], axis=1)
     o = jnp.einsum("bkgcs,bskd->bkgcd", probs, v_all)
+    if v_self is not None:
+        # swap the diagonal's value contribution to the override
+        dp = jnp.where(eye, probs[..., S:], 0.0)  # (B, KV, G, C, C)
+        vd = v_self.astype(jnp.float32) - v_chunk.astype(jnp.float32)
+        o = o + jnp.einsum("bkgct,btkd->bkgcd", dp, vd)
     return o.transpose(0, 3, 1, 2, 4).reshape(B, C, H, hd).astype(q.dtype)

@@ -29,9 +29,23 @@ page pool shards over KV heads, and paged decode runs under shard_map
 with no cross-device KV traffic.  On CPU, force a multi-device host
 first: ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+``--speculative K`` (with ``--paged``) turns each decode tick into a
+draft-and-verify tick: a host-side n-gram prompt-lookup drafter
+(``--draft ngram``) proposes up to K tokens per lane from the lane's own
+history, and ONE fused (B, K+1) dispatch — the chunked-prefill kernel
+reused as the verifier — accepts each lane's longest matching prefix, so
+a tick emits 1..K+1 tokens per lane for one weight pass.  Rejected
+drafts' K/V is rolled back (``PagedKVPool.truncate``); greedy speculative
+decode is token-identical to one-token decode, so it composes with
+``--check``.
+
 ``--temperature``/``--top-p`` enable per-request nucleus sampling
 (greedy when 0 — the default and the only ``--check`` mode);
-``--stop-token`` (repeatable) finishes a request early on emission.
+``--stop-token`` (repeatable) finishes a request early on emission.  On
+the paged path the softmax/top-p draw runs ON DEVICE, fused into the
+decode/verify dispatch with per-request ``fold_in`` keys;
+``--host-sample`` keeps the host-side numpy draw for debugging (the two
+backends draw different — but each reproducible — non-greedy streams).
 """
 from __future__ import annotations
 
@@ -76,9 +90,11 @@ def quantized_generate(qm, prompt, gen: int):
 
 
 def build_engine(adapter, *, max_seq_len, args, paged=None,
-                 paged_prefill=None, prefix_cache=None) -> "Engine":
+                 paged_prefill=None, prefix_cache=None,
+                 speculative=None) -> "Engine":
     from repro.serve import Engine, EngineConfig
 
+    paged = getattr(args, "paged", False) if paged is None else paged
     ecfg = EngineConfig(
         max_seq_len=max_seq_len,
         n_slots=args.slots,
@@ -86,7 +102,7 @@ def build_engine(adapter, *, max_seq_len, args, paged=None,
         n_pages=args.pages,
         token_budget=args.token_budget,
         prefill_chunk=args.prefill_chunk,
-        paged_decode=getattr(args, "paged", False) if paged is None else paged,
+        paged_decode=paged,
         paged_prefill=(
             getattr(args, "paged_prefill", False)
             if paged_prefill is None else paged_prefill
@@ -96,6 +112,14 @@ def build_engine(adapter, *, max_seq_len, args, paged=None,
             if prefix_cache is None else prefix_cache
         ),
         kv_int8=getattr(args, "kv_int8", False),
+        speculative_k=(
+            getattr(args, "speculative", 0) if speculative is None
+            else speculative
+        ),
+        draft=getattr(args, "draft", "ngram"),
+        # the fused on-device draw is the paged-path default; --host-sample
+        # keeps the host-side numpy draw for debugging
+        device_sample=paged and not getattr(args, "host_sample", False),
     )
     return Engine(adapter, ecfg)
 
@@ -154,6 +178,20 @@ def main(argv=None):
                          "write), not recomputed")
     ap.add_argument("--kv-int8", action="store_true",
                     help="store KV pages int8 with per-(token, head) scales")
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="speculative decode (needs --paged): draft up to "
+                         "K tokens per lane per tick and verify them in "
+                         "ONE fused (B, K+1) dispatch — the chunked-"
+                         "prefill kernel as verifier; rejected drafts' "
+                         "K/V is rolled back")
+    ap.add_argument("--draft", default="ngram", choices=("ngram",),
+                    help="self-drafter for --speculative (ngram = prompt-"
+                         "lookup over each lane's own token history)")
+    ap.add_argument("--host-sample", action="store_true",
+                    help="keep the host-side numpy softmax/top-p draw "
+                         "(debugging); default on the paged path is the "
+                         "on-device draw fused into the decode/verify "
+                         "dispatch (per-request fold_in keys)")
     ap.add_argument("--mesh", default=None, metavar="DP,MP",
                     help="serve tensor-parallel over a (data, model) mesh: "
                          "packed weights + KV page pool + paged decode all "
@@ -177,6 +215,13 @@ def main(argv=None):
     from repro.serve.artifacts import load_quantized
     from repro.serve.scheduler import SamplingParams
 
+    if args.speculative and not args.paged:
+        raise SystemExit(
+            "--speculative verifies drafts over the paged pool (the "
+            "chunked-prefill kernel path); add --paged"
+        )
+    if args.speculative < 0:
+        raise SystemExit(f"--speculative must be >= 0, got {args.speculative}")
     if args.temperature == 0 and args.top_p < 1.0:
         raise SystemExit(
             "--top-p only applies to non-greedy decoding; pass "
@@ -324,6 +369,12 @@ def main(argv=None):
               f"cached_pages={s['cached_pages']} "
               f"shared_pages={s['shared_pages']} "
               f"cow_copies={s['cow_copies']}")
+    if args.speculative:
+        print(f"[serve] speculative K={args.speculative}: "
+              f"acceptance_rate={s['acceptance_rate']:.2f} "
+              f"accepted_per_tick={s['accepted_per_tick']:.2f} "
+              f"tokens_per_lane_tick={s['tokens_per_lane_tick']:.2f} "
+              f"rolled_back={s['rolled_back_tokens']}")
 
     if args.check:
         done = sorted(done, key=lambda r: r.rid)
@@ -352,7 +403,7 @@ def main(argv=None):
             oracle = build_engine(
                 oracle_adapter, max_seq_len=args.prompt_len + args.gen,
                 args=args, paged=False, paged_prefill=False,
-                prefix_cache=False,
+                prefix_cache=False, speculative=0,
             )
             oref = [
                 oracle.submit(np.asarray(prompts[i]), max_new=args.gen)

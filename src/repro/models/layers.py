@@ -13,6 +13,8 @@ import dataclasses
 import math
 from typing import Optional
 
+import zlib
+
 import jax
 import jax.numpy as jnp
 
@@ -25,8 +27,12 @@ from repro.runtime.sharding import constrain
 
 
 def _key(key: jax.Array, *path: str) -> jax.Array:
+    # crc32, NOT hash(): str hashing is salted per process
+    # (PYTHONHASHSEED), which made init(seed) draw different params on
+    # every run — breaking cross-process reproducibility of greedy
+    # streams, benchmarks, and any test comparing two processes
     for p in path:
-        key = jax.random.fold_in(key, hash(p) % (2**31))
+        key = jax.random.fold_in(key, zlib.crc32(p.encode()) & 0x7FFFFFFF)
     return key
 
 

@@ -32,6 +32,27 @@ the page pool via ``kernels.paged_attention.paged_gqa_prefill`` (ragged
 per-lane prior-context lengths), and a donated in-place scatter of every
 chunk token's K/V (padded tails land on the scratch page).
 
+Two further fused entries ride the same trunks:
+
+  * :meth:`verify_paged` — speculative draft-and-verify: a ``(B, K+1)``
+    chunk batch ``[last_emitted, d_1 .. d_K]`` per decode lane runs the
+    PREFILL trunk (``paged_gqa_verify`` — the chunked-prefill kernel
+    reused as the verifier), then selects a token at every chunk position
+    ON DEVICE (:func:`sample_tokens`) and counts the longest accepted
+    draft prefix — one dispatch emits up to K+1 tokens per lane;
+  * :meth:`decode_paged_sample` — the one-token decode dispatch with the
+    same on-device selection epilogue fused in, so non-speculative
+    serving also never ships logits to the host.
+
+On-device selection is a pure function of (request seed, emission index)
+via ``jax.random.fold_in``, so sampled streams are reproducible across
+batch composition, scheduling, eviction/replay, and speculative grouping
+— and a greedy (temperature-0) lane is the exact argmax, which keeps the
+speculative path token-identical to one-token decode.  For int8 pools the
+verify trunk round-trips the chunk's own K/V through the page quantizer
+before attention, matching what the one-token path would read back from
+the pool for already-scattered draft tokens (DESIGN.md §10).
+
 Masking uses the same where-set convention as the quantized recompute path
 so cached logits match it bit-for-bit up to matmul reassociation.
 """
@@ -42,18 +63,75 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.quantizer import QuantizedLinear
 from repro.kernels.paged_attention.ops import (
     paged_gqa_decode,
     paged_gqa_prefill,
+    paged_gqa_verify,
 )
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
 from repro.serve.kv_cache import PagedKVPool, quantize_kv_int8
 
-__all__ = ["CachedDecoder"]
+__all__ = ["CachedDecoder", "sample_tokens"]
+
+
+def sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only=False):
+    """Fused on-device token selection over a step's logits.
+
+    logits (B, T, V); temps/top_ps (B,) fp32; seeds/draws (B,) int32 —
+    ``draws[b]`` is how many tokens lane b has already drawn, so chunk
+    position t selects with the per-request key
+    ``fold_in(PRNGKey(seeds[b]), draws[b] + t)``: the stream is a pure
+    function of (seed, emission index), hence reproducible across batch
+    composition, scheduling order, eviction/replay, and speculative
+    grouping — a verify tick draws exactly the token sequential decode
+    would have drawn at each position.  ``temp == 0`` lanes take the
+    exact argmax (the greedy/--check path).  Top-p keeps the smallest
+    sorted prefix with mass >= top_p (always at least the head), the same
+    rule as the host path.  Returns (B, T) int32.
+
+    ``greedy_only`` (static) compiles out the whole draw: when the caller
+    knows every lane is temperature-0 (the common serving case and every
+    ``--check``), the dispatch carries only the argmax — the sort/scan/
+    PRNG sub-graph would otherwise dominate a smoke-scale verify tick.
+    """
+    T, V = logits.shape[1], logits.shape[2]
+    greedy = jnp.argmax(logits, axis=-1)
+    if greedy_only:
+        return greedy.astype(jnp.int32)
+
+    def draw(lg, temp, top_p, seed, idx):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), idx)
+        z = lg.astype(jnp.float32) / jnp.where(temp > 0.0, temp, 1.0)
+        p = jax.nn.softmax(z)
+        order = jnp.argsort(-p)
+        ps = p[order]
+        csum = jnp.cumsum(ps)
+        # nucleus filter; the head always survives (SamplingParams pins
+        # top_p > 0, but a degenerate caller must get argmax, not tail)
+        keep = (csum - ps < top_p).at[0].set(True)
+        ps = jnp.where(keep, ps, 0.0)
+        u = jax.random.uniform(key) * ps.sum()  # inverse-CDF, unnormalized
+        pick = jnp.searchsorted(jnp.cumsum(ps), u, side="right")
+        return order[jnp.clip(pick, 0, V - 1)]
+
+    sampled = jax.vmap(  # lanes x chunk positions
+        lambda lg, tp, pp, sd, d0: jax.vmap(
+            lambda l1, t: draw(l1, tp, pp, sd, d0 + t)
+        )(lg, jnp.arange(T, dtype=jnp.int32))
+    )(logits, temps, top_ps, seeds, draws)
+    return jnp.where(temps[:, None] > 0.0, sampled, greedy).astype(jnp.int32)
+
+
+def _int8_roundtrip(x: jax.Array) -> jax.Array:
+    """Quantize-dequantize through the int8 page quantizer: the value a
+    later read of this token's K/V would see after the pool scatter."""
+    q, s = quantize_kv_int8(x)
+    return (q.astype(jnp.float32) * s[..., None]).astype(x.dtype)
 
 
 def _linear(p, cfg: ArchConfig, bias=None) -> Callable:
@@ -118,6 +196,26 @@ class CachedDecoder:
         self._fwd_prefill_q = jax.jit(
             self._forward_prefill_paged_q, donate_argnums=(6, 7, 8, 9)
         )
+        # fused decode + on-device selection (non-speculative fast path);
+        # the trailing static bool picks the all-greedy argmax-only graph
+        self._fwd_paged_s = jax.jit(
+            self._forward_paged_sample, donate_argnums=(10, 11),
+            static_argnums=(12,),
+        )
+        self._fwd_paged_sq = jax.jit(
+            self._forward_paged_sample_q, donate_argnums=(10, 11, 12, 13),
+            static_argnums=(14,),
+        )
+        # fused speculative verify: prefill trunk + on-device selection +
+        # draft acceptance, one dispatch per engine verify tick
+        self._fwd_verify = jax.jit(
+            self._forward_verify, donate_argnums=(12, 13),
+            static_argnums=(14,),
+        )
+        self._fwd_verify_q = jax.jit(
+            self._forward_verify_q, donate_argnums=(12, 13, 14, 15),
+            static_argnums=(16,),
+        )
 
     # ---- constructors ---------------------------------------------------
 
@@ -152,6 +250,13 @@ class CachedDecoder:
         tables, context lengths, page addresses).  Distributed adapters
         override to commit them replicated on the mesh."""
         return jnp.asarray(x, dtype)
+
+    def _place_tree(self, arrays: tuple):
+        """Place a whole step's small host arrays in ONE device_put call
+        (a tuple pytree) — per-array placement round-trips dominate a
+        smoke-scale dispatch.  Distributed adapters override to commit
+        the tuple replicated on the mesh."""
+        return jax.device_put(arrays)
 
     # ---- gather-dense reference path ------------------------------------
 
@@ -259,11 +364,11 @@ class CachedDecoder:
         buffers and returns logits (B, 1, V).  The caller still owns the
         host-side length accounting (``pool.note_written``).
         """
-        args = (
-            self._place(tokens), self._place(positions),
-            self._place(block_tables), self._place(ctx_len),
-            self._place(pages), self._place(offs),
-        )
+        args = self._place_tree((
+            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
+            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
+            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+        ))
         if pool.is_int8:
             logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
                 self._fwd_paged_q(
@@ -316,6 +421,80 @@ class CachedDecoder:
         v_scale = v_scale.at[:, pages, offs].set(vs)
         return logits, pool_k, pool_v, k_scale, v_scale
 
+    # ---- fused decode + on-device selection -------------------------------
+
+    def decode_paged_sample(self, tokens, positions, block_tables, ctx_len,
+                            pages, offs, sampling, pool):
+        """:meth:`decode_paged` with the token draw fused into the same
+        dispatch: the host never sees logits unless it asks for them.
+
+        ``sampling`` is ``(temps, top_ps, seeds, draws)``, each ``(B,)``
+        (see :func:`sample_tokens`).  Returns ``(sel (B, 1) int32,
+        logits (B, 1, V))``; mutates the pool via donated buffers.
+        """
+        args = self._place_tree((
+            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
+            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
+            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+            *self._np_sampling(sampling),
+        ))
+        greedy = self._all_greedy(sampling)
+        if pool.is_int8:
+            sel, logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                self._fwd_paged_sq(
+                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                    greedy,
+                )
+            )
+        else:
+            sel, logits, pool.k, pool.v = self._fwd_paged_s(
+                *args, pool.k, pool.v, greedy
+            )
+        return sel, logits
+
+    @staticmethod
+    def _np_sampling(sampling):
+        temps, top_ps, seeds, draws = sampling
+        return (
+            np.asarray(temps, np.float32), np.asarray(top_ps, np.float32),
+            np.asarray(seeds, np.int32), np.asarray(draws, np.int32),
+        )
+
+    @staticmethod
+    def _all_greedy(sampling) -> bool:
+        """Static all-lanes-greedy flag: lets the jit drop the sampling
+        sub-graph entirely (one extra compile, reused every greedy step)."""
+        return bool((np.asarray(sampling[0]) == 0.0).all())
+
+    def _forward_paged_sample(self, tokens, positions, block_tables,
+                              ctx_len, pages, offs, temps, top_ps, seeds,
+                              draws, pool_k, pool_v, greedy_only=False):
+        logits, kn, vn = self._paged_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            None, None,
+        )
+        sel = sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only)
+        pool_k = pool_k.at[:, pages, offs].set(kn.astype(pool_k.dtype))
+        pool_v = pool_v.at[:, pages, offs].set(vn.astype(pool_v.dtype))
+        return sel, logits, pool_k, pool_v
+
+    def _forward_paged_sample_q(self, tokens, positions, block_tables,
+                                ctx_len, pages, offs, temps, top_ps, seeds,
+                                draws, pool_k, pool_v, k_scale, v_scale,
+                                greedy_only=False):
+        logits, kn, vn = self._paged_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            k_scale, v_scale,
+        )
+        sel = sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only)
+        kq, ks = quantize_kv_int8(kn)
+        vq, vs = quantize_kv_int8(vn)
+        pool_k = pool_k.at[:, pages, offs].set(kq)
+        pool_v = pool_v.at[:, pages, offs].set(vq)
+        k_scale = k_scale.at[:, pages, offs].set(ks)
+        v_scale = v_scale.at[:, pages, offs].set(vs)
+        return sel, logits, pool_k, pool_v, k_scale, v_scale
+
     def _block_paged(self, blk, x, positions, layer, pool_k, pool_v,
                      k_scale, v_scale, block_tables, ctx_len):
         cfg = self.cfg
@@ -357,11 +536,11 @@ class CachedDecoder:
         buffers and returns logits (B, C, V).  The caller owns the host-
         side length accounting (``pool.note_span_written``).
         """
-        args = (
-            self._place(tokens), self._place(positions),
-            self._place(block_tables), self._place(ctx_len),
-            self._place(pages), self._place(offs),
-        )
+        args = self._place_tree((
+            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
+            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
+            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+        ))
         if pool.is_int8:
             logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
                 self._fwd_prefill_q(
@@ -373,16 +552,21 @@ class CachedDecoder:
         return logits
 
     def _prefill_trunk(self, tokens, positions, block_tables, ctx_len,
-                       pool_k, pool_v, k_scale, v_scale):
+                       pool_k, pool_v, k_scale, v_scale, verify=False):
         """Embed -> blocks (paged chunk attention) -> logits; returns the
-        chunk's per-layer K/V stacked (L, B, C, KV, hd) for the scatter."""
+        chunk's per-layer K/V stacked (L, B, C, KV, hd) for the scatter.
+        ``verify`` marks the speculative verifier: attention goes through
+        ``paged_gqa_verify`` and, over int8 pools, the chunk's own K/V is
+        round-tripped through the page quantizer before attention, so
+        intra-chunk reads match what one-token decode would read back
+        from the pool once the draft tokens are scattered."""
         cfg = self.cfg
         x = L.embed(self.embed, tokens)  # (B, C, D)
         new_k, new_v = [], []
         for i, blk in enumerate(self.blocks):
             x, k, v = self._block_prefill_paged(
                 blk, x, positions, i, pool_k, pool_v, k_scale, v_scale,
-                block_tables, ctx_len,
+                block_tables, ctx_len, verify=verify,
             )
             new_k.append(k)
             new_v.append(v)
@@ -416,15 +600,112 @@ class CachedDecoder:
         v_scale = v_scale.at[:, pages, offs].set(vs)
         return logits, pool_k, pool_v, k_scale, v_scale
 
+    # ---- speculative draft-and-verify -------------------------------------
+
+    def verify_paged(self, tokens, positions, block_tables, ctx_len,
+                     pages, offs, drafts, n_drafts, sampling, pool):
+        """One fused speculative verify tick against ``pool``, in place.
+
+        tokens (B, K+1) int32 — lane b carries ``[last_emitted, d_1 ..
+        d_K]`` (zero-padded past its draft count) at absolute positions
+        ``ctx_len[b] .. ctx_len[b] + K``; drafts (B, K) int32 the proposed
+        tokens; n_drafts (B,) int32 valid drafts per lane; pages/offs
+        (B, K+1) physical addresses for every fed token's K/V (scratch
+        for padding); ``sampling = (temps, top_ps, seeds, draws)`` per
+        :func:`sample_tokens`.
+
+        The dispatch runs the PREFILL trunk over the (B, K+1) chunk batch
+        (``paged_gqa_verify`` — the chunked-prefill kernel as verifier),
+        selects a token at every chunk position on device, counts each
+        lane's longest accepted draft prefix, and scatters ALL fed
+        tokens' K/V into the donated pool buffers (the engine rolls back
+        the rejected tail via ``pool.truncate``).  Returns
+        ``(sel (B, K+1) int32, n_acc (B,) int32, logits (B, K+1, V))`` —
+        lane b emits ``sel[b, :n_acc[b] + 1]``.
+        """
+        args = self._place_tree((
+            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
+            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
+            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+            np.asarray(drafts, np.int32), np.asarray(n_drafts, np.int32),
+            *self._np_sampling(sampling),
+        ))
+        greedy = self._all_greedy(sampling)
+        if pool.is_int8:
+            sel, n_acc, logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                self._fwd_verify_q(
+                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                    greedy,
+                )
+            )
+        else:
+            sel, n_acc, logits, pool.k, pool.v = self._fwd_verify(
+                *args, pool.k, pool.v, greedy
+            )
+        return sel, n_acc, logits
+
+    @staticmethod
+    def _accept(sel, drafts, n_drafts):
+        """Longest accepted draft prefix per lane: draft i is accepted
+        while every draft before it was and the device selection at its
+        predicting position drew exactly it — so continuing the chunk is
+        indistinguishable from sequential decode having emitted it."""
+        K = drafts.shape[1]
+        ok = (drafts == sel[:, :K]) & (
+            jnp.arange(K, dtype=jnp.int32)[None] < n_drafts[:, None]
+        )
+        return jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+
+    def _forward_verify(self, tokens, positions, block_tables, ctx_len,
+                        pages, offs, drafts, n_drafts, temps, top_ps,
+                        seeds, draws, pool_k, pool_v, greedy_only=False):
+        logits, kn, vn = self._prefill_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            None, None, verify=True,
+        )
+        sel = sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only)
+        n_acc = self._accept(sel, drafts, n_drafts)
+        pool_k = pool_k.at[:, pages, offs].set(kn.astype(pool_k.dtype))
+        pool_v = pool_v.at[:, pages, offs].set(vn.astype(pool_v.dtype))
+        return sel, n_acc, logits, pool_k, pool_v
+
+    def _forward_verify_q(self, tokens, positions, block_tables, ctx_len,
+                          pages, offs, drafts, n_drafts, temps, top_ps,
+                          seeds, draws, pool_k, pool_v, k_scale, v_scale,
+                          greedy_only=False):
+        logits, kn, vn = self._prefill_trunk(
+            tokens, positions, block_tables, ctx_len, pool_k, pool_v,
+            k_scale, v_scale, verify=True,
+        )
+        sel = sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only)
+        n_acc = self._accept(sel, drafts, n_drafts)
+        kq, ks = quantize_kv_int8(kn)
+        vq, vs = quantize_kv_int8(vn)
+        pool_k = pool_k.at[:, pages, offs].set(kq)
+        pool_v = pool_v.at[:, pages, offs].set(vq)
+        k_scale = k_scale.at[:, pages, offs].set(ks)
+        v_scale = v_scale.at[:, pages, offs].set(vs)
+        return sel, n_acc, logits, pool_k, pool_v, k_scale, v_scale
+
     def _block_prefill_paged(self, blk, x, positions, layer, pool_k, pool_v,
-                             k_scale, v_scale, block_tables, ctx_len):
+                             k_scale, v_scale, block_tables, ctx_len,
+                             verify=False):
         cfg = self.cfg
         B, C, _ = x.shape
         h = L.norm_apply(blk["ln1"], x, cfg)
         q, k, v = self._qkv(blk, h, positions, kernel_proj=True)
+        # verify over int8 pools: the chunk's attention view round-trips
+        # through the page quantizer (what the pool will return for these
+        # tokens once scattered), while the fp original rides along as the
+        # DIAGONAL override (what one-token decode folds analytically for
+        # the self position) — and is what gets scattered, quantized by
+        # the pool exactly as one-token decode would
+        rt = verify and k_scale is not None
+        ka, va = (_int8_roundtrip(k), _int8_roundtrip(v)) if rt else (k, v)
+        ks, vs = (k, v) if rt else (None, None)
         o = self._paged_prefill_attention(
-            q, k, v, pool_k, pool_v, k_scale, v_scale, block_tables,
-            ctx_len, layer=layer,
+            q, ka, va, pool_k, pool_v, k_scale, v_scale, block_tables,
+            ctx_len, layer=layer, verify=verify, k_self=ks, v_self=vs,
         )
         o = o.astype(x.dtype).reshape(B, C, cfg.q_dim)
         x = x + self._proj(blk, "attn.wo", o)
@@ -432,12 +713,18 @@ class CachedDecoder:
 
     def _paged_prefill_attention(self, q, k_new, v_new, pool_k, pool_v,
                                  k_scale, v_scale, block_tables, ctx_len,
-                                 *, layer):
-        """One layer of chunk-batch prefill attention against the pool.
-        Distributed adapters override this with a ``shard_map`` over the
-        model axis, mirroring :meth:`_paged_attention`."""
-        return paged_gqa_prefill(
+                                 *, layer, verify=False, k_self=None,
+                                 v_self=None):
+        """One layer of chunk-batch prefill attention against the pool
+        (``paged_gqa_verify`` — the same kernel — when the chunk is a
+        speculative verify group; ``k/v_self`` is its int8-exactness
+        diagonal override).  Distributed adapters override this with a
+        ``shard_map`` over the model axis, mirroring
+        :meth:`_paged_attention`."""
+        op = paged_gqa_verify if verify else paged_gqa_prefill
+        return op(
             q, k_new, v_new, pool_k, pool_v, block_tables, ctx_len,
             layer=layer, k_scale=k_scale, v_scale=v_scale,
+            k_self=k_self, v_self=v_self,
             interpret=self.paged_interpret,
         )

@@ -20,11 +20,15 @@ Layers the single-device continuous-batching engine over a
     KV-head axis, NEVER on pages: every device owns the full page range
     for its local heads, so block-table indexing resolves locally and
     decode attention moves zero cross-device KV bytes;
-  * **the paged-attention dispatches** — decode AND batched chunked
-    prefill both run under ``shard_map`` over the model axis: each device
-    attends its local KV-head slice of the pool with its local query-head
-    group, and the donated in-place K/V scatters in the same jitted steps
-    write only local pages.
+  * **the paged-attention dispatches** — decode, batched chunked
+    prefill, AND the speculative verify tick all run under ``shard_map``
+    over the model axis: each device attends its local KV-head slice of
+    the pool with its local query-head group, and the donated in-place
+    K/V scatters in the same jitted steps write only local pages.  The
+    verify/sampling dispatches are re-jitted with pinned
+    ``out_shardings`` in :meth:`DistributedCachedDecoder.make_pool`,
+    exactly like decode/prefill, so speculative TP serving moves zero
+    cross-device KV bytes.
 
 Everything degrades gracefully: a 1-wide model axis, or an architecture
 whose KV-head count does not divide it, falls back to the replicated
@@ -49,6 +53,7 @@ from repro.core.quantizer import QuantizedLinear
 from repro.kernels.paged_attention.ops import (
     paged_gqa_decode,
     paged_gqa_prefill,
+    paged_gqa_verify,
 )
 from repro.runtime.sharding import MeshContext, serving_rules
 from repro.serve.adapter import CachedDecoder
@@ -256,7 +261,10 @@ class DistributedCachedDecoder(CachedDecoder):
         kv_sh = NamedSharding(self.mesh, spec)
         pool.k = jax.device_put(pool.k, kv_sh)
         pool.v = jax.device_put(pool.v, kv_sh)
-        out_paged = (self._rep, kv_sh, kv_sh)
+        rep = self._rep
+        out_paged = (rep, kv_sh, kv_sh)
+        out_sample = (rep, rep, kv_sh, kv_sh)  # (sel, logits, k, v)
+        out_verify = (rep, rep, rep, kv_sh, kv_sh)  # (+ n_acc)
         if pool.is_int8:
             sc_sh = NamedSharding(self.mesh, P(*spec[:4]))
             pool.k_scale = jax.device_put(pool.k_scale, sc_sh)
@@ -271,6 +279,16 @@ class DistributedCachedDecoder(CachedDecoder):
                 donate_argnums=(6, 7, 8, 9),
                 out_shardings=(*out_paged, sc_sh, sc_sh),
             )
+            self._fwd_paged_sq = jax.jit(
+                self._forward_paged_sample_q,
+                donate_argnums=(10, 11, 12, 13), static_argnums=(14,),
+                out_shardings=(*out_sample, sc_sh, sc_sh),
+            )
+            self._fwd_verify_q = jax.jit(
+                self._forward_verify_q,
+                donate_argnums=(12, 13, 14, 15), static_argnums=(16,),
+                out_shardings=(*out_verify, sc_sh, sc_sh),
+            )
         self._fwd_paged = jax.jit(
             self._forward_paged, donate_argnums=(6, 7),
             out_shardings=out_paged,
@@ -279,12 +297,24 @@ class DistributedCachedDecoder(CachedDecoder):
             self._forward_prefill_paged, donate_argnums=(6, 7),
             out_shardings=out_paged,
         )
+        self._fwd_paged_s = jax.jit(
+            self._forward_paged_sample, donate_argnums=(10, 11),
+            static_argnums=(12,), out_shardings=out_sample,
+        )
+        self._fwd_verify = jax.jit(
+            self._forward_verify, donate_argnums=(12, 13),
+            static_argnums=(14,), out_shardings=out_verify,
+        )
         self._pool_sharded = spec[3] is not None
         return pool
 
     def _place(self, x, dtype=None):
         """Small per-step host arrays commit replicated on the mesh."""
         return jax.device_put(jnp.asarray(x, dtype), self._rep)
+
+    def _place_tree(self, arrays: tuple):
+        """One batched device_put of a step's host arrays, replicated."""
+        return jax.device_put(arrays, self._rep)
 
     # ---- SPMD paged attention -------------------------------------------
 
@@ -337,24 +367,31 @@ class DistributedCachedDecoder(CachedDecoder):
 
     def _paged_prefill_attention(self, q, k_new, v_new, pool_k, pool_v,
                                  k_scale, v_scale, block_tables, ctx_len,
-                                 *, layer):
+                                 *, layer, verify=False, k_self=None,
+                                 v_self=None):
         """Chunk-batch prefill attention under ``shard_map``: per shard it
         is the single-device prefill kernel over the local KV-head page
         slice (local chunk queries/K/V ride the matching head group), so
-        batched prefill moves no KV bytes across devices.  Falls back to
-        the replicated path when the pool could not shard."""
+        batched prefill moves no KV bytes across devices — and the
+        speculative verifier (``verify=True``, the same kernel, plus its
+        int8-exactness diagonal override ``k/v_self``) inherits the exact
+        sharding, so a TP verify tick also moves zero cross-device KV
+        bytes.  Falls back to the replicated path when the pool could not
+        shard."""
         if not self._pool_sharded:
             return super()._paged_prefill_attention(
                 q, k_new, v_new, pool_k, pool_v, k_scale, v_scale,
-                block_tables, ctx_len, layer=layer,
+                block_tables, ctx_len, layer=layer, verify=verify,
+                k_self=k_self, v_self=v_self,
             )
+        op = paged_gqa_verify if verify else paged_gqa_prefill
         h_spec = P(None, None, "model", None)  # (B, C, heads, hd)
         kv_spec = P(None, None, None, "model", None)
         interpret = self.paged_interpret
 
         if k_scale is None:
             def local(q, kn, vn, kp, vp, bt, cl):
-                return paged_gqa_prefill(
+                return op(
                     q, kn, vn, kp, vp, bt, cl, layer=layer,
                     interpret=interpret,
                 )
@@ -368,8 +405,26 @@ class DistributedCachedDecoder(CachedDecoder):
 
         sc_spec = P(None, None, None, "model")
 
+        if k_self is not None:
+            # the self override shards like the chunk K/V (KV heads)
+            def local_qs(q, kn, vn, kp, vp, ks, vs, ksf, vsf, bt, cl):
+                return op(
+                    q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=ks,
+                    v_scale=vs, k_self=ksf, v_self=vsf,
+                    interpret=interpret,
+                )
+
+            f = shard_map(
+                local_qs, mesh=self.mesh,
+                in_specs=(h_spec, h_spec, h_spec, kv_spec, kv_spec, sc_spec,
+                          sc_spec, h_spec, h_spec, P(), P()),
+                out_specs=h_spec, check_rep=False,
+            )
+            return f(q, k_new, v_new, pool_k, pool_v, k_scale, v_scale,
+                     k_self, v_self, block_tables, ctx_len)
+
         def local_q(q, kn, vn, kp, vp, ks, vs, bt, cl):
-            return paged_gqa_prefill(
+            return op(
                 q, kn, vn, kp, vp, bt, cl, layer=layer, k_scale=ks,
                 v_scale=vs, interpret=interpret,
             )

@@ -40,6 +40,30 @@ previously-seen prompt prefixes into newly admitted slots (refcounted,
 copy-on-write), so shared system prompts/few-shot headers are admitted at
 ``prefill_pos > 0`` and never recomputed.
 
+Speculative multi-token decode (``EngineConfig.speculative_k = K > 0``,
+paged path only): each decode tick, a host-side self-drafter
+(:mod:`repro.serve.drafter` — n-gram prompt lookup over the lane's own
+history, no second model) proposes up to K tokens per lane, and ONE fused
+padded ``(B, K+1)`` dispatch (``CachedDecoder.verify_paged`` — the
+chunked-prefill kernel reused as the verifier) scores every lane's
+``[last_emitted, d_1 .. d_K]`` chunk, selects a token per position on
+device, and accepts each lane's longest matching draft prefix — so a tick
+emits 1 to K+1 tokens per lane for one weight pass.  The dispatch
+scatters all fed tokens' K/V; the rejected tail is un-written afterwards
+via ``pool.truncate`` (refcount-aware rollback — COW already resolved any
+shared page at write time).  Greedy speculative decode is token-identical
+to the one-token paged path; accepted extras are charged against the NEXT
+step's budget (``TokenBudgetFCFS.charge_accepted`` — rejected drafts are
+never charged).
+
+Sampling runs on device by default on the paged path
+(``EngineConfig.device_sample``): the softmax/top-p draw is fused into
+the decode/verify dispatch with per-request keys
+``fold_in(PRNGKey(seed), emission_index)``, making sampled streams
+reproducible across batching, eviction/replay, and speculative grouping.
+The host-side draw (``launch/serve.py --host-sample``) is kept for
+debugging; both are exact argmax at temperature 0.
+
 All device calls are shape-static per bucket: new requests join mid-flight
 without recompilation.
 """
@@ -52,7 +76,8 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve.adapter import CachedDecoder
+from repro.serve.adapter import CachedDecoder, sample_tokens
+from repro.serve.drafter import make_drafter
 from repro.serve.kv_cache import page_bucket, pages_needed
 from repro.serve.scheduler import (
     Request,
@@ -78,6 +103,10 @@ class EngineConfig:
     paged_prefill: bool = False  # batched cross-request prefill over the pool
     prefix_cache: bool = False  # map cached prompt-prefix pages on admit
     kv_int8: bool = False  # int8 KV pages + per-(token, head) scales
+    speculative_k: int = 0  # draft depth K (0 = one token per lane per tick)
+    draft: str = "ngram"  # self-drafter kind (serve/drafter.py)
+    draft_ngram: int = 3  # longest lookup pattern the ngram drafter tries
+    device_sample: bool = False  # fuse the token draw into the paged dispatch
 
     @property
     def pages_per_seq(self) -> int:
@@ -95,6 +124,23 @@ class Engine:
         self.ecfg = ecfg
         self.paged = ecfg.paged_decode or adapter.paged
         self.paged_prefill = ecfg.paged_prefill
+        self.spec_k = ecfg.speculative_k
+        if self.spec_k < 0:
+            raise ValueError(f"speculative_k must be >= 0, got {self.spec_k}")
+        if self.spec_k and not self.paged:
+            raise ValueError(
+                "speculative decode verifies drafts over the paged pool "
+                "(the chunked-prefill kernel path); enable paged_decode"
+            )
+        if ecfg.device_sample and not self.paged:
+            raise ValueError(
+                "on-device sampling is fused into the paged dispatches; "
+                "enable paged_decode (or keep host-side sampling)"
+            )
+        self.drafter = (
+            make_drafter(ecfg.draft, self.spec_k, max_ngram=ecfg.draft_ngram)
+            if self.spec_k else None
+        )
         if ecfg.kv_int8:
             dtype = jnp.int8
         # the adapter owns pool construction so distributed adapters can
@@ -120,6 +166,11 @@ class Engine:
             "prefill_batches": 0,
             "prefill_batch_size": 0,  # widest co-batched prefill group seen
             "prefix_hit_tokens": 0,  # prompt tokens admitted from the cache
+            "spec_ticks": 0,  # fused verify dispatches run
+            "spec_lanes": 0,  # lane-verifications (lanes summed over ticks)
+            "draft_tokens": 0,  # tokens the drafter proposed
+            "accepted_tokens": 0,  # proposed tokens the verifier accepted
+            "rolled_back_tokens": 0,  # rejected drafts un-written (truncate)
         }
         self._t0: Optional[float] = None
 
@@ -226,7 +277,10 @@ class Engine:
                     self._run_prefill_chunk(req, n, now)
             worked = True
         if decode:
-            self._run_decode(decode, now)
+            if self.spec_k:
+                self._run_decode_spec(decode, now)
+            else:
+                self._run_decode(decode, now)
             worked = True
         self.stats["steps"] += 1
         return worked
@@ -303,11 +357,30 @@ class Engine:
             req.state = RequestState.DECODE
             last = np.asarray(last_logits)
             req.emit(
-                self._select_token(req, last), now,
+                self._boundary_token(req, last), now,
                 last if self.ecfg.record_logits else None,
             )
             if req.done:
                 self._finish(req)
+
+    def _boundary_token(self, req: Request, logits: np.ndarray) -> int:
+        """First-token selection at the prefill boundary.  With on-device
+        sampling every draw must stay the same pure function of
+        (seed, emission_index) the fused dispatches use — a host numpy
+        draw here would fork a replayed (evicted) request's stream from
+        its uncontended one — so non-greedy lanes run the identical
+        ``sample_tokens`` math on the boundary logits."""
+        sp = req.sampling
+        if not self.ecfg.device_sample or sp.greedy:
+            return self._select_token(req, logits)
+        sel = sample_tokens(
+            jnp.asarray(logits)[None, None],
+            jnp.asarray([sp.temperature], jnp.float32),
+            jnp.asarray([sp.top_p], jnp.float32),
+            jnp.asarray([sp.seed], jnp.int32),
+            jnp.asarray([len(req.out_tokens)], jnp.int32),
+        )
+        return int(sel[0, 0])
 
     def _run_prefill_chunk(self, req: Request, n: int, now: float) -> None:
         prefix = req.prefix
@@ -372,6 +445,21 @@ class Engine:
             self.pool.max_pages_per_seq,
         )
 
+    def _sampling_arrays(self, reqs: list[Request], B: int):
+        """(temps, top_ps, seeds, draws) per lane for the fused on-device
+        draw; ``draws`` is each lane's emission count so far, so the draw
+        key is a pure function of (request seed, emission index)."""
+        temps = np.zeros(B, np.float32)
+        top_ps = np.ones(B, np.float32)
+        seeds = np.zeros(B, np.int32)
+        draws = np.zeros(B, np.int32)
+        for b, r in enumerate(reqs):
+            temps[b] = r.sampling.temperature
+            top_ps[b] = r.sampling.top_p
+            seeds[b] = r.sampling.seed
+            draws[b] = len(r.out_tokens)
+        return temps, top_ps, seeds, draws
+
     def _run_decode(self, decode: list[Request], now: float) -> None:
         B = self.ecfg.n_slots
         assert len(decode) <= B
@@ -385,13 +473,21 @@ class Engine:
             ctx_len[b] = self.pool.length(r.slot)
             positions[b, 0] = ctx_len[b]
         pos_list = [int(p) for p in positions[:, 0]]
+        sel_np = None
         if self.paged:
             bt = self.pool.block_table(slots)
             bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
             pages, offs = self.pool.addresses(slots, pos_list)
-            logits = self.adapter.decode_paged(
-                tokens, positions, bt, ctx_len, pages, offs, self.pool
-            )
+            if self.ecfg.device_sample:
+                sel, logits = self.adapter.decode_paged_sample(
+                    tokens, positions, bt, ctx_len, pages, offs,
+                    self._sampling_arrays(decode, B), self.pool,
+                )
+                sel_np = np.asarray(sel[:, 0])
+            else:
+                logits = self.adapter.decode_paged(
+                    tokens, positions, bt, ctx_len, pages, offs, self.pool
+                )
             self.pool.note_written(slots, pos_list)
         else:
             ctx_k, ctx_v = self.pool.gather(slots)
@@ -403,21 +499,147 @@ class Engine:
                 jnp.asarray(ctx_len),
             )
             self.pool.write(slots, pos_list, k_new[:, :, 0], v_new[:, :, 0])
-        logits_np = np.asarray(logits[:, 0])
+        logits_np = None
+        if sel_np is None or self.ecfg.record_logits:
+            logits_np = np.asarray(logits[:, 0])
         for b, r in enumerate(decode):
+            tok = (
+                int(sel_np[b]) if sel_np is not None
+                else self._select_token(r, logits_np[b])
+            )
             r.emit(
-                self._select_token(r, logits_np[b]), now,
+                tok, now,
                 logits_np[b] if self.ecfg.record_logits else None,
             )
             self.stats["decode_tokens"] += 1
             if r.done:
                 self._finish(r)
 
+    def _run_decode_spec(self, decode: list[Request], now: float) -> None:
+        """One speculative tick: draft up to K tokens per lane, verify
+        every lane's ``[last_emitted, drafts...]`` chunk in ONE fused
+        padded (B, K+1) dispatch, emit each lane's accepted prefix plus
+        the bonus token, and roll back the rejected tail's K/V."""
+        B, K = self.ecfg.n_slots, self.spec_k
+        W = K + 1
+        assert len(decode) <= B
+        slots: list[Optional[int]] = [None] * B
+        tokens = np.zeros((B, W), np.int32)
+        positions = np.tile(np.arange(W, dtype=np.int32), (B, 1))
+        ctx_len = np.zeros((B,), np.int32)
+        drafts = np.zeros((B, K), np.int32)
+        n_drafts = np.zeros((B,), np.int32)
+        starts = [0] * B
+        widths = [0] * B
+        for b, r in enumerate(decode):
+            slots[b] = r.slot
+            length = self.pool.length(r.slot)
+            # opportunistic draft: capped by the request's remaining token
+            # budget, the slot's page capacity, and page availability —
+            # drafting never evicts anyone (the guaranteed +1 page was
+            # already claimed by _ensure_decode_pages)
+            room = min(
+                K,
+                r.max_new - len(r.out_tokens) - 1,
+                self.pool.seq_capacity_tokens() - (length + 1),
+            )
+            prop = (
+                self.drafter.propose(r.prefix, room)
+                if room > 0 else np.zeros(0, np.int32)
+            )
+            n = len(prop)
+            while n > 0 and not self.pool.extend(r.slot, length + 1 + n):
+                n -= 1
+            tokens[b, 0] = r.out_tokens[-1]
+            tokens[b, 1 : 1 + n] = prop[:n]
+            drafts[b, :n] = prop[:n]
+            n_drafts[b] = n
+            positions[b] += length
+            ctx_len[b] = length
+            starts[b], widths[b] = length, 1 + n
+            self.stats["draft_tokens"] += n
+        pages, offs = self.pool.span_addresses(slots, starts, widths, W)
+        bt = self.pool.block_table(slots)
+        bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
+        sampling = (
+            self._sampling_arrays(decode, B) if self.ecfg.device_sample
+            # host-sample debugging path: zero temps make the device
+            # selection pure greedy; the host re-selects from the logits
+            else (np.zeros(B, np.float32), np.ones(B, np.float32),
+                  np.zeros(B, np.int32), np.zeros(B, np.int32))
+        )
+        sel, n_acc, logits = self.adapter.verify_paged(
+            tokens, positions, bt, ctx_len, pages, offs, drafts, n_drafts,
+            sampling, self.pool,
+        )
+        self.pool.note_span_written(slots, starts, widths)
+        self.stats["spec_ticks"] += 1
+        self.stats["spec_lanes"] += len(decode)
+        logits_np = None
+        if not self.ecfg.device_sample or self.ecfg.record_logits:
+            logits_np = np.asarray(logits)
+        sel_np, n_acc_np = np.asarray(sel), np.asarray(n_acc)
+        extra = 0
+        for b, r in enumerate(decode):
+            length = int(ctx_len[b])
+            emitted = 0
+            if self.ecfg.device_sample:
+                for i in range(int(n_acc_np[b]) + 1):
+                    r.emit(
+                        int(sel_np[b, i]), now,
+                        logits_np[b, i] if self.ecfg.record_logits else None,
+                    )
+                    emitted += 1
+                    if r.done:
+                        break
+            else:
+                i = 0
+                while True:
+                    tok = self._select_token(r, logits_np[b, i])
+                    r.emit(
+                        tok, now,
+                        logits_np[b, i] if self.ecfg.record_logits else None,
+                    )
+                    emitted += 1
+                    if r.done or i >= n_drafts[b] or tok != drafts[b, i]:
+                        break
+                    i += 1
+            self.stats["decode_tokens"] += emitted
+            self.stats["accepted_tokens"] += emitted - 1
+            self.stats["rolled_back_tokens"] += widths[b] - emitted
+            extra += emitted - 1
+            if r.done:
+                self._finish(r)  # releases the slot — no rollback needed
+            else:
+                # un-write the rejected tail: the last emitted token's KV
+                # is computed NEXT tick (it is the new last_emitted), so
+                # the valid length is ctx + emitted
+                self.pool.truncate(r.slot, length + emitted)
+        # accepted extras beyond the planned one-per-lane charge the NEXT
+        # step's budget; rejected drafts were never charged
+        self.scheduler.charge_accepted(extra)
+
     # ---- reporting ------------------------------------------------------
 
     def summary(self) -> dict:
         return {
             **self.stats,
+            # speculative decode health: how often the drafter was right,
+            # and how many tokens a verify tick emitted on average
+            "acceptance_rate": (
+                self.stats["accepted_tokens"]
+                / max(1, self.stats["draft_tokens"])
+            ),
+            "accepted_per_tick": (
+                self.stats["accepted_tokens"]
+                / max(1, self.stats["spec_ticks"])
+            ),
+            # mean tokens ONE lane emits per verify it takes part in
+            # (1.0 = no speculative benefit, K+1 = every draft accepted)
+            "tokens_per_lane_tick": (
+                self.stats["decode_tokens"]
+                / max(1, self.stats["spec_lanes"])
+            ) if self.stats["spec_ticks"] else 1.0,
             "peak_pages_in_use": self.pool.peak_pages_in_use,
             "peak_occupancy": self.pool.peak_pages_in_use
             / max(1, self.pool.n_pages - 1),

@@ -296,6 +296,32 @@ class PagedKVPool:
             self._decref(page)
         self._free_slots.append(slot)
 
+    def truncate(self, slot: int, new_len: int) -> int:
+        """Roll back a slot to ``new_len`` valid tokens, un-writing the
+        tail: wholly-invalid trailing pages are unmapped (refcount
+        decrement — a page the prefix trie or a COW sibling still holds
+        survives for them) and the slot's valid length drops.  Page
+        CONTENTS are never mutated here: a partially-valid tail page keeps
+        its stale K/V above ``new_len``, which every reader masks via
+        ``ctx_len`` and the next write overwrites.  Writes into shared
+        pages were already copy-on-write resolved by the address paths, so
+        rollback can only ever drop this slot's private view, never damage
+        a cached page.  Speculative decode uses this to un-write rejected
+        draft tokens.  Returns the number of pages unmapped."""
+        st = self._slots[slot]
+        if new_len < 0 or new_len > st.length:
+            raise ValueError(
+                f"truncate to {new_len} outside [0, {st.length}] "
+                f"(slot {slot})"
+            )
+        keep = max(1, pages_needed(new_len, self.page_size))
+        dropped = 0
+        while len(st.pages) > keep:
+            self._decref(st.pages.pop())
+            dropped += 1
+        st.length = new_len
+        return dropped
+
     def length(self, slot: int) -> int:
         return self._slots[slot].length
 

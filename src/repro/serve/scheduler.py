@@ -12,6 +12,13 @@ default); leftover budget goes to prefill chunks — first to sequences
 mid-prefill, then to admitting queued requests whose pages fit.  Admission
 is strict FCFS: a head-of-queue request that does not fit blocks later
 arrivals (no starvation).
+
+Speculative decode charges on ACCEPT, not on propose: a decode lane is
+planned at its guaranteed one token, and only the extra tokens a verify
+tick actually accepted are charged — as a debt against the NEXT step's
+budget (:meth:`TokenBudgetFCFS.charge_accepted`).  Rejected draft tokens
+never touch the budget, so a lane whose drafts miss is not double-charged
+when the same tokens are re-proposed on the retry tick.
 """
 from __future__ import annotations
 
@@ -147,6 +154,18 @@ class TokenBudgetFCFS:
         self.prefill_chunk = prefill_chunk
         self.waiting: list[Request] = []  # not yet arrived (virtual clock)
         self.queue: deque[Request] = deque()  # arrived, FCFS
+        # speculative accept debt: extra tokens emitted beyond the one
+        # planned per decode lane, charged against the NEXT step's budget
+        self._accept_debt = 0
+
+    def charge_accepted(self, n_tokens: int) -> None:
+        """Charge ``n_tokens`` extra accepted (speculative) tokens against
+        the next step's budget.  Called by the engine after a verify tick
+        with the accepted-beyond-one count; rejected drafts are never
+        charged (charge on accept, not on propose)."""
+        if n_tokens < 0:
+            raise ValueError(f"accepted token charge must be >= 0, got {n_tokens}")
+        self._accept_debt += n_tokens
 
     def submit(self, req: Request) -> None:
         self.waiting.append(req)
@@ -170,7 +189,11 @@ class TokenBudgetFCFS:
 
     def plan(self, running: list[Request], pool) -> StepPlan:
         decode = [r for r in running if r.state is RequestState.DECODE]
-        budget = self.token_budget - len(decode)
+        # settle last tick's speculative accept debt first: accepted extras
+        # ate real budget, so they displace this step's prefill work (a
+        # negative remainder simply plans no prefill; decode always runs)
+        budget = self.token_budget - self._accept_debt - len(decode)
+        self._accept_debt = 0
         prefill: list[tuple[Request, int]] = []
         hit_tokens = 0
         # continue sequences already mid-prefill (oldest first); every

@@ -329,3 +329,76 @@ def test_indivisible_kv_heads_fall_back_replicated(quantized_smoke):
     assert eng.pool.device_bytes() == eng.pool.total_bytes()
     for a, b in zip(t0, t1):
         np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_speculative_token_parity(mesh):
+    """Speculative draft-and-verify under shard_map: the TP engine's
+    greedy stream is token-identical to the single-device speculative
+    engine (which is itself pinned to the one-token path), with real
+    draft acceptance on a cyclic workload."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.tile(np.asarray([7, 91, 33, 150], np.int32), (3, 8))
+    gen = 10
+    kw = dict(speculative_k=4, device_sample=True)
+    eng_tp, tp = _run_engine(
+        DistributedCachedDecoder.from_model(model, params, mesh=mesh),
+        prompts, gen, **kw,
+    )
+    assert eng_tp.summary()["accepted_tokens"] > 0
+    _, single = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen, **kw,
+    )
+    for a, b in zip(tp, single):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_speculative_int8_token_parity(mesh):
+    """Speculative verify over int8 sharded pages (round-tripped chunk
+    K/V + fp diagonal override, all under shard_map) matches the
+    single-device int8 speculative engine exactly."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.tile(np.asarray([7, 91, 33, 150], np.int32), (3, 8))
+    gen = 8
+    kw = dict(speculative_k=4, device_sample=True, kv_int8=True)
+    _, tp = _run_engine(
+        DistributedCachedDecoder.from_model(model, params, mesh=mesh),
+        prompts, gen, **kw,
+    )
+    _, single = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen, **kw,
+    )
+    for a, b in zip(tp, single):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tp_engine_device_sampled_stream_parity(mesh):
+    """On-device sampling (fold_in keys) is layout-independent: the TP
+    engine draws the exact sampled stream of the single-device engine."""
+    from repro.serve.scheduler import SamplingParams
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8, seed=2).tokens
+    gen = 6
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=23)
+
+    def run(adapter):
+        engine = Engine(adapter, EngineConfig(
+            max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+            token_budget=32, prefill_chunk=8, paged_decode=True,
+            device_sample=True,
+        ))
+        reqs = [engine.submit(np.asarray(p), max_new=gen, sampling=sp)
+                for p in prompts]
+        engine.run()
+        return [np.asarray(r.out_tokens) for r in reqs]
+
+    tp = run(DistributedCachedDecoder.from_model(model, params, mesh=mesh))
+    single = run(CachedDecoder.from_model(model, params))
+    for a, b in zip(tp, single):
+        np.testing.assert_array_equal(a, b)

@@ -788,3 +788,499 @@ def test_artifact_rejects_non_artifact_dir(tmp_path):
     save_checkpoint(tmp_path / "ckpt", 0, {"w": jnp.zeros((2, 2))})
     with pytest.raises(ValueError):
         load_quantized(tmp_path / "ckpt")
+
+
+# ---------------------------------------------------------------------------
+# Speculative decode: drafter, KV rollback, budget accounting, token parity
+# ---------------------------------------------------------------------------
+
+
+def _spec_prompts(n=3, reps=8):
+    """Cyclic prompts: the model falls into repetitive continuations the
+    n-gram drafter predicts, so speculative ticks actually accept."""
+    return np.tile(np.asarray([7, 91, 33, 150], np.int32), (n, reps))
+
+
+def test_drafter_ngram_proposals():
+    from repro.serve.drafter import NgramDrafter, make_drafter
+
+    d = NgramDrafter(4, max_ngram=3)
+    # periodic history drafts at full depth (iterative continuation past
+    # the history's edge, not truncated at it)
+    np.testing.assert_array_equal(
+        d.propose(np.tile([5, 9], 6)), [5, 9, 5, 9]
+    )
+    np.testing.assert_array_equal(d.propose([1, 2, 3, 7, 7, 7]), [7] * 4)
+    # no repeated n-gram -> nothing proposed
+    assert d.propose(np.arange(10)).size == 0
+    # propose(k) caps below the drafter depth
+    assert len(d.propose(np.tile([5, 9], 6), 2)) == 2
+    # the trailing n-gram itself is never its own match
+    assert d.propose(np.asarray([1, 2])).size == 0
+    with pytest.raises(ValueError):
+        NgramDrafter(0)
+    with pytest.raises(ValueError):
+        make_drafter("oracle", 4)
+    assert make_drafter("ngram", 2).k == 2
+
+
+def test_pool_truncate_rollback():
+    pool = _pool(n_pages=9, page_size=4, n_slots=3, max_pages=4)
+    cfg = _smoke_cfg()
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    slot = pool.admit(10)  # 3 pages
+    k = jnp.ones((L, 10, KV, hd), jnp.float32)
+    pool.write_span(slot, 0, 10, k, k)  # 3 pages claimed via span write?
+    assert pool.length(slot) == 10
+    pages_before = pool.pages_in_use
+    # rollback into the middle of page 2: page 3 is wholly invalid
+    assert pool.truncate(slot, 6) == 1
+    assert pool.length(slot) == 6
+    assert pool.pages_in_use == pages_before - 1
+    # rollback that only shrinks length within a kept page frees nothing
+    assert pool.truncate(slot, 5) == 0
+    assert pool.length(slot) == 5
+    # growing via truncate is rejected
+    with pytest.raises(ValueError):
+        pool.truncate(slot, 7)
+    # rollback to zero keeps one page mapped (admit's minimum)
+    assert pool.truncate(slot, 0) == 1
+    assert pool.length(slot) == 0
+    pool.release(slot)
+    assert pool.pages_in_use == 0
+
+
+def test_pool_spec_write_rollback_cow_shared_tail():
+    """A speculative write + rollback on a lane whose tail page is
+    prefix-cache-shared: the write triggers copy-on-write (the cached
+    page is NEVER mutated), and the rollback only unmaps the lane's
+    private view — refcounts stay exact and LRU reclaim still works."""
+    cfg = _smoke_cfg()
+    pool = _prefix_pool()
+    L, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    toks = np.arange(8, dtype=np.int32)
+    k = jnp.arange(L * 8 * KV * hd, dtype=jnp.float32).reshape(L, 8, KV, hd)
+    a = pool.admit(8, tokens=toks)
+    pool.write_span(a, 0, 8, k, -k)
+    pool.register_prefix(a, toks)
+    b = pool.admit(12, tokens=toks)  # partial hit: both pages shared
+    assert pool.length(b) == 8 and pool.shared_pages == 2
+    # roll b back INTO the shared tail page (a replayed/evicted lane) —
+    # truncate itself must not mutate or free the shared page
+    dropped = pool.truncate(b, 6)
+    assert pool.length(b) == 6
+    assert pool.shared_pages == 2  # page 1 still shared (trie + a + b)
+    cow0 = pool.cow_copies
+    # speculative verify writes [last, d1, d2] at positions 6..8 (the
+    # engine claims draft pages first): the write path must COW the
+    # shared page 1 before the scatter
+    assert pool.extend(b, 9)
+    kv_new = jnp.full((L, 3, KV, hd), 99.0)
+    pool.write_span(b, 6, 3, kv_new, kv_new)
+    assert pool.cow_copies >= cow0 + 1
+    # rollback the rejected tail (keep only position 6)
+    pool.truncate(b, 7)
+    assert pool.length(b) == 7
+    # the cached/shared page kept its ORIGINAL content: a fresh hit still
+    # maps bit-identical K/V
+    ga, _ = pool.gather([a])
+    np.testing.assert_array_equal(np.asarray(ga[:, 0, :8]), np.asarray(k))
+    c = pool.admit(10, tokens=toks)
+    gc_, _ = pool.gather([c])
+    np.testing.assert_array_equal(
+        np.asarray(gc_[:, 0, :8]), np.asarray(k)
+    )
+    # release everything; trie-held pages reclaim under pressure as before
+    for s in (a, b, c):
+        pool.release(s)
+    slots = [pool.admit(16) for _ in range(3)]
+    assert all(s is not None for s in slots)
+    assert pool.cached_pages == 0
+    for s in slots:
+        pool.release(s)
+    assert pool.pages_in_use == 0
+
+
+def test_scheduler_charges_on_accept_not_propose():
+    """Accepted speculative extras debit the NEXT step's prefill budget;
+    rejected drafts never touch it (no double charge on the retry tick)."""
+    from repro.serve.scheduler import Request, RequestState, TokenBudgetFCFS
+
+    class _FakePool:
+        def admit(self, n, tokens=None):
+            return None  # nothing admissible: isolate the budget math
+
+        def length(self, slot):
+            return 0
+
+    sched = TokenBudgetFCFS(token_budget=8, prefill_chunk=4)
+    running = []
+    for _ in range(2):
+        r = Request(prompt=np.arange(4, dtype=np.int32), max_new=4)
+        r.state = RequestState.PREFILL
+        r.prefill_pos = 0
+        running.append(r)
+    # no debt: 8 budget -> two 4-token chunks
+    plan = sched.plan(running, _FakePool())
+    assert [n for _, n in plan.prefill] == [4, 4]
+    # 5 accepted extras last tick -> only 3 budget left for prefill
+    sched.charge_accepted(5)
+    plan = sched.plan(running, _FakePool())
+    assert sum(n for _, n in plan.prefill) == 3
+    # the debt was settled, not carried: next plan is back to full budget
+    plan = sched.plan(running, _FakePool())
+    assert sum(n for _, n in plan.prefill) == 8
+    with pytest.raises(ValueError):
+        sched.charge_accepted(-1)
+
+
+def test_engine_speculative_fp_token_and_logits_parity():
+    """Greedy speculative decode (device selection) emits exactly the
+    one-token dense reference's tokens AND logits, while actually
+    accepting drafts and rolling back rejected K/V."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts()
+    gen = 12
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        paged_decode=True, speculative_k=4, device_sample=True,
+    )
+    s = engine.summary()
+    assert s["spec_ticks"] > 0
+    assert s["accepted_tokens"] > 0  # cyclic prompts: drafts really land
+    assert s["rolled_back_tokens"] > 0  # and some really get rolled back
+    assert engine.pool.pages_in_use == 0
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    full = np.concatenate([np.asarray(prompts), ref], axis=1)
+    hidden, _ = model.forward(params, {"tokens": jnp.asarray(full)})
+    ref_logits = np.asarray(model.logits(params, hidden))
+    S = prompts.shape[1]
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+        np.testing.assert_allclose(
+            np.stack(r.step_logits), ref_logits[i, S - 1 : S - 1 + gen],
+            rtol=2e-3, atol=2e-3,
+        )
+
+
+def test_engine_speculative_host_sample_path_matches():
+    """--host-sample debugging path: the verify dispatch returns logits
+    and the host re-selects/accepts — same greedy stream."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts()
+    gen = 10
+    _, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        paged_decode=True, speculative_k=3, device_sample=False,
+    )
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_speculative_quantized_matches_recompute(quantized_smoke):
+    from repro.launch.serve import quantized_generate
+
+    cfg, qm, _ = quantized_smoke
+    prompts = _spec_prompts()
+    gen = 8
+    _, reqs = _run_engine(
+        CachedDecoder.from_quantized(qm), prompts, gen,
+        paged_decode=True, speculative_k=4, device_sample=True,
+    )
+    ref = np.asarray(quantized_generate(qm, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_speculative_int8_matches_sequential_int8():
+    """int8 pages: the verify dispatch round-trips the chunk K/V through
+    the page quantizer with the fp diagonal override, so speculative
+    decode is token-identical to the sequential int8 paged engine."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts()
+    gen = 10
+    runs = []
+    for k in (0, 4):
+        eng, reqs = _run_engine(
+            CachedDecoder.from_model(model, params), prompts, gen,
+            paged_decode=True, speculative_k=k, device_sample=True,
+            kv_int8=True, record_logits=False,
+        )
+        runs.append([np.asarray(r.out_tokens) for r in reqs])
+        if k:
+            assert eng.summary()["accepted_tokens"] > 0
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_speculative_eviction_under_page_pressure():
+    """Speculative lanes under page pressure: drafts are opportunistic
+    (never evict anyone), eviction/replay still reproduces exact tokens,
+    and every page is back on the free list at drain."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts(reps=4)  # 16-token prompts
+    gen = 12
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        n_slots=3, page_size=4, n_pages=14, paged_decode=True,
+        speculative_k=4, device_sample=True, record_logits=False,
+    )
+    assert engine.stats["evictions"] > 0
+    assert engine.pool.pages_in_use == 0
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+
+
+def test_engine_speculative_prefix_cache_cow_and_parity():
+    """Speculative decode + prefix cache: shared prompt pages are mapped,
+    speculative writes COW instead of mutating cached pages, and the
+    stream still matches the dense reference."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts()
+    gen = 10
+    engine, reqs = _run_engine(
+        CachedDecoder.from_model(model, params), prompts, gen,
+        arrival_gap=0.2, paged_decode=True, paged_prefill=True,
+        prefix_cache=True, speculative_k=4, device_sample=True,
+    )
+    s = engine.summary()
+    assert s["prefix_hit_tokens"] > 0
+    assert s["accepted_tokens"] > 0
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+    # cached prompt pages survived speculative COW traffic intact: a new
+    # identical-prompt engine admission still decodes the same stream
+    assert s["cached_pages"] > 0
+
+
+def test_engine_speculative_stop_token_mid_acceptance():
+    """A stop token inside an accepted draft run finishes the request at
+    the stop emission; later accepted tokens are discarded and their
+    pages released."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts(n=1)
+    gen = 12
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    stop = int(ref[0, 5])
+    engine = Engine(
+        CachedDecoder.from_model(model, params),
+        EngineConfig(max_seq_len=prompts.shape[1] + gen, n_slots=2,
+                     page_size=4, token_budget=32, prefill_chunk=8,
+                     paged_decode=True, speculative_k=4,
+                     device_sample=True),
+    )
+    r = engine.submit(np.asarray(prompts[0]), max_new=gen,
+                      stop_tokens=(stop,))
+    engine.run()
+    want = list(ref[0, : list(ref[0]).index(stop) + 1])
+    np.testing.assert_array_equal(np.asarray(r.out_tokens), want)
+    assert engine.pool.pages_in_use == 0
+
+
+def test_engine_speculative_interpret_kernel_end_to_end():
+    """The verify dispatch through the actual chunked-prefill Pallas
+    kernel (interpret mode) — including the diagonal-override int8 path —
+    not just the jnp oracle."""
+    from repro.launch.serve import greedy_generate
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _spec_prompts(n=2)
+    gen = 4
+    _, reqs = _run_engine(
+        CachedDecoder.from_model(model, params, paged_interpret=True),
+        prompts, gen, n_slots=2, paged_decode=True, speculative_k=2,
+        device_sample=True,
+    )
+    ref = np.asarray(greedy_generate(model, params, jnp.asarray(prompts), gen))
+    for i, r in enumerate(reqs):
+        np.testing.assert_array_equal(np.asarray(r.out_tokens), ref[i])
+    # int8: kernel (interpret) must agree with the jnp-oracle engine
+    runs = []
+    for interpret in (False, True):
+        _, reqs = _run_engine(
+            CachedDecoder.from_model(model, params,
+                                     paged_interpret=interpret),
+            prompts, gen, n_slots=2, paged_decode=True, speculative_k=2,
+            device_sample=True, kv_int8=True, record_logits=False,
+        )
+        runs.append([np.asarray(r.out_tokens) for r in reqs])
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_speculative_requires_paged():
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    adapter = CachedDecoder.from_model(model, params)
+    with pytest.raises(ValueError):
+        Engine(adapter, EngineConfig(max_seq_len=16, speculative_k=2))
+    with pytest.raises(ValueError):
+        Engine(adapter, EngineConfig(max_seq_len=16, device_sample=True))
+    with pytest.raises(ValueError):
+        Engine(adapter, EngineConfig(max_seq_len=16, speculative_k=-1,
+                                     paged_decode=True))
+
+
+# ---------------------------------------------------------------------------
+# On-device sampling (fused softmax/top-p draw, fold_in keys)
+# ---------------------------------------------------------------------------
+
+
+def test_device_sampling_greedy_matches_host_greedy():
+    """device_sample with temperature 0 is the exact argmax: identical
+    tokens to the host-selection paged engine."""
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10, seed=3).tokens
+    gen = 6
+    runs = []
+    for dev in (False, True):
+        _, reqs = _run_engine(
+            CachedDecoder.from_model(model, params), prompts, gen,
+            paged_decode=True, device_sample=dev,
+        )
+        runs.append([np.asarray(r.out_tokens) for r in reqs])
+    for a, b in zip(*runs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_device_sampling_reproducible_across_batching():
+    """fold_in(seed, emission_index) keys: the sampled stream of a request
+    does not depend on batch composition — and the speculative engine
+    draws the exact stream sequential decode draws."""
+    from repro.serve.scheduler import SamplingParams
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    adapter = CachedDecoder.from_model(model, params)
+    prompts = _spec_prompts()
+    gen = 8
+    sp = SamplingParams(temperature=0.8, top_p=0.9, seed=17)
+
+    def run(batch, spec_k=0):
+        engine = Engine(adapter, EngineConfig(
+            max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+            token_budget=32, prefill_chunk=8, paged_decode=True,
+            device_sample=True, speculative_k=spec_k,
+        ))
+        reqs = [
+            engine.submit(np.asarray(prompts[i]), max_new=gen, sampling=sp)
+            for i in batch
+        ]
+        engine.run()
+        return {i: np.asarray(r.out_tokens) for i, r in zip(batch, reqs)}
+
+    solo = run([0])
+    batched = run([0, 1, 2])
+    np.testing.assert_array_equal(solo[0], batched[0])
+    # speculative grouping draws the same stream as sequential decode
+    spec = run([0, 1, 2], spec_k=4)
+    for i in range(3):
+        np.testing.assert_array_equal(batched[i], spec[i])
+    # a different seed gives a different stream (the draw is real)
+    sp2 = SamplingParams(temperature=0.8, top_p=0.9, seed=18)
+    engine = Engine(adapter, EngineConfig(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8, paged_decode=True,
+        device_sample=True,
+    ))
+    r = engine.submit(np.asarray(prompts[0]), max_new=gen, sampling=sp2)
+    engine.run()
+    assert not np.array_equal(np.asarray(r.out_tokens), solo[0])
+
+
+def test_device_sample_tokens_top_p_and_temperature():
+    """Unit checks on the fused sampler: greedy lanes take the argmax, a
+    near-zero top-p collapses to the argmax, and draws land only inside
+    the nucleus."""
+    from repro.serve.adapter import sample_tokens
+
+    V = 16
+    logits = jnp.asarray(
+        np.linspace(0, 3, V, dtype=np.float32)[None, None, :]
+    )  # monotone: argmax is V-1
+    args = lambda t, p: (
+        jnp.asarray([t], jnp.float32), jnp.asarray([p], jnp.float32),
+        jnp.asarray([3], jnp.int32), jnp.asarray([0], jnp.int32),
+    )
+    assert int(sample_tokens(logits, *args(0.0, 1.0))[0, 0]) == V - 1
+    assert int(
+        sample_tokens(logits, *args(0.0, 1.0), greedy_only=True)[0, 0]
+    ) == V - 1
+    assert int(sample_tokens(logits, *args(0.7, 1e-6))[0, 0]) == V - 1
+    # with top_p = 0.5 over a peaked distribution only the top tokens can
+    # be drawn; sweep draw indices to exercise many keys
+    peaked = jnp.asarray(
+        np.asarray([0, 0, 0, 8, 9], np.float32)[None, None, :]
+    )
+    for idx in range(24):
+        tok = int(sample_tokens(
+            peaked,
+            jnp.asarray([1.0], jnp.float32), jnp.asarray([0.9], jnp.float32),
+            jnp.asarray([5], jnp.int32), jnp.asarray([idx], jnp.int32),
+        )[0, 0])
+        assert tok in (3, 4)
+
+
+def test_device_sampling_survives_eviction_replay():
+    """A device-sampled request evicted mid-stream and replayed emits the
+    exact stream of an uncontended run: every draw — including the
+    prefill-boundary one — is the same pure function of
+    (seed, emission_index)."""
+    from repro.serve.scheduler import SamplingParams
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    adapter = CachedDecoder.from_model(model, params)
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=8, seed=4).tokens
+    gen = 8
+    sps = [SamplingParams(temperature=0.9, top_p=0.9, seed=40 + i)
+           for i in range(3)]
+
+    def run(n_pages):
+        engine = Engine(adapter, EngineConfig(
+            max_seq_len=prompts.shape[1] + gen, n_slots=3, page_size=4,
+            n_pages=n_pages, token_budget=32, prefill_chunk=8,
+            paged_decode=True, device_sample=True,
+        ))
+        reqs = [engine.submit(np.asarray(p), max_new=gen, sampling=sp)
+                for p, sp in zip(prompts, sps)]
+        engine.run()
+        return engine, [np.asarray(r.out_tokens) for r in reqs]
+
+    _, calm = run(None)  # uncontended (no overcommit)
+    engine, pressured = run(10)  # overcommitted: forces eviction/replay
+    assert engine.stats["evictions"] > 0
+    for a, b in zip(calm, pressured):
+        np.testing.assert_array_equal(a, b)
