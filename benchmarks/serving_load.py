@@ -18,6 +18,14 @@ recomputing (``prefix_hit_tokens`` in the record).  ``--speculative K``
 (with ``--paged``) turns decode ticks into draft-and-verify ticks; the
 record then carries acceptance_rate / accepted_per_tick /
 tokens_per_lane_tick so drafting health is tracked alongside latency.
+``--trace`` records per-tick spans during the measured run and adds the
+span-derived per-phase time breakdown (+ coverage) to the record;
+``--trace-out PATH`` also writes the Chrome/Perfetto trace JSON.
+
+Latency percentiles come from the engine's OWN lifecycle histograms
+(``Engine.summary()``), asserted equal to an external recomputation from
+raw request timestamps — the benchmark cross-checks the telemetry it
+reports.
 """
 from __future__ import annotations
 
@@ -39,7 +47,14 @@ from repro.serve import CachedDecoder, Engine, EngineConfig
 
 
 def pctl(xs, q):
-    return float(np.percentile(np.asarray(xs), q)) if len(xs) else float("nan")
+    """Percentile of ``xs``, or None when empty — None stays valid JSON
+    (NaN does not survive strict parsers) and sorts honestly as "no
+    samples" instead of a poisoned number."""
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else None
+
+
+def rnd(x, n):
+    return None if x is None else round(x, n)
 
 
 def main(argv=None):
@@ -81,6 +96,14 @@ def main(argv=None):
     ap.add_argument("--host-sample", action="store_true",
                     help="host-side token selection (default on the paged "
                          "path is the fused on-device draw)")
+    ap.add_argument("--trace", action="store_true",
+                    help="record per-tick spans during the measured run "
+                         "and write the span-derived per-phase time "
+                         "breakdown (schedule/prefill/decode/verify) "
+                         "into the record")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="with --trace: also write the Chrome/Perfetto "
+                         "trace-event JSON here")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
@@ -149,12 +172,22 @@ def main(argv=None):
     for i in range(args.requests):
         engine.submit(np.asarray(prompts[i][: lengths[i]]), max_new=args.gen,
                       arrival=float(arrivals[i]))
+    tracer = None
+    if args.trace:  # attach AFTER warm-up: the trace covers only the
+        from repro.serve import Tracer  # measured run, not compilation
+
+        tracer = Tracer()
+        engine.attach_tracer(tracer)
     engine.reset_clock()  # compile time and warm-up stats stay out of
     engine.reset_stats()  # the measured run
-    t0 = time.time()
+    t0 = time.perf_counter()
     done = engine.run()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
 
+    # external latency computation from raw request timestamps — the
+    # engine's own histograms (summary()'s ttft_s_*/itl_s_*) observe the
+    # SAME (arrival, t_first, token_times) data at finish, so the two
+    # must agree to float tolerance (checked below)
     ttft = [r.t_first - r.arrival for r in done]
     itl = [
         b - a
@@ -163,6 +196,17 @@ def main(argv=None):
     ]
     total = sum(len(r.out_tokens) for r in done)
     s = engine.summary()
+    for name, ext in (("ttft_s", ttft), ("itl_s", itl)):
+        for q in (50, 99):
+            eng_v, ext_v = s[f"{name}_p{q}"], pctl(ext, q)
+            if (eng_v is None) != (ext_v is None) or (
+                eng_v is not None
+                and not np.isclose(eng_v, ext_v, rtol=1e-9, atol=1e-9)
+            ):
+                raise AssertionError(
+                    f"engine-native {name}_p{q} {eng_v!r} diverged from "
+                    f"the external computation {ext_v!r}"
+                )
     rec = {
         "label": ("quip-%db" % args.bits) if args.quantize else "fp",
         "arch": cfg.name,
@@ -175,10 +219,15 @@ def main(argv=None):
         "rate_req_s": args.rate,
         "wall_s": round(wall, 3),
         "tok_s": round(total / wall, 2),
-        "ttft_p50_s": round(pctl(ttft, 50), 4),
-        "ttft_p99_s": round(pctl(ttft, 99), 4),
-        "itl_p50_s": round(pctl(itl, 50), 4),
-        "itl_p99_s": round(pctl(itl, 99), 4),
+        # engine-native lifecycle percentiles (summary() histograms);
+        # asserted equal to the external computation above
+        "ttft_p50_s": rnd(s["ttft_s_p50"], 4),
+        "ttft_p99_s": rnd(s["ttft_s_p99"], 4),
+        "itl_p50_s": rnd(s["itl_s_p50"], 4),
+        "itl_p99_s": rnd(s["itl_s_p99"], 4),
+        "queue_p50_s": rnd(s["queue_s_p50"], 4),
+        "queue_p99_s": rnd(s["queue_s_p99"], 4),
+        "e2e_p50_s": rnd(s["e2e_s_p50"], 4),
         "peak_kv_pages": s["peak_pages_in_use"],
         "peak_kv_occupancy": round(s["peak_occupancy"], 3),
         "evictions": s["evictions"],
@@ -196,6 +245,19 @@ def main(argv=None):
         "tokens_per_lane_tick": round(s["tokens_per_lane_tick"], 3),
         "rolled_back_tokens": s["rolled_back_tokens"],
     }
+    if tracer is not None:
+        from repro.serve import phase_breakdown
+
+        pb = phase_breakdown(tracer.spans)
+        rec["trace_spans"] = len(tracer)
+        rec["trace_dropped"] = tracer.dropped
+        rec["trace_coverage"] = round(pb["coverage"], 3)
+        rec["phase_s"] = {
+            name: round(p["time_s"], 4)
+            for name, p in sorted(pb["phases"].items())
+        }
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
     print(json.dumps(rec, indent=1))
     if args.out:
         with open(args.out, "w") as f:

@@ -88,6 +88,19 @@ python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --speculative 4 \
   --host-sample --check
 
+# telemetry: a traced serve (sync barriers + periodic metrics) must stay
+# token-identical AND emit a schema-valid Chrome/Perfetto trace
+python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
+  --trace-out "$tmp/serve_trace.json" --trace-sync --metrics-every 0.5 \
+  --check
+python - "$tmp/serve_trace.json" <<'PY'
+import json, sys
+from repro.serve import validate_chrome_trace
+n = validate_chrome_trace(json.load(open(sys.argv[1])))
+print(f"[ci] serve trace schema OK ({n} events)")
+PY
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -105,10 +118,13 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
   --speculative 4 --mesh 1,2 --check
 
-# keep the PR-over-PR serving baseline on the unchanged workload; the
-# prefix-heavy batched-prefill run is a separate labeled record
+# keep the PR-over-PR serving baseline on the unchanged workload (now
+# with --trace: engine-native percentiles are cross-checked against the
+# external computation and the span phase breakdown lands in the
+# record); the prefix-heavy batched-prefill run is a separate labeled
+# record
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
-  --paged --out "$tmp/BENCH_serving.json"
+  --paged --trace --out "$tmp/BENCH_serving.json"
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --paged-prefill --prefix-cache --prefix-len 16 \
   --out "$tmp/BENCH_serving_prefix.json"

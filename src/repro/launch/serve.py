@@ -46,6 +46,14 @@ the paged path the softmax/top-p draw runs ON DEVICE, fused into the
 decode/verify dispatch with per-request ``fold_in`` keys;
 ``--host-sample`` keeps the host-side numpy draw for debugging (the two
 backends draw different — but each reproducible — non-greedy streams).
+
+``--trace-out PATH`` records per-tick spans (step phases, fused
+dispatches, request lifecycle events) into a ring buffer and writes a
+Chrome/Perfetto trace-event JSON on exit; ``--trace-sync`` blocks on the
+KV pool at span edges so durations measure device time rather than async
+dispatch enqueue; ``--metrics-every SECS`` prints periodic one-line
+metric snapshots to stderr (serve/telemetry.py — all off by default,
+with a one-no-op-call hot-path cost when off).
 """
 from __future__ import annotations
 
@@ -207,6 +215,23 @@ def main(argv=None):
                          "(repeatable)")
     ap.add_argument("--check", action="store_true",
                     help="verify engine tokens against the recompute path")
+    # telemetry (serve/telemetry.py; off by default — NULL_TRACER costs
+    # one no-op call per span site)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="record per-tick spans (step phases + fused "
+                         "dispatches + request lifecycle events) and write "
+                         "a Chrome/Perfetto trace-event JSON here "
+                         "(load at ui.perfetto.dev)")
+    ap.add_argument("--trace-sync", action="store_true",
+                    help="block on the KV pool at span edges so span "
+                         "durations measure device time, not async "
+                         "dispatch enqueue (needs --trace-out; slows "
+                         "serving — measurement mode only)")
+    ap.add_argument("--metrics-every", type=float, default=None,
+                    metavar="SECS",
+                    help="print a one-line metrics snapshot (throughput "
+                         "counters, pool occupancy, TTFT/ITL p50) to "
+                         "stderr every SECS seconds of engine time")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -236,6 +261,11 @@ def main(argv=None):
         raise SystemExit(
             "--check compares full fixed-length token streams; the "
             "references don't model early stop — drop --stop-token"
+        )
+    if args.trace_sync and not args.trace_out:
+        raise SystemExit(
+            "--trace-sync sharpens span timing for a recorded trace; "
+            "add --trace-out PATH"
         )
     mesh = None
     if args.mesh:
@@ -328,6 +358,12 @@ def main(argv=None):
     engine = build_engine(
         adapter, max_seq_len=args.prompt_len + args.gen, args=args
     )
+    tracer = None
+    if args.trace_out:
+        from repro.serve import Tracer
+
+        tracer = Tracer(sync=args.trace_sync)
+        engine.attach_tracer(tracer)
     if mesh is not None:
         pool = engine.pool
         print(f"[serve] mesh data={dp} model={mp}: KV pool "
@@ -353,9 +389,9 @@ def main(argv=None):
     except ValueError as e:
         raise SystemExit(f"cannot admit request: {e} "
                          f"(grow --pages / --page-size or shrink --gen)")
-    t0 = time.time()
-    done = engine.run()
-    dt = time.time() - t0
+    t0 = time.perf_counter()
+    done = engine.run(metrics_every=args.metrics_every)
+    dt = time.perf_counter() - t0
     s = engine.summary()
     total = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {label} {cfg.name}: {len(done)} requests, {total} tokens "
@@ -375,6 +411,25 @@ def main(argv=None):
               f"accepted_per_tick={s['accepted_per_tick']:.2f} "
               f"tokens_per_lane_tick={s['tokens_per_lane_tick']:.2f} "
               f"rolled_back={s['rolled_back_tokens']}")
+    if s.get("ttft_s_p50") is not None:
+        print(f"[serve] latency: ttft_p50={s['ttft_s_p50'] * 1e3:.1f}ms "
+              f"ttft_p99={s['ttft_s_p99'] * 1e3:.1f}ms "
+              f"itl_p50={(s['itl_s_p50'] or 0) * 1e3:.2f}ms "
+              f"queue_p50={(s['queue_s_p50'] or 0) * 1e3:.1f}ms")
+    if tracer is not None:
+        from repro.serve import phase_breakdown
+
+        tracer.export_chrome_trace(args.trace_out)
+        pb = phase_breakdown(tracer.spans)
+        phases = " ".join(
+            f"{name}={p['time_s'] * 1e3:.0f}ms({p['share']:.0%})"
+            for name, p in sorted(
+                pb["phases"].items(), key=lambda kv: -kv[1]["time_s"]
+            )
+        )
+        print(f"[serve] trace: {len(tracer)} spans -> {args.trace_out} "
+              f"(dropped={tracer.dropped}) coverage={pb['coverage']:.0%} "
+              f"{phases}")
 
     if args.check:
         done = sorted(done, key=lambda r: r.rid)

@@ -20,7 +20,11 @@ Pieces (each usable on its own):
     (packed ints + scales + regenerable transform seeds);
   * :mod:`repro.serve.distributed` — tensor-parallel runtime: packed
     weights, the physical page pool (over KV heads), and the paged
-    decode dispatch all shard over the model mesh axis.
+    decode dispatch all shard over the model mesh axis;
+  * :mod:`repro.serve.telemetry` — off-by-default observability: ring-
+    buffer span tracer (Perfetto/Chrome trace export, optional
+    ``jax.profiler`` annotations), typed metrics registry, and per-
+    request lifecycle latency histograms.
 """
 from repro.serve.adapter import CachedDecoder
 from repro.serve.artifacts import load_quantized, save_quantized
@@ -28,6 +32,12 @@ from repro.serve.distributed import DistributedCachedDecoder, make_serving_mesh
 from repro.serve.engine import Engine, EngineConfig
 from repro.serve.kv_cache import PagedKVPool
 from repro.serve.scheduler import Request, TokenBudgetFCFS
+from repro.serve.telemetry import (
+    MetricsRegistry,
+    Tracer,
+    phase_breakdown,
+    validate_chrome_trace,
+)
 
 __all__ = [
     "CachedDecoder",
@@ -40,4 +50,8 @@ __all__ = [
     "TokenBudgetFCFS",
     "save_quantized",
     "load_quantized",
+    "Tracer",
+    "MetricsRegistry",
+    "phase_breakdown",
+    "validate_chrome_trace",
 ]

@@ -75,6 +75,7 @@ from repro.kernels.paged_attention.ops import (
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
 from repro.serve.kv_cache import PagedKVPool, quantize_kv_int8
+from repro.serve.telemetry import NULL_TRACER, Tracer
 
 __all__ = ["CachedDecoder", "sample_tokens"]
 
@@ -173,6 +174,9 @@ class CachedDecoder:
     blocks: list
     paged: bool = False  # engine default: decode via the paged fast path
     paged_interpret: bool = False  # force the Pallas kernel (interpret) off-TPU
+    # span sink for the fused dispatches; Engine.attach_tracer swaps in
+    # its live tracer (the NULL_TRACER default costs one no-op call)
+    tracer: Tracer = dataclasses.field(default=NULL_TRACER, repr=False)
 
     def __post_init__(self):
         if self.cfg.family != "dense":
@@ -239,6 +243,12 @@ class CachedDecoder:
         )
 
     # ---- engine hooks ----------------------------------------------------
+
+    def trace_tags(self) -> dict:
+        """Static tags merged into every span/event this adapter's tracer
+        records (Engine.attach_tracer calls this once).  Distributed
+        adapters override with mesh geometry."""
+        return {}
 
     def make_pool(self, **kw) -> PagedKVPool:
         """Build the engine's KV pool.  Distributed adapters override this
@@ -364,19 +374,24 @@ class CachedDecoder:
         buffers and returns logits (B, 1, V).  The caller still owns the
         host-side length accounting (``pool.note_written``).
         """
-        args = self._place_tree((
-            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
-            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
-            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
-        ))
-        if pool.is_int8:
-            logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
-                self._fwd_paged_q(
-                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+        toks = np.asarray(tokens, np.int32)
+        with self.tracer.span("dispatch:decode_paged", lanes=toks.shape[0]):
+            args = self._place_tree((
+                toks, np.asarray(positions, np.int32),
+                np.asarray(block_tables, np.int32),
+                np.asarray(ctx_len, np.int32),
+                np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+            ))
+            if pool.is_int8:
+                logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                    self._fwd_paged_q(
+                        *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+                    )
                 )
-            )
-        else:
-            logits, pool.k, pool.v = self._fwd_paged(*args, pool.k, pool.v)
+            else:
+                logits, pool.k, pool.v = self._fwd_paged(
+                    *args, pool.k, pool.v
+                )
         return logits
 
     def _paged_trunk(self, tokens, positions, block_tables, ctx_len,
@@ -432,24 +447,29 @@ class CachedDecoder:
         (see :func:`sample_tokens`).  Returns ``(sel (B, 1) int32,
         logits (B, 1, V))``; mutates the pool via donated buffers.
         """
-        args = self._place_tree((
-            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
-            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
-            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
-            *self._np_sampling(sampling),
-        ))
-        greedy = self._all_greedy(sampling)
-        if pool.is_int8:
-            sel, logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
-                self._fwd_paged_sq(
-                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
-                    greedy,
+        toks = np.asarray(tokens, np.int32)
+        with self.tracer.span(
+            "dispatch:decode_paged_sample", lanes=toks.shape[0]
+        ):
+            args = self._place_tree((
+                toks, np.asarray(positions, np.int32),
+                np.asarray(block_tables, np.int32),
+                np.asarray(ctx_len, np.int32),
+                np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+                *self._np_sampling(sampling),
+            ))
+            greedy = self._all_greedy(sampling)
+            if pool.is_int8:
+                sel, logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                    self._fwd_paged_sq(
+                        *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                        greedy,
+                    )
                 )
-            )
-        else:
-            sel, logits, pool.k, pool.v = self._fwd_paged_s(
-                *args, pool.k, pool.v, greedy
-            )
+            else:
+                sel, logits, pool.k, pool.v = self._fwd_paged_s(
+                    *args, pool.k, pool.v, greedy
+                )
         return sel, logits
 
     @staticmethod
@@ -536,19 +556,27 @@ class CachedDecoder:
         buffers and returns logits (B, C, V).  The caller owns the host-
         side length accounting (``pool.note_span_written``).
         """
-        args = self._place_tree((
-            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
-            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
-            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
-        ))
-        if pool.is_int8:
-            logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
-                self._fwd_prefill_q(
-                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+        toks = np.asarray(tokens, np.int32)
+        with self.tracer.span(
+            "dispatch:prefill_paged",
+            lanes=toks.shape[0], chunk=toks.shape[1],
+        ):
+            args = self._place_tree((
+                toks, np.asarray(positions, np.int32),
+                np.asarray(block_tables, np.int32),
+                np.asarray(ctx_len, np.int32),
+                np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+            ))
+            if pool.is_int8:
+                logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
+                    self._fwd_prefill_q(
+                        *args, pool.k, pool.v, pool.k_scale, pool.v_scale
+                    )
                 )
-            )
-        else:
-            logits, pool.k, pool.v = self._fwd_prefill(*args, pool.k, pool.v)
+            else:
+                logits, pool.k, pool.v = self._fwd_prefill(
+                    *args, pool.k, pool.v
+                )
         return logits
 
     def _prefill_trunk(self, tokens, positions, block_tables, ctx_len,
@@ -623,25 +651,30 @@ class CachedDecoder:
         ``(sel (B, K+1) int32, n_acc (B,) int32, logits (B, K+1, V))`` —
         lane b emits ``sel[b, :n_acc[b] + 1]``.
         """
-        args = self._place_tree((
-            np.asarray(tokens, np.int32), np.asarray(positions, np.int32),
-            np.asarray(block_tables, np.int32), np.asarray(ctx_len, np.int32),
-            np.asarray(pages, np.int32), np.asarray(offs, np.int32),
-            np.asarray(drafts, np.int32), np.asarray(n_drafts, np.int32),
-            *self._np_sampling(sampling),
-        ))
-        greedy = self._all_greedy(sampling)
-        if pool.is_int8:
-            sel, n_acc, logits, pool.k, pool.v, pool.k_scale, pool.v_scale = (
-                self._fwd_verify_q(
-                    *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
-                    greedy,
+        toks = np.asarray(tokens, np.int32)
+        with self.tracer.span(
+            "dispatch:verify_paged",
+            lanes=toks.shape[0], width=toks.shape[1],
+        ):
+            args = self._place_tree((
+                toks, np.asarray(positions, np.int32),
+                np.asarray(block_tables, np.int32),
+                np.asarray(ctx_len, np.int32),
+                np.asarray(pages, np.int32), np.asarray(offs, np.int32),
+                np.asarray(drafts, np.int32), np.asarray(n_drafts, np.int32),
+                *self._np_sampling(sampling),
+            ))
+            greedy = self._all_greedy(sampling)
+            if pool.is_int8:
+                sel, n_acc, logits, pool.k, pool.v, pool.k_scale, \
+                    pool.v_scale = self._fwd_verify_q(
+                        *args, pool.k, pool.v, pool.k_scale, pool.v_scale,
+                        greedy,
+                    )
+            else:
+                sel, n_acc, logits, pool.k, pool.v = self._fwd_verify(
+                    *args, pool.k, pool.v, greedy
                 )
-            )
-        else:
-            sel, n_acc, logits, pool.k, pool.v = self._fwd_verify(
-                *args, pool.k, pool.v, greedy
-            )
         return sel, n_acc, logits
 
     @staticmethod

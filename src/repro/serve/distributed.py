@@ -248,6 +248,18 @@ class DistributedCachedDecoder(CachedDecoder):
     def mesh(self) -> Mesh:
         return self.ctx.mesh
 
+    def trace_tags(self) -> dict:
+        """Mesh geometry stamped on every span: distributed traces stay
+        interpretable after export (which axes existed, was the pool
+        sharded over KV heads)."""
+        shape = dict(self.mesh.shape)
+        return {
+            "mesh_data": int(shape.get("data", 1)),
+            "mesh_model": int(shape.get("model", 1)),
+            "mesh_devices": int(self.mesh.size),
+            "pool_sharded": bool(self._pool_sharded),
+        }
+
     def make_pool(self, **kw) -> PagedKVPool:
         """Pool with physical pages sharded over KV heads.
 

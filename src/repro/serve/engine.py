@@ -73,6 +73,7 @@ import dataclasses
 import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -86,8 +87,31 @@ from repro.serve.scheduler import (
     StepPlan,
     TokenBudgetFCFS,
 )
+from repro.serve.telemetry import (
+    NULL_TRACER,
+    MetricsRegistry,
+    Tracer,
+    emit_metrics_line,
+)
 
 __all__ = ["Engine", "EngineConfig"]
+
+# counters the engine bumps on the hot path, in reporting order; the
+# legacy ``engine.stats`` mapping is a read view over exactly these
+_STAT_COUNTERS = (
+    "steps",
+    "decode_tokens",
+    "prefill_tokens",
+    "evictions",
+    "prefill_batches",
+    "prefill_batch_size",  # widest co-batched prefill group seen
+    "prefix_hit_tokens",  # prompt tokens admitted from the cache
+    "spec_ticks",  # fused verify dispatches run
+    "spec_lanes",  # lane-verifications (lanes summed over ticks)
+    "draft_tokens",  # tokens the drafter proposed
+    "accepted_tokens",  # proposed tokens the verifier accepted
+    "rolled_back_tokens",  # rejected drafts un-written (truncate)
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,7 +143,8 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, adapter: CachedDecoder, ecfg: EngineConfig, dtype=None):
+    def __init__(self, adapter: CachedDecoder, ecfg: EngineConfig, dtype=None,
+                 tracer: Optional[Tracer] = None):
         self.adapter = adapter
         self.ecfg = ecfg
         self.paged = ecfg.paged_decode or adapter.paged
@@ -158,21 +183,26 @@ class Engine:
         )
         self.running: list[Request] = []
         self.finished: list[Request] = []
-        self.stats = {
-            "steps": 0,
-            "decode_tokens": 0,
-            "prefill_tokens": 0,
-            "evictions": 0,
-            "prefill_batches": 0,
-            "prefill_batch_size": 0,  # widest co-batched prefill group seen
-            "prefix_hit_tokens": 0,  # prompt tokens admitted from the cache
-            "spec_ticks": 0,  # fused verify dispatches run
-            "spec_lanes": 0,  # lane-verifications (lanes summed over ticks)
-            "draft_tokens": 0,  # tokens the drafter proposed
-            "accepted_tokens": 0,  # proposed tokens the verifier accepted
-            "rolled_back_tokens": 0,  # rejected drafts un-written (truncate)
-        }
-        self._t0: Optional[float] = None
+        # metrics: hot-path counters, pool gauges (live callbacks), and
+        # the in-engine latency histograms (one percentile implementation
+        # — benchmarks consume these instead of re-deriving latencies)
+        self.metrics = MetricsRegistry()
+        for name in _STAT_COUNTERS:
+            self.metrics.counter(name)
+        for name, fn in self.pool.metrics_gauges().items():
+            self.metrics.gauge(name, fn=fn)
+        self.metrics.gauge("finished", fn=lambda: len(self.finished))
+        for name in ("ttft_s", "itl_s", "queue_s", "e2e_s"):
+            self.metrics.histogram(name)
+        # span tracing is OFF by default: NULL_TRACER's span() is a no-op
+        # returning a shared context manager — the whole telemetry tax
+        self.tracer = NULL_TRACER
+        # engine-relative clock: the epoch is SET HERE (and again by
+        # reset_clock) — arrival offsets submitted before the first step
+        # are measured against construction time, not first use
+        self._t0 = time.perf_counter()
+        if tracer is not None:
+            self.attach_tracer(tracer)
 
     # ---- submission -----------------------------------------------------
 
@@ -201,30 +231,70 @@ class Engine:
         self.scheduler.submit(req)
         return req
 
+    # ---- telemetry ------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        """Legacy read view: the hot-path counters as a plain dict (the
+        registry is the source of truth; mutate via ``self.metrics``)."""
+        return {n: self.metrics.counter(n).value for n in _STAT_COUNTERS}
+
+    def attach_tracer(self, tracer: Tracer) -> None:
+        """Wire a tracer through the whole stack: engine phase spans, the
+        adapter's fused-dispatch spans, and the scheduler's lifecycle
+        events all record into it.  The tracer's clock becomes the
+        engine clock (span times share the request-arrival epoch), and
+        ``sync=True`` tracers get a barrier that blocks on the pool
+        buffers every fused dispatch donates and returns — so synced
+        span durations are honest device time, not dispatch time."""
+        tracer.clock = self.now
+        if tracer.sync and tracer.sync_fn is None:
+            tracer.sync_fn = self._sync_barrier
+        tracer.tags.update(self.adapter.trace_tags())
+        self.tracer = tracer
+        self.adapter.tracer = tracer
+        self.scheduler.tracer = tracer
+
+    def _sync_barrier(self) -> None:
+        """Block until every enqueued device step has retired.  The pool
+        K/V tensors are donated into and returned by every fused dispatch
+        (and the oracle path's scatters), so blocking on them drains the
+        per-device stream up to the last KV write."""
+        jax.block_until_ready((self.pool.k, self.pool.v))
+
     # ---- main loop ------------------------------------------------------
 
     def now(self) -> float:
-        if self._t0 is None:
-            self._t0 = time.perf_counter()
+        """Engine-relative seconds.  Epoch: Engine construction, or the
+        most recent :meth:`reset_clock` — request ``arrival`` offsets and
+        all recorded span/lifecycle times share it."""
         return time.perf_counter() - self._t0
 
     def reset_clock(self) -> None:
-        """Restart the engine-relative clock (e.g. after a warm-up run, so
-        arrival offsets of a measured workload start from zero)."""
-        self._t0 = None
+        """Restart the engine-relative clock NOW (e.g. after a warm-up
+        run, so arrival offsets of a measured workload start from zero).
+        Takes effect immediately — not lazily on the next ``now()`` —
+        so arrivals submitted before the next step share the epoch."""
+        self._t0 = time.perf_counter()
 
     def reset_stats(self) -> None:
-        """Zero the cumulative counters (pairs with reset_clock after a
-        warm-up run, so reported stats cover only the measured workload)."""
-        self.stats = {k: 0 for k in self.stats}
+        """Zero the cumulative counters and latency histograms (pairs
+        with reset_clock after a warm-up run, so reported stats cover
+        only the measured workload).  Live pool gauges are callbacks —
+        they keep reporting current state — but the pool's high-water
+        mark rebases to its current usage."""
+        self.metrics.reset()
         self.pool.peak_pages_in_use = self.pool.pages_in_use
 
-    def run(self, max_steps: Optional[int] = None) -> list[Request]:
+    def run(self, max_steps: Optional[int] = None,
+            metrics_every: Optional[float] = None) -> list[Request]:
         """Drive until every submitted request is finished.
 
         ``max_steps`` bounds steps that DID work (a runaway-loop backstop);
         idle iterations waiting on future arrivals don't consume it — an
         open-loop workload may spend arbitrarily long between arrivals.
+        ``metrics_every`` (seconds) emits a one-line metrics snapshot to
+        stderr at that period while the loop runs.
         """
         todo = self.scheduler.pending + len(self.running)
         budget_tokens = sum(
@@ -234,6 +304,9 @@ class Engine:
         max_steps = max_steps or 1000 + 20 * budget_tokens
         done0 = len(self.finished)
         worked_steps = stalls = 0
+        next_metrics = (
+            self.now() + metrics_every if metrics_every else float("inf")
+        )
         while self.scheduler.pending or self.running:
             if self.step():
                 worked_steps, stalls = worked_steps + 1, 0
@@ -253,36 +326,66 @@ class Engine:
                         "engine stalled: pending requests but no step "
                         "makes progress (pool misconfigured?)"
                     )
+            if self.now() >= next_metrics:
+                self._emit_metrics_snapshot()
+                next_metrics = self.now() + metrics_every
         assert len(self.finished) - done0 == todo
         return self.finished[done0:]
 
+    _METRICS_LINE_KEYS = (
+        "steps", "decode_tokens", "prefill_tokens", "evictions",
+        "pages_in_use", "occupancy", "finished", "acceptance_rate",
+        "ttft_s_p50", "itl_s_p50",
+    )
+
+    def _emit_metrics_snapshot(self) -> None:
+        emit_metrics_line(
+            self.summary(), t=self.now(), keys=list(self._METRICS_LINE_KEYS)
+        )
+
     def step(self) -> bool:
-        """One engine step; returns whether any token work was done."""
-        now = self.now()
-        self.scheduler.admit_arrivals(now)
-        plan = self.scheduler.plan(self.running, self.pool)
-        self.stats["prefix_hit_tokens"] += plan.prefix_hit_tokens
-        decode = self._ensure_decode_pages(plan)
-        # drop chunks whose request the page-ensure pass evicted
-        chunks = [
-            (r, n) for r, n in plan.prefill
-            if r.state is RequestState.PREFILL
-        ]
-        worked = False
-        if chunks:
-            if self.paged_prefill:
-                self._run_prefill_batch(chunks, now)
-            else:
-                for req, n in chunks:
-                    self._run_prefill_chunk(req, n, now)
-            worked = True
-        if decode:
-            if self.spec_k:
-                self._run_decode_spec(decode, now)
-            else:
-                self._run_decode(decode, now)
-            worked = True
-        self.stats["steps"] += 1
+        """One engine step; returns whether any token work was done.
+
+        Span taxonomy (telemetry, DESIGN.md §11): the whole tick is one
+        ``step`` span; its direct children are ``schedule`` (arrival
+        admission + planning + page claims/eviction), ``prefill``,
+        and ``decode`` XOR ``verify`` (speculative) — adapter dispatch
+        spans nest one level deeper inside those phases.
+        """
+        tr = self.tracer
+        with tr.span("step"):
+            now = self.now()
+            with tr.span("schedule"):
+                self.scheduler.admit_arrivals(now)
+                plan = self.scheduler.plan(self.running, self.pool, now=now)
+                self.metrics.inc("prefix_hit_tokens", plan.prefix_hit_tokens)
+                decode = self._ensure_decode_pages(plan)
+                # drop chunks whose request the page-ensure pass evicted
+                chunks = [
+                    (r, n) for r, n in plan.prefill
+                    if r.state is RequestState.PREFILL
+                ]
+            worked = False
+            if chunks:
+                with tr.span(
+                    "prefill", lanes=len(chunks),
+                    tokens=sum(n for _, n in chunks),
+                ):
+                    if self.paged_prefill:
+                        self._run_prefill_batch(chunks, now)
+                    else:
+                        for req, n in chunks:
+                            self._run_prefill_chunk(req, n, now)
+                worked = True
+            if decode:
+                if self.spec_k:
+                    with tr.span("verify", lanes=len(decode)):
+                        self._run_decode_spec(decode, now)
+                else:
+                    with tr.span("decode", lanes=len(decode)):
+                        self._run_decode(decode, now)
+                worked = True
+            self.metrics.inc("steps")
         return worked
 
     # ---- internals ------------------------------------------------------
@@ -316,7 +419,11 @@ class Engine:
         self.pool.release(victim.slot)
         self.running.remove(victim)
         self.scheduler.requeue(victim)
-        self.stats["evictions"] += 1
+        self.metrics.inc("evictions")
+        self.tracer.event(
+            "request_evicted", rid=victim.rid,
+            generated=len(victim.out_tokens), n_evictions=victim.n_evictions,
+        )
 
     def _ensure_decode_pages(self, plan: StepPlan) -> list[Request]:
         """Claim a page for each decode lane's next token, evicting under
@@ -337,19 +444,43 @@ class Engine:
                 active.append(r)
         return active
 
-    def _finish(self, req: Request) -> None:
+    def _note_emit(self, req: Request, now: float) -> None:
+        """Post-emit lifecycle hook: mark the request's true first token
+        (a replayed request keeps its original ``t_first``)."""
+        if len(req.out_tokens) == 1:
+            self.tracer.event(
+                "first_token", rid=req.rid, ttft_s=now - req.arrival
+            )
+
+    def _finish(self, req: Request, now: float) -> None:
         req.state = RequestState.FINISHED
+        req.t_finish = now
         self.pool.release(req.slot)
         req.slot = None
         self.running.remove(req)
         self.finished.append(req)
+        # in-engine lifecycle latencies: one histogram implementation
+        # (telemetry.Histogram) observes the same values an external
+        # consumer would derive from (arrival, t_first, token_times)
+        m = self.metrics
+        m.histogram("ttft_s").observe(req.t_first - req.arrival)
+        m.histogram("e2e_s").observe(now - req.arrival)
+        if req.t_admitted is not None:
+            m.histogram("queue_s").observe(req.t_admitted - req.arrival)
+        itl = m.histogram("itl_s")
+        for a, b in zip(req.token_times, req.token_times[1:]):
+            itl.observe(b - a)
+        self.tracer.event(
+            "request_finished", rid=req.rid, tokens=len(req.out_tokens),
+            e2e_s=now - req.arrival, n_evictions=req.n_evictions,
+        )
 
     def _after_prefill_chunk(self, req: Request, n: int, last_logits,
                              now: float) -> None:
         """Shared chunk epilogue: advance, register cached prompt pages,
         and emit the first generated token when the prefix completes."""
         req.prefill_pos += n
-        self.stats["prefill_tokens"] += n
+        self.metrics.inc("prefill_tokens", n)
         if self.pool.prefix_cache:
             covered = min(req.prefill_pos, len(req.prompt))
             self.pool.register_prefix(req.slot, req.prompt[:covered])
@@ -360,8 +491,9 @@ class Engine:
                 self._boundary_token(req, last), now,
                 last if self.ecfg.record_logits else None,
             )
+            self._note_emit(req, now)
             if req.done:
-                self._finish(req)
+                self._finish(req, now)
 
     def _boundary_token(self, req: Request, logits: np.ndarray) -> int:
         """First-token selection at the prefill boundary.  With on-device
@@ -429,10 +561,8 @@ class Engine:
             tokens, positions, bt, ctx_len, pages, offs, self.pool
         )
         self.pool.note_span_written(slots, starts, ns)
-        self.stats["prefill_batches"] += 1
-        self.stats["prefill_batch_size"] = max(
-            self.stats["prefill_batch_size"], len(chunks)
-        )
+        self.metrics.inc("prefill_batches")
+        self.metrics.counter("prefill_batch_size").peak(len(chunks))
         for b, (r, n) in enumerate(chunks):
             self._after_prefill_chunk(r, n, logits[b, n - 1], now)
 
@@ -499,21 +629,23 @@ class Engine:
                 jnp.asarray(ctx_len),
             )
             self.pool.write(slots, pos_list, k_new[:, :, 0], v_new[:, :, 0])
-        logits_np = None
-        if sel_np is None or self.ecfg.record_logits:
-            logits_np = np.asarray(logits[:, 0])
-        for b, r in enumerate(decode):
-            tok = (
-                int(sel_np[b]) if sel_np is not None
-                else self._select_token(r, logits_np[b])
-            )
-            r.emit(
-                tok, now,
-                logits_np[b] if self.ecfg.record_logits else None,
-            )
-            self.stats["decode_tokens"] += 1
-            if r.done:
-                self._finish(r)
+        with self.tracer.span("emit", lanes=len(decode)):
+            logits_np = None
+            if sel_np is None or self.ecfg.record_logits:
+                logits_np = np.asarray(logits[:, 0])
+            for b, r in enumerate(decode):
+                tok = (
+                    int(sel_np[b]) if sel_np is not None
+                    else self._select_token(r, logits_np[b])
+                )
+                r.emit(
+                    tok, now,
+                    logits_np[b] if self.ecfg.record_logits else None,
+                )
+                self._note_emit(r, now)
+                self.metrics.inc("decode_tokens")
+                if r.done:
+                    self._finish(r, now)
 
     def _run_decode_spec(self, decode: list[Request], now: float) -> None:
         """One speculative tick: draft up to K tokens per lane, verify
@@ -531,33 +663,35 @@ class Engine:
         n_drafts = np.zeros((B,), np.int32)
         starts = [0] * B
         widths = [0] * B
-        for b, r in enumerate(decode):
-            slots[b] = r.slot
-            length = self.pool.length(r.slot)
-            # opportunistic draft: capped by the request's remaining token
-            # budget, the slot's page capacity, and page availability —
-            # drafting never evicts anyone (the guaranteed +1 page was
-            # already claimed by _ensure_decode_pages)
-            room = min(
-                K,
-                r.max_new - len(r.out_tokens) - 1,
-                self.pool.seq_capacity_tokens() - (length + 1),
-            )
-            prop = (
-                self.drafter.propose(r.prefix, room)
-                if room > 0 else np.zeros(0, np.int32)
-            )
-            n = len(prop)
-            while n > 0 and not self.pool.extend(r.slot, length + 1 + n):
-                n -= 1
-            tokens[b, 0] = r.out_tokens[-1]
-            tokens[b, 1 : 1 + n] = prop[:n]
-            drafts[b, :n] = prop[:n]
-            n_drafts[b] = n
-            positions[b] += length
-            ctx_len[b] = length
-            starts[b], widths[b] = length, 1 + n
-            self.stats["draft_tokens"] += n
+        with self.tracer.span("draft", lanes=len(decode)):
+            for b, r in enumerate(decode):
+                slots[b] = r.slot
+                length = self.pool.length(r.slot)
+                # opportunistic draft: capped by the request's remaining
+                # token budget, the slot's page capacity, and page
+                # availability — drafting never evicts anyone (the
+                # guaranteed +1 page was already claimed by
+                # _ensure_decode_pages)
+                room = min(
+                    K,
+                    r.max_new - len(r.out_tokens) - 1,
+                    self.pool.seq_capacity_tokens() - (length + 1),
+                )
+                prop = (
+                    self.drafter.propose(r.prefix, room)
+                    if room > 0 else np.zeros(0, np.int32)
+                )
+                n = len(prop)
+                while n > 0 and not self.pool.extend(r.slot, length + 1 + n):
+                    n -= 1
+                tokens[b, 0] = r.out_tokens[-1]
+                tokens[b, 1 : 1 + n] = prop[:n]
+                drafts[b, :n] = prop[:n]
+                n_drafts[b] = n
+                positions[b] += length
+                ctx_len[b] = length
+                starts[b], widths[b] = length, 1 + n
+                self.metrics.inc("draft_tokens", n)
         pages, offs = self.pool.span_addresses(slots, starts, widths, W)
         bt = self.pool.block_table(slots)
         bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
@@ -573,48 +707,53 @@ class Engine:
             sampling, self.pool,
         )
         self.pool.note_span_written(slots, starts, widths)
-        self.stats["spec_ticks"] += 1
-        self.stats["spec_lanes"] += len(decode)
-        logits_np = None
-        if not self.ecfg.device_sample or self.ecfg.record_logits:
-            logits_np = np.asarray(logits)
-        sel_np, n_acc_np = np.asarray(sel), np.asarray(n_acc)
-        extra = 0
-        for b, r in enumerate(decode):
-            length = int(ctx_len[b])
-            emitted = 0
-            if self.ecfg.device_sample:
-                for i in range(int(n_acc_np[b]) + 1):
-                    r.emit(
-                        int(sel_np[b, i]), now,
-                        logits_np[b, i] if self.ecfg.record_logits else None,
-                    )
-                    emitted += 1
-                    if r.done:
-                        break
-            else:
-                i = 0
-                while True:
-                    tok = self._select_token(r, logits_np[b, i])
-                    r.emit(
-                        tok, now,
-                        logits_np[b, i] if self.ecfg.record_logits else None,
-                    )
-                    emitted += 1
-                    if r.done or i >= n_drafts[b] or tok != drafts[b, i]:
-                        break
-                    i += 1
-            self.stats["decode_tokens"] += emitted
-            self.stats["accepted_tokens"] += emitted - 1
-            self.stats["rolled_back_tokens"] += widths[b] - emitted
-            extra += emitted - 1
-            if r.done:
-                self._finish(r)  # releases the slot — no rollback needed
-            else:
-                # un-write the rejected tail: the last emitted token's KV
-                # is computed NEXT tick (it is the new last_emitted), so
-                # the valid length is ctx + emitted
-                self.pool.truncate(r.slot, length + emitted)
+        self.metrics.inc("spec_ticks")
+        self.metrics.inc("spec_lanes", len(decode))
+        with self.tracer.span("emit", lanes=len(decode)):
+            logits_np = None
+            if not self.ecfg.device_sample or self.ecfg.record_logits:
+                logits_np = np.asarray(logits)
+            sel_np, n_acc_np = np.asarray(sel), np.asarray(n_acc)
+            extra = 0
+            for b, r in enumerate(decode):
+                length = int(ctx_len[b])
+                emitted = 0
+                if self.ecfg.device_sample:
+                    for i in range(int(n_acc_np[b]) + 1):
+                        r.emit(
+                            int(sel_np[b, i]), now,
+                            logits_np[b, i] if self.ecfg.record_logits
+                            else None,
+                        )
+                        self._note_emit(r, now)
+                        emitted += 1
+                        if r.done:
+                            break
+                else:
+                    i = 0
+                    while True:
+                        tok = self._select_token(r, logits_np[b, i])
+                        r.emit(
+                            tok, now,
+                            logits_np[b, i] if self.ecfg.record_logits
+                            else None,
+                        )
+                        self._note_emit(r, now)
+                        emitted += 1
+                        if r.done or i >= n_drafts[b] or tok != drafts[b, i]:
+                            break
+                        i += 1
+                self.metrics.inc("decode_tokens", emitted)
+                self.metrics.inc("accepted_tokens", emitted - 1)
+                self.metrics.inc("rolled_back_tokens", widths[b] - emitted)
+                extra += emitted - 1
+                if r.done:
+                    self._finish(r, now)  # releases the slot — no rollback
+                else:
+                    # un-write the rejected tail: the last emitted token's
+                    # KV is computed NEXT tick (it is the new
+                    # last_emitted), so the valid length is ctx + emitted
+                    self.pool.truncate(r.slot, length + emitted)
         # accepted extras beyond the planned one-per-lane charge the NEXT
         # step's budget; rejected drafts were never charged
         self.scheduler.charge_accepted(extra)
@@ -622,31 +761,22 @@ class Engine:
     # ---- reporting ------------------------------------------------------
 
     def summary(self) -> dict:
-        return {
-            **self.stats,
-            # speculative decode health: how often the drafter was right,
-            # and how many tokens a verify tick emitted on average
-            "acceptance_rate": (
-                self.stats["accepted_tokens"]
-                / max(1, self.stats["draft_tokens"])
-            ),
-            "accepted_per_tick": (
-                self.stats["accepted_tokens"]
-                / max(1, self.stats["spec_ticks"])
-            ),
-            # mean tokens ONE lane emits per verify it takes part in
-            # (1.0 = no speculative benefit, K+1 = every draft accepted)
-            "tokens_per_lane_tick": (
-                self.stats["decode_tokens"]
-                / max(1, self.stats["spec_lanes"])
-            ) if self.stats["spec_ticks"] else 1.0,
-            "peak_pages_in_use": self.pool.peak_pages_in_use,
-            "peak_occupancy": self.pool.peak_pages_in_use
-            / max(1, self.pool.n_pages - 1),
-            # page-refcount gauges (non-trivial only with the prefix cache)
-            "shared_pages": self.pool.shared_pages,
-            "cached_pages": self.pool.cached_pages,
-            "max_page_ref": self.pool.max_page_ref,
-            "cow_copies": self.pool.cow_copies,
-            "finished": len(self.finished),
-        }
+        """One metrics snapshot: every counter, every live pool gauge,
+        the in-engine latency histograms (``ttft_s_p50`` / ``itl_s_p99``
+        / ``queue_s_*`` / ``e2e_s_*`` — None until a request finished),
+        and the derived speculative-health ratios."""
+        s = self.metrics.snapshot()
+        # speculative decode health: how often the drafter was right,
+        # and how many tokens a verify tick emitted on average
+        s["acceptance_rate"] = (
+            s["accepted_tokens"] / max(1, s["draft_tokens"])
+        )
+        s["accepted_per_tick"] = (
+            s["accepted_tokens"] / max(1, s["spec_ticks"])
+        )
+        # mean tokens ONE lane emits per verify it takes part in
+        # (1.0 = no speculative benefit, K+1 = every draft accepted)
+        s["tokens_per_lane_tick"] = (
+            s["decode_tokens"] / max(1, s["spec_lanes"])
+        ) if s["spec_ticks"] else 1.0
+        return s

@@ -449,6 +449,27 @@ class PagedKVPool:
     def is_int8(self) -> bool:
         return self.k_scale is not None
 
+    def metrics_gauges(self) -> dict:
+        """Name -> zero-arg callback for every pool gauge, in the form
+        :class:`repro.serve.telemetry.MetricsRegistry` registers (callback
+        gauges are evaluated at snapshot time, so the registry always
+        reports live pool state without the pool knowing about telemetry).
+        The engine merges these into its registry; ``summary()`` and the
+        periodic ``--metrics-every`` snapshots read them from there."""
+        return {
+            "pages_in_use": lambda: self.pages_in_use,
+            "peak_pages_in_use": lambda: self.peak_pages_in_use,
+            "occupancy": lambda: self.occupancy,
+            "peak_occupancy": (
+                lambda: self.peak_pages_in_use / max(1, self.n_pages - 1)
+            ),
+            "shared_pages": lambda: self.shared_pages,
+            "cached_pages": lambda: self.cached_pages,
+            "max_page_ref": lambda: self.max_page_ref,
+            "cow_copies": lambda: self.cow_copies,
+            "prefix_hit_pages": lambda: self.prefix_hit_pages,
+        }
+
     def _storage(self) -> list:
         arrs = [self.k, self.v]
         if self.is_int8:

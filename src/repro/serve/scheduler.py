@@ -30,6 +30,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serve.telemetry import NULL_TRACER
+
 __all__ = [
     "Request",
     "RequestState",
@@ -90,8 +92,12 @@ class Request:                    # list.remove/in on running queues
     out_tokens: list = dataclasses.field(default_factory=list)
     n_evictions: int = 0
 
-    # timing (engine-relative seconds)
+    # timing (engine-relative seconds; epoch = Engine construction or the
+    # last reset_clock).  ``t_admitted`` is the FIRST admission — an
+    # evicted request keeps it, so queue time measures arrival-to-service.
+    t_admitted: Optional[float] = None
     t_first: Optional[float] = None
+    t_finish: Optional[float] = None
     token_times: list = dataclasses.field(default_factory=list)
     # optional per-emission last-token logits (tests/--check)
     step_logits: list = dataclasses.field(default_factory=list)
@@ -157,6 +163,9 @@ class TokenBudgetFCFS:
         # speculative accept debt: extra tokens emitted beyond the one
         # planned per decode lane, charged against the NEXT step's budget
         self._accept_debt = 0
+        # lifecycle telemetry sink; the engine swaps in its live tracer
+        # (telemetry.NULL_TRACER costs one no-op call when tracing is off)
+        self.tracer = NULL_TRACER
 
     def charge_accepted(self, n_tokens: int) -> None:
         """Charge ``n_tokens`` extra accepted (speculative) tokens against
@@ -187,7 +196,7 @@ class TokenBudgetFCFS:
     def pending(self) -> int:
         return len(self.waiting) + len(self.queue)
 
-    def plan(self, running: list[Request], pool) -> StepPlan:
+    def plan(self, running: list[Request], pool, now: float = 0.0) -> StepPlan:
         decode = [r for r in running if r.state is RequestState.DECODE]
         # settle last tick's speculative accept debt first: accepted extras
         # ate real budget, so they displace this step's prefill work (a
@@ -221,6 +230,13 @@ class TokenBudgetFCFS:
             r.state = RequestState.PREFILL
             r.prefill_pos = pool.length(slot)
             hit_tokens += r.prefill_pos
+            if r.t_admitted is None:
+                r.t_admitted = now
+            self.tracer.event(
+                "request_admitted", rid=r.rid, queue_s=now - r.arrival,
+                prompt_tokens=len(r.prefix), cached_tokens=r.prefill_pos,
+                replay=r.n_evictions > 0,
+            )
             running.append(r)
             n = min(self.prefill_chunk, len(r.prefix) - r.prefill_pos, budget)
             prefill.append((r, n))

@@ -402,3 +402,42 @@ def test_tp_engine_device_sampled_stream_parity(mesh):
     single = run(CachedDecoder.from_model(model, params))
     for a, b in zip(tp, single):
         np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry under TP: tracing never changes tokens; spans carry mesh tags
+# ---------------------------------------------------------------------------
+
+
+def test_tp_engine_traced_token_parity_and_mesh_tags(mesh, tmp_path):
+    """A sync tracer attached to the TP engine must not perturb the token
+    stream, and every exported span must carry the mesh geometry tags
+    (DistributedCachedDecoder.trace_tags) so distributed traces stay
+    interpretable offline."""
+    from repro.serve import Tracer, phase_breakdown, validate_chrome_trace
+
+    plain, dist, model, params = _adapters(mesh)
+    cfg = model.cfg
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=9).tokens
+    gen = 5
+    _, t0 = _run_engine(plain, prompts, gen)
+    tracer = Tracer(sync=True)
+    engine = Engine(dist, EngineConfig(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8, paged_decode=True,
+    ), tracer=tracer)
+    reqs = [engine.submit(np.asarray(p), max_new=gen) for p in prompts]
+    engine.run()
+    for a, b in zip(t0, [np.asarray(r.out_tokens) for r in reqs]):
+        np.testing.assert_array_equal(a, b)
+    assert tracer.tags["mesh_model"] == mesh.shape["model"]
+    assert tracer.tags["mesh_data"] == mesh.shape["data"]
+    assert tracer.tags["pool_sharded"] is True
+    obj = tracer.export_chrome_trace(tmp_path / "tp_trace.json")
+    validate_chrome_trace(obj)
+    spans = [e for e in obj["traceEvents"] if e.get("ph") == "X"]
+    assert spans and all(
+        e["args"]["mesh_model"] == mesh.shape["model"] for e in spans
+    )
+    assert phase_breakdown(tracer.spans)["coverage"] >= 0.95
