@@ -22,10 +22,18 @@ tokens_per_lane_tick so drafting health is tracked alongside latency.
 span-derived per-phase time breakdown (+ coverage) to the record;
 ``--trace-out PATH`` also writes the Chrome/Perfetto trace JSON.
 
+``--cancel-rate F`` cancels a seeded fraction of the measured requests at
+deterministic ticks mid-run (engine fault plan, serve/faults.py) and
+``--deadline-s`` arms per-request wall-clock deadlines — the record then
+carries cancelled / failed / deadline_missed counts, and the ttft/itl p99
+columns measure tail latency UNDER cancellation churn: surviving requests
+pay for the page releases and batch-shape changes the cancels cause.
+
 Latency percentiles come from the engine's OWN lifecycle histograms
 (``Engine.summary()``), asserted equal to an external recomputation from
 raw request timestamps — the benchmark cross-checks the telemetry it
-reports.
+reports.  Both observe FINISHED requests only: a cancelled request's
+partial stream is not a latency sample.
 """
 from __future__ import annotations
 
@@ -104,12 +112,23 @@ def main(argv=None):
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="with --trace: also write the Chrome/Perfetto "
                          "trace-event JSON here")
+    ap.add_argument("--cancel-rate", type=float, default=0.0, metavar="F",
+                    help="cancel this fraction of the measured requests "
+                         "at seeded deterministic ticks mid-run: the "
+                         "latency percentiles then measure the tail "
+                         "UNDER cancellation churn")
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="SECS",
+                    help="per-request wall-clock deadline enforced at tick "
+                         "boundaries; missed deadlines FAIL the request "
+                         "(deadline_missed in the record)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
     if args.speculative and not args.paged:
         ap.error("--speculative verifies drafts over the paged pool; "
                  "add --paged")
+    if not 0.0 <= args.cancel_rate <= 1.0:
+        ap.error("--cancel-rate is a fraction in [0, 1]")
 
     cfg = get_smoke_config(args.arch)
     if not args.smoke:
@@ -151,6 +170,7 @@ def main(argv=None):
         speculative_k=args.speculative,
         draft=args.draft,
         device_sample=args.paged and not args.host_sample,
+        deadline_s=args.deadline_s,
     ))
     # warm the jit caches so compile time doesn't pollute latency stats
     warm = engine.submit(np.asarray(prompts[0]), max_new=2, arrival=0.0)
@@ -169,9 +189,25 @@ def main(argv=None):
             [np.tile(header, (args.requests, 1)), prompts[:, len(header):]],
             axis=1,
         )
-    for i in range(args.requests):
+    reqs = [
         engine.submit(np.asarray(prompts[i][: lengths[i]]), max_new=args.gen,
                       arrival=float(arrivals[i]))
+        for i in range(args.requests)
+    ]
+    if args.cancel_rate:
+        # seeded cancellation schedule: rids exist only after submission,
+        # so the rules are armed on the engine's (inert) default plan
+        from repro.serve.faults import FaultRule
+
+        n_cancel = int(round(args.cancel_rate * args.requests))
+        victims = rng.choice(args.requests, size=n_cancel, replace=False)
+        for v in sorted(int(v) for v in victims):
+            engine.faults.rules.append(FaultRule(
+                kind="cancel", rid=reqs[v].rid,
+                # steps counter restarts at 0 with reset_stats below, so
+                # these ticks land inside the measured run
+                tick=int(rng.integers(1, 2 * args.gen)),
+            ))
     tracer = None
     if args.trace:  # attach AFTER warm-up: the trace covers only the
         from repro.serve import Tracer  # measured run, not compilation
@@ -188,10 +224,13 @@ def main(argv=None):
     # engine's own histograms (summary()'s ttft_s_*/itl_s_*) observe the
     # SAME (arrival, t_first, token_times) data at finish, so the two
     # must agree to float tolerance (checked below)
-    ttft = [r.t_first - r.arrival for r in done]
+    from repro.serve import RequestState
+
+    fin = [r for r in done if r.state is RequestState.FINISHED]
+    ttft = [r.t_first - r.arrival for r in fin]
     itl = [
         b - a
-        for r in done
+        for r in fin
         for a, b in zip(r.token_times, r.token_times[1:])
     ]
     total = sum(len(r.out_tokens) for r in done)
@@ -238,6 +277,14 @@ def main(argv=None):
         "shared_pages": s["shared_pages"],
         "max_page_ref": s["max_page_ref"],
         "cow_copies": s["cow_copies"],
+        # robustness-under-churn (0 when --cancel-rate/--deadline-s off);
+        # with cancel_rate > 0 the ttft/itl p99 above ARE the
+        # p99-under-cancellation figures
+        "cancel_rate": args.cancel_rate,
+        "deadline_s": args.deadline_s,
+        "cancelled": s["cancelled"],
+        "failed": s["failed"],
+        "deadline_missed": s["deadline_missed"],
         # speculative decode health (0 when --speculative is off)
         "speculative_k": args.speculative,
         "acceptance_rate": round(s["acceptance_rate"], 3),

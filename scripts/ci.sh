@@ -101,6 +101,19 @@ n = validate_chrome_trace(json.load(open(sys.argv[1])))
 print(f"[ci] serve trace schema OK ({n} events)")
 PY
 
+# chaos smoke (serve/faults.py): one allocator failure, one NaN lane,
+# one mid-decode cancel injected into a checked paged run — targeted
+# requests terminate with their own reasons, survivors stay
+# token-identical to the fault-free oracle (prefix-match for the early-
+# terminated ones), and the run exits nonzero if any KV page leaks
+chaos_out="$(python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 6 --prompt-len 16 --gen 12 --paged --screen-logits \
+  --fault-plan 'alloc_fail@rid=0;nan_logits@rid=2;cancel@rid=4,tick=6' \
+  --check)"
+echo "$chaos_out"
+echo "$chaos_out" | grep -q "outcomes: finished=3 cancelled=1 failed=2" \
+  || { echo "[ci] chaos smoke: unexpected outcome mix"; exit 1; }
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -128,6 +141,12 @@ PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --paged-prefill --prefix-cache --prefix-len 16 \
   --out "$tmp/BENCH_serving_prefix.json"
+# tail latency under cancellation churn: seeded mid-run cancels, p99
+# measured over the surviving requests (cancelled/failed counts in the
+# record; the run itself asserts telemetry/external agreement)
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
+  --paged --cancel-rate 0.25 --deadline-s 60 \
+  --out "$tmp/BENCH_serving_cancel.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
 # speculative draft-and-verify vs one-token decode (repetitive + random

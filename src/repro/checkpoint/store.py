@@ -20,17 +20,20 @@ Properties that matter at 1000+ nodes:
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import pathlib
 import shutil
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 __all__ = [
+    "ArtifactCorruption",
     "CheckpointManager",
     "save_checkpoint",
     "load_checkpoint",
@@ -39,6 +42,27 @@ __all__ = [
 ]
 
 _MANIFEST = "manifest.json"
+
+
+class ArtifactCorruption(ValueError):
+    """A checkpoint shard's bytes do not match its manifest digest."""
+
+    def __init__(self, shard: int, path, expected: str, actual: str):
+        self.shard = shard
+        self.path = str(path)
+        self.expected = expected
+        self.actual = actual
+        super().__init__(
+            f"checkpoint shard {shard} corrupt: {path} sha256 "
+            f"{actual[:12]}… does not match manifest {expected[:12]}…")
+
+
+def _sha256(path: pathlib.Path) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree):
@@ -98,6 +122,12 @@ def save_checkpoint(
         "format": 1,
         "n_shards": len(shards),
         "leaf_to_shard": leaf_to_shard,
+        # per-shard content digests: load_arrays verifies these before
+        # deserializing, so silent on-disk corruption fails loudly with
+        # the shard named instead of NaN-ing the first forward pass
+        "shard_digests": [
+            _sha256(tmp / f"shard_{i:05d}.npz") for i in range(len(shards))
+        ],
         "time": time.time(),
         "meta": extra_meta or {},
     }
@@ -130,6 +160,8 @@ def load_arrays(
     *,
     step: Optional[int] = None,
     placer: Optional[Any] = None,
+    verify: bool = True,
+    _corrupt_shards=(),
 ) -> tuple[dict[str, Any], int, dict]:
     """Load a checkpoint as a flat ``path -> array`` dict, no ``like`` tree.
 
@@ -141,6 +173,12 @@ def load_arrays(
     leaf as it streams out of its npz shard — the distributed loader
     commits every leaf straight to its device sharding here, so a large
     artifact never exists as one unsharded host+device copy.
+
+    ``verify``: check each shard's SHA-256 against the manifest and
+    raise :class:`ArtifactCorruption` on mismatch.  Manifests written
+    before digests existed load with a warning.  ``_corrupt_shards`` is
+    the fault-injection hook: listed shard indices are treated as if
+    their bytes had rotted (see serve/faults.py).
     Returns (arrays, step, meta).
     """
     directory = pathlib.Path(directory)
@@ -150,9 +188,21 @@ def load_arrays(
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = directory / f"step_{step:08d}"
     manifest = json.loads((path / _MANIFEST).read_text())
+    digests = manifest.get("shard_digests")
+    if verify and digests is None:
+        warnings.warn(
+            f"{path} manifest predates shard checksums; loading unverified",
+            stacklevel=2)
     arrays: dict[str, Any] = {}
     for i in range(manifest["n_shards"]):
-        with np.load(path / f"shard_{i:05d}.npz") as z:
+        spath = path / f"shard_{i:05d}.npz"
+        if verify and digests is not None:
+            actual = _sha256(spath)
+            if i in _corrupt_shards:
+                actual = "0" * 64
+            if actual != digests[i]:
+                raise ArtifactCorruption(i, spath, digests[i], actual)
+        with np.load(spath) as z:
             for k in z.files:
                 key = k.replace("::", "/")
                 arrays[key] = z[k] if placer is None else placer(key, z[k])

@@ -47,6 +47,17 @@ decode/verify dispatch with per-request ``fold_in`` keys;
 ``--host-sample`` keeps the host-side numpy draw for debugging (the two
 backends draw different — but each reproducible — non-greedy streams).
 
+``--deadline-s`` / ``--max-queue`` / ``--screen-logits`` turn on the
+robustness layer (DESIGN.md §12): per-request wall-clock deadlines
+enforced at tick boundaries, bounded-queue admission backpressure, and a
+per-lane NaN/Inf logit screen that quarantines a poisoned request without
+touching its co-batched neighbours.  ``--fault-plan SPEC`` arms seeded
+deterministic fault injection (serve/faults.py) for chaos drills — e.g.
+``'alloc_fail@rid=0;nan_logits@rid=2;cancel@rid=4,tick=6'`` — and
+composes with ``--check``: surviving requests must still match the
+fault-free oracle token-for-token, early-terminated ones as an exact
+prefix, and the run fails if any KV page leaks.
+
 ``--trace-out PATH`` records per-tick spans (step phases, fused
 dispatches, request lifecycle events) into a ring buffer and writes a
 Chrome/Perfetto trace-event JSON on exit; ``--trace-sync`` blocks on the
@@ -99,7 +110,7 @@ def quantized_generate(qm, prompt, gen: int):
 
 def build_engine(adapter, *, max_seq_len, args, paged=None,
                  paged_prefill=None, prefix_cache=None,
-                 speculative=None) -> "Engine":
+                 speculative=None, faults=None, robust=True) -> "Engine":
     from repro.serve import Engine, EngineConfig
 
     paged = getattr(args, "paged", False) if paged is None else paged
@@ -128,8 +139,15 @@ def build_engine(adapter, *, max_seq_len, args, paged=None,
         # the fused on-device draw is the paged-path default; --host-sample
         # keeps the host-side numpy draw for debugging
         device_sample=paged and not getattr(args, "host_sample", False),
+        # robustness knobs stay off for reference oracles (robust=False):
+        # an oracle must finish every request even under a chaos drill
+        deadline_s=getattr(args, "deadline_s", None) if robust else None,
+        max_queue=getattr(args, "max_queue", None) if robust else None,
+        screen_logits=(
+            getattr(args, "screen_logits", False) if robust else False
+        ),
     )
-    return Engine(adapter, ecfg)
+    return Engine(adapter, ecfg, faults=faults if robust else None)
 
 
 def _serve_batch_fallback(model, params, prompts, args) -> int:
@@ -215,6 +233,28 @@ def main(argv=None):
                          "(repeatable)")
     ap.add_argument("--check", action="store_true",
                     help="verify engine tokens against the recompute path")
+    # failure domains (DESIGN.md §12; all off by default)
+    ap.add_argument("--deadline-s", type=float, default=None, metavar="SECS",
+                    help="per-request wall-clock deadline from arrival, "
+                         "enforced at tick boundaries; an expired request "
+                         "FAILS with finish_reason='deadline'")
+    ap.add_argument("--max-queue", type=int, default=None, metavar="N",
+                    help="bounded admission queue: submits past N pending "
+                         "requests raise a retryable AdmissionRejected "
+                         "instead of queueing unboundedly")
+    ap.add_argument("--fault-plan", default=None, metavar="SPEC",
+                    help="deterministic fault injection for chaos drills: "
+                         "'kind[@key=val,...][;rule...]' with kinds "
+                         "alloc_fail|pool_exhausted|nan_logits|"
+                         "dispatch_error|corrupt_shard|cancel and keys "
+                         "tick/rid/shard/times, e.g. "
+                         "'alloc_fail@rid=0;cancel@rid=4,tick=6'")
+    ap.add_argument("--screen-logits", action="store_true",
+                    help="NaN/Inf-screen every step's logits per lane "
+                         "(one fused device reduction); a poisoned lane "
+                         "is quarantined (FAILS with "
+                         "finish_reason='nan_logits'), co-batched lanes "
+                         "decode on unharmed")
     # telemetry (serve/telemetry.py; off by default — NULL_TRACER costs
     # one no-op call per span site)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
@@ -237,8 +277,16 @@ def main(argv=None):
 
     from repro.serve import CachedDecoder, DistributedCachedDecoder, \
         make_serving_mesh
-    from repro.serve.artifacts import load_quantized
-    from repro.serve.scheduler import SamplingParams
+    from repro.serve.artifacts import ArtifactCorruption, load_quantized
+    from repro.serve.faults import AdmissionRejected, parse_fault_plan
+    from repro.serve.scheduler import RequestState, SamplingParams
+
+    faults = None
+    if args.fault_plan:
+        try:
+            faults = parse_fault_plan(args.fault_plan)
+        except ValueError as e:
+            raise SystemExit(f"--fault-plan: {e}")
 
     if args.speculative and not args.paged:
         raise SystemExit(
@@ -285,15 +333,19 @@ def main(argv=None):
             if mesh is not None:
                 # leaves stream straight onto their mesh placement
                 adapter, meta = DistributedCachedDecoder.load(
-                    args.load_quantized, mesh=mesh
+                    args.load_quantized, mesh=mesh, load_faults=faults
                 )
                 cfg = adapter.cfg
                 if args.check:  # plain copy for the single-device oracle
                     qm, _ = load_quantized(args.load_quantized)
             else:
-                qm, meta = load_quantized(args.load_quantized)
+                qm, meta = load_quantized(args.load_quantized, faults=faults)
                 cfg = qm.cfg
                 adapter = CachedDecoder.from_quantized(qm)
+        except ArtifactCorruption as e:
+            # integrity failure is its own domain: the artifact EXISTS but
+            # its bytes don't match the manifest — don't suggest re-pathing
+            raise SystemExit(f"--load-quantized: {e}")
         except (FileNotFoundError, ValueError, KeyError) as e:
             raise SystemExit(
                 f"--load-quantized: {e} (expected a directory written by "
@@ -356,7 +408,8 @@ def main(argv=None):
     ).tokens
 
     engine = build_engine(
-        adapter, max_seq_len=args.prompt_len + args.gen, args=args
+        adapter, max_seq_len=args.prompt_len + args.gen, args=args,
+        faults=faults,
     )
     tracer = None
     if args.trace_out:
@@ -378,17 +431,26 @@ def main(argv=None):
         ]
     except ValueError as e:
         raise SystemExit(f"bad sampling flags: {e}")
-    try:
-        for i in range(args.requests):
-            engine.submit(
+    submitted = []  # (prompt index, request) for accepted submissions
+    for i in range(args.requests):
+        try:
+            req = engine.submit(
                 np.asarray(prompts[i]), max_new=args.gen,
                 arrival=i * args.arrival_gap,
                 sampling=sampling[i],
                 stop_tokens=stop_tokens,
             )
-    except ValueError as e:
-        raise SystemExit(f"cannot admit request: {e} "
-                         f"(grow --pages / --page-size or shrink --gen)")
+        except AdmissionRejected as e:
+            if e.retryable:
+                # bounded queue backpressure: a real client would retry
+                # with backoff; the fixed-workload driver just reports it
+                print(f"[serve] request {i} rejected (retryable): {e}")
+                continue
+            raise SystemExit(f"cannot admit request: {e} "
+                             f"(grow --pages / --page-size or shrink --gen)")
+        except ValueError as e:
+            raise SystemExit(f"cannot admit request: {e}")
+        submitted.append((i, req))
     t0 = time.perf_counter()
     done = engine.run(metrics_every=args.metrics_every)
     dt = time.perf_counter() - t0
@@ -396,6 +458,29 @@ def main(argv=None):
     total = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {label} {cfg.name}: {len(done)} requests, {total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s)")
+    n_fin = sum(1 for r in done if r.state is RequestState.FINISHED)
+    n_can = sum(1 for r in done if r.state is RequestState.CANCELLED)
+    n_fail = sum(1 for r in done if r.state is RequestState.FAILED)
+    outcome = (f"[serve] outcomes: finished={n_fin} cancelled={n_can} "
+               f"failed={n_fail}")
+    if n_fail:
+        reasons: dict[str, int] = {}
+        for r in done:
+            if r.state is RequestState.FAILED:
+                reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+        outcome += f" reasons={reasons}"
+    if n_can or n_fail or faults is not None:
+        print(outcome)
+    if faults is not None:
+        print(f"[serve] faults injected: {len(faults.log)} "
+              f"({'; '.join(e['kind'] for e in faults.log)})")
+    # blast-radius invariant: whatever was cancelled/failed/injected, every
+    # page must be back (the prefix trie legitimately retains its own refs)
+    leaked = engine.pool.pages_in_use - engine.pool.cached_pages
+    if leaked != 0 or engine.pool._slots:
+        print(f"[serve] FAIL: {leaked} leaked pages, "
+              f"{len(engine.pool._slots)} live slots after drain")
+        return 1
     print(f"[serve] steps={s['steps']} prefill_tokens={s['prefill_tokens']} "
           f"decode_tokens={s['decode_tokens']} evictions={s['evictions']} "
           f"peak_kv_occupancy={s['peak_occupancy']:.0%}")
@@ -432,10 +517,6 @@ def main(argv=None):
               f"{phases}")
 
     if args.check:
-        done = sorted(done, key=lambda r: r.rid)
-        engine_toks = np.stack(
-            [np.asarray(r.out_tokens, np.int32) for r in done]
-        )
         if args.kv_int8 and not (args.paged or args.paged_prefill):
             raise SystemExit(
                 "--kv-int8 --check needs --paged (and/or --paged-prefill): "
@@ -458,7 +539,7 @@ def main(argv=None):
             oracle = build_engine(
                 oracle_adapter, max_seq_len=args.prompt_len + args.gen,
                 args=args, paged=False, paged_prefill=False,
-                prefix_cache=False, speculative=0,
+                prefix_cache=False, speculative=0, robust=False,
             )
             oref = [
                 oracle.submit(np.asarray(prompts[i]), max_new=args.gen)
@@ -476,9 +557,26 @@ def main(argv=None):
         else:
             ref = np.asarray(greedy_generate(model, params, prompts, args.gen))
             ref_label = "fp prefill/decode"
-        agree = float(np.mean(engine_toks == ref))
-        print(f"[serve] check vs {ref_label}: token agreement {agree:.2%}")
-        if agree < 1.0:
+        # FINISHED rows must match the oracle token-for-token at full
+        # length; CANCELLED/FAILED rows must be an exact PREFIX of it —
+        # a fault may stop a request early but never corrupt its stream
+        total_cmp = matched = 0
+        truncated_ok = True
+        for i, r in submitted:
+            out = np.asarray(r.out_tokens, np.int32)
+            exp = np.asarray(ref[i], np.int32)
+            if r.state is RequestState.FINISHED:
+                if out.size != exp.size:
+                    truncated_ok = False
+                    continue
+            else:
+                exp = exp[: out.size]
+            total_cmp += exp.size
+            matched += int(np.sum(out == exp))
+        agree = matched / max(1, total_cmp)
+        print(f"[serve] check vs {ref_label}: token agreement {agree:.2%} "
+              f"over {total_cmp} tokens")
+        if agree < 1.0 or not truncated_ok:
             print(f"[serve] FAIL: engine cached decode diverged from the "
                   f"{ref_label} oracle")
             return 1

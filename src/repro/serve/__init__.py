@@ -24,14 +24,25 @@ Pieces (each usable on its own):
   * :mod:`repro.serve.telemetry` — off-by-default observability: ring-
     buffer span tracer (Perfetto/Chrome trace export, optional
     ``jax.profiler`` annotations), typed metrics registry, and per-
-    request lifecycle latency histograms.
+    request lifecycle latency histograms;
+  * :mod:`repro.serve.faults`    — failure domains: typed admission /
+    integrity / dispatch exceptions and a seeded deterministic
+    fault-injection plan (``parse_fault_plan``) the engine, pool,
+    adapter, and artifact loader all honour behind a no-op default.
 """
 from repro.serve.adapter import CachedDecoder
-from repro.serve.artifacts import load_quantized, save_quantized
+from repro.serve.artifacts import ArtifactCorruption, load_quantized, save_quantized
 from repro.serve.distributed import DistributedCachedDecoder, make_serving_mesh
 from repro.serve.engine import Engine, EngineConfig
+from repro.serve.faults import (
+    AdmissionRejected,
+    FaultInjected,
+    FaultPlan,
+    FaultRule,
+    parse_fault_plan,
+)
 from repro.serve.kv_cache import PagedKVPool
-from repro.serve.scheduler import Request, TokenBudgetFCFS
+from repro.serve.scheduler import Request, RequestState, TokenBudgetFCFS
 from repro.serve.telemetry import (
     MetricsRegistry,
     Tracer,
@@ -47,9 +58,16 @@ __all__ = [
     "EngineConfig",
     "PagedKVPool",
     "Request",
+    "RequestState",
     "TokenBudgetFCFS",
     "save_quantized",
     "load_quantized",
+    "ArtifactCorruption",
+    "AdmissionRejected",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultRule",
+    "parse_fault_plan",
     "Tracer",
     "MetricsRegistry",
     "phase_breakdown",

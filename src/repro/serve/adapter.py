@@ -74,10 +74,22 @@ from repro.kernels.paged_attention.ops import (
 )
 from repro.models import layers as L
 from repro.models.transformer import unstack_layers
+from repro.serve.faults import NO_FAULTS, FaultPlan
 from repro.serve.kv_cache import PagedKVPool, quantize_kv_int8
 from repro.serve.telemetry import NULL_TRACER, Tracer
 
 __all__ = ["CachedDecoder", "sample_tokens"]
+
+
+def _poison_lanes(logits, lanes):
+    """Overwrite the given batch lanes of ``logits`` with NaN — the
+    nan_logits fault: exactly what a rotted artifact or an unstable
+    kernel would hand the sampler.  Fault path only (never jitted)."""
+    if not lanes:
+        return logits
+    out = np.asarray(logits).copy()
+    out[np.asarray(lanes, np.int32)] = np.nan
+    return jnp.asarray(out)
 
 
 def sample_tokens(logits, temps, top_ps, seeds, draws, greedy_only=False):
@@ -177,6 +189,10 @@ class CachedDecoder:
     # span sink for the fused dispatches; Engine.attach_tracer swaps in
     # its live tracer (the NULL_TRACER default costs one no-op call)
     tracer: Tracer = dataclasses.field(default=NULL_TRACER, repr=False)
+    # fault-injection plan (serve/faults.py); the engine points this at
+    # its own plan and maintains the dispatch context (tick, lane_rids).
+    # Hooks on the inert default iterate an empty rule list.
+    faults: FaultPlan = dataclasses.field(default=NO_FAULTS, repr=False)
 
     def __post_init__(self):
         if self.cfg.family != "dense":
@@ -280,7 +296,13 @@ class CachedDecoder:
 
         Returns (logits (B, T, V), k_new (L, B, T, KV, hd), v_new (same)).
         """
-        return self._fwd(tokens, positions, ctx_k, ctx_v, ctx_len)
+        if self.faults.rules:
+            self.faults.check_dispatch()
+        logits, k_new, v_new = self._fwd(tokens, positions, ctx_k, ctx_v,
+                                         ctx_len)
+        if self.faults.rules:
+            logits = _poison_lanes(logits, self.faults.nan_lanes())
+        return logits, k_new, v_new
 
     def _forward(self, tokens, positions, ctx_k, ctx_v, ctx_len):
         cfg = self.cfg
@@ -374,6 +396,8 @@ class CachedDecoder:
         buffers and returns logits (B, 1, V).  The caller still owns the
         host-side length accounting (``pool.note_written``).
         """
+        if self.faults.rules:
+            self.faults.check_dispatch()
         toks = np.asarray(tokens, np.int32)
         with self.tracer.span("dispatch:decode_paged", lanes=toks.shape[0]):
             args = self._place_tree((
@@ -392,6 +416,8 @@ class CachedDecoder:
                 logits, pool.k, pool.v = self._fwd_paged(
                     *args, pool.k, pool.v
                 )
+        if self.faults.rules:
+            logits = _poison_lanes(logits, self.faults.nan_lanes())
         return logits
 
     def _paged_trunk(self, tokens, positions, block_tables, ctx_len,
@@ -447,6 +473,8 @@ class CachedDecoder:
         (see :func:`sample_tokens`).  Returns ``(sel (B, 1) int32,
         logits (B, 1, V))``; mutates the pool via donated buffers.
         """
+        if self.faults.rules:
+            self.faults.check_dispatch()
         toks = np.asarray(tokens, np.int32)
         with self.tracer.span(
             "dispatch:decode_paged_sample", lanes=toks.shape[0]
@@ -470,6 +498,8 @@ class CachedDecoder:
                 sel, logits, pool.k, pool.v = self._fwd_paged_s(
                     *args, pool.k, pool.v, greedy
                 )
+        if self.faults.rules:
+            logits = _poison_lanes(logits, self.faults.nan_lanes())
         return sel, logits
 
     @staticmethod
@@ -556,6 +586,8 @@ class CachedDecoder:
         buffers and returns logits (B, C, V).  The caller owns the host-
         side length accounting (``pool.note_span_written``).
         """
+        if self.faults.rules:
+            self.faults.check_dispatch()
         toks = np.asarray(tokens, np.int32)
         with self.tracer.span(
             "dispatch:prefill_paged",
@@ -577,6 +609,8 @@ class CachedDecoder:
                 logits, pool.k, pool.v = self._fwd_prefill(
                     *args, pool.k, pool.v
                 )
+        if self.faults.rules:
+            logits = _poison_lanes(logits, self.faults.nan_lanes())
         return logits
 
     def _prefill_trunk(self, tokens, positions, block_tables, ctx_len,
@@ -651,6 +685,8 @@ class CachedDecoder:
         ``(sel (B, K+1) int32, n_acc (B,) int32, logits (B, K+1, V))`` —
         lane b emits ``sel[b, :n_acc[b] + 1]``.
         """
+        if self.faults.rules:
+            self.faults.check_dispatch()
         toks = np.asarray(tokens, np.int32)
         with self.tracer.span(
             "dispatch:verify_paged",
@@ -675,6 +711,8 @@ class CachedDecoder:
                 sel, n_acc, logits, pool.k, pool.v = self._fwd_verify(
                     *args, pool.k, pool.v, greedy
                 )
+        if self.faults.rules:
+            logits = _poison_lanes(logits, self.faults.nan_lanes())
         return sel, n_acc, logits
 
     @staticmethod

@@ -25,7 +25,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.checkpoint.store import load_arrays, save_checkpoint
+from repro.checkpoint.store import ArtifactCorruption, load_arrays, save_checkpoint
 from repro.configs.base import ArchConfig
 from repro.core.quantizer import (
     QuantizedLinear,
@@ -34,7 +34,12 @@ from repro.core.quantizer import (
     linear_to_arrays,
 )
 
-__all__ = ["save_quantized", "load_quantized", "ARTIFACT_FORMAT"]
+__all__ = [
+    "save_quantized",
+    "load_quantized",
+    "ArtifactCorruption",
+    "ARTIFACT_FORMAT",
+]
 
 ARTIFACT_FORMAT = 1
 _NORM_KEYS = ("ln1", "ln2", "q_norm", "k_norm")
@@ -69,16 +74,25 @@ def save_quantized(
     return save_checkpoint(directory, 0, tree, extra_meta=meta)
 
 
-def load_quantized(directory, *, placer=None):
+def load_quantized(directory, *, placer=None, verify=True, faults=None):
     """-> (QuantizedModel, meta).  No re-quantization: packed weights load
     directly and transforms regenerate from their stored seeds.
 
     ``placer``: optional ``f(key, np_array) -> array`` applied per leaf on
     the way out of the store — ``serve.distributed.artifact_placer`` uses
-    it to commit packed codes straight to their mesh sharding."""
+    it to commit packed codes straight to their mesh sharding.
+
+    ``verify``: check shard SHA-256 digests against the manifest; a
+    mismatch raises :class:`ArtifactCorruption` naming the shard
+    (manifests written before digests existed load with a warning).
+    ``faults``: optional :class:`~repro.serve.faults.FaultPlan` whose
+    armed ``corrupt_shard`` rules force digest mismatches — the
+    integrity path is testable without rotting bytes on disk."""
     from repro.launch.quantize import QuantizedModel  # deferred: avoid cycle
 
-    arrays, _step, meta = load_arrays(directory, placer=placer)
+    corrupt = faults.corrupt_shards() if faults is not None else ()
+    arrays, _step, meta = load_arrays(
+        directory, placer=placer, verify=verify, _corrupt_shards=corrupt)
     if meta.get("kind") != "quip_quantized_model":
         raise ValueError(
             f"{directory} is not a quantized artifact "

@@ -230,15 +230,21 @@ class DistributedCachedDecoder(CachedDecoder):
         *,
         mesh: Mesh,
         rules: Optional[dict] = None,
+        verify: bool = True,
+        load_faults=None,
         **kw,
     ) -> tuple["DistributedCachedDecoder", dict]:
         """Load a persistent quantized artifact directly onto the mesh
         (each checkpoint leaf is committed to its sharding as it streams
-        out of the npz shards).  Returns (adapter, manifest meta)."""
+        out of the npz shards).  Returns (adapter, manifest meta).
+        ``verify``/``load_faults`` pass through to
+        :func:`artifacts.load_quantized` (shard-digest checking and the
+        corrupt_shard injection hook)."""
         from repro.serve.artifacts import load_quantized
 
         ctx = _serving_ctx(mesh, rules)
-        qm, meta = load_quantized(directory, placer=artifact_placer(ctx))
+        qm, meta = load_quantized(directory, placer=artifact_placer(ctx),
+                                  verify=verify, faults=load_faults)
         adapter = super().from_quantized(qm, ctx=ctx, **kw)
         return adapter, meta
 

@@ -79,6 +79,7 @@ import numpy as np
 
 from repro.serve.adapter import CachedDecoder, sample_tokens
 from repro.serve.drafter import make_drafter
+from repro.serve.faults import AdmissionRejected, FaultInjected, FaultPlan
 from repro.serve.kv_cache import page_bucket, pages_needed
 from repro.serve.scheduler import (
     Request,
@@ -111,7 +112,20 @@ _STAT_COUNTERS = (
     "draft_tokens",  # tokens the drafter proposed
     "accepted_tokens",  # proposed tokens the verifier accepted
     "rolled_back_tokens",  # rejected drafts un-written (truncate)
+    "cancelled",  # requests reaching CANCELLED
+    "failed",  # requests reaching FAILED (any reason)
+    "deadline_missed",  # FAILED specifically for blowing deadline_s
+    "quarantined_lanes",  # lanes the NaN/Inf screen pulled mid-batch
+    "admission_rejected",  # submits refused with AdmissionRejected
 )
+
+
+# device-cheap anomaly screen: ONE fused reduction over the step's logits
+# produces a per-lane finite flag — the only thing shipped to the host is
+# a (B,) bool, never the logits themselves
+@jax.jit
+def _lane_finite(logits):
+    return jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,6 +145,16 @@ class EngineConfig:
     draft: str = "ngram"  # self-drafter kind (serve/drafter.py)
     draft_ngram: int = 3  # longest lookup pattern the ngram drafter tries
     device_sample: bool = False  # fuse the token draw into the paged dispatch
+    # ---- failure domains (DESIGN.md §12) ----
+    deadline_s: Optional[float] = None  # default per-request wall-clock
+    #   deadline (from arrival), enforced at tick boundaries
+    max_queue: Optional[int] = None  # bounded admission queue: submits past
+    #   this many pending requests raise a retryable AdmissionRejected
+    max_evictions: Optional[int] = 8  # eviction-storm guard: a request
+    #   evicted this many times FAILS ("eviction_storm") instead of
+    #   replaying its prefix forever (None = legacy unbounded behavior)
+    screen_logits: bool = False  # per-lane NaN/Inf screen on every step's
+    #   logits; a poisoned lane is quarantined, co-batched lanes unharmed
 
     @property
     def pages_per_seq(self) -> int:
@@ -144,7 +168,8 @@ class EngineConfig:
 
 class Engine:
     def __init__(self, adapter: CachedDecoder, ecfg: EngineConfig, dtype=None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 faults: Optional[FaultPlan] = None):
         self.adapter = adapter
         self.ecfg = ecfg
         self.paged = ecfg.paged_decode or adapter.paged
@@ -179,10 +204,21 @@ class Engine:
             prefix_cache=ecfg.prefix_cache,
         )
         self.scheduler = TokenBudgetFCFS(
-            token_budget=ecfg.token_budget, prefill_chunk=ecfg.prefill_chunk
+            token_budget=ecfg.token_budget, prefill_chunk=ecfg.prefill_chunk,
+            max_queue=ecfg.max_queue,
         )
         self.running: list[Request] = []
         self.finished: list[Request] = []
+        # deterministic fault injection (serve/faults.py): the engine owns
+        # the plan's dispatch context (tick, lane_rids) and points the
+        # pool + adapter hooks at it.  Default: a fresh empty plan — every
+        # hook short-circuits on the empty rule list.
+        self.faults = faults if faults is not None else FaultPlan()
+        self.pool.faults = self.faults
+        adapter.faults = self.faults
+        self._fault_log_pos = 0  # plan.log entries already reconciled
+        # fast-path skip for deadline sweeps; flips on the first deadline
+        self._deadlines = ecfg.deadline_s is not None
         # metrics: hot-path counters, pool gauges (live callbacks), and
         # the in-engine latency histograms (one percentile implementation
         # — benchmarks consume these instead of re-deriving latencies)
@@ -192,6 +228,7 @@ class Engine:
         for name, fn in self.pool.metrics_gauges().items():
             self.metrics.gauge(name, fn=fn)
         self.metrics.gauge("finished", fn=lambda: len(self.finished))
+        self.metrics.gauge("faults_injected", fn=lambda: len(self.faults.log))
         for name in ("ttft_s", "itl_s", "queue_s", "e2e_s"):
             self.metrics.histogram(name)
         # span tracing is OFF by default: NULL_TRACER's span() is a no-op
@@ -213,23 +250,81 @@ class Engine:
         arrival: float = 0.0,
         sampling: Optional[SamplingParams] = None,
         stop_tokens: tuple = (),
+        deadline_s: Optional[float] = None,
     ) -> Request:
+        """Submit a request, or raise a typed :class:`AdmissionRejected`:
+        non-retryable when the request can never fit this pool (per-
+        sequence or total capacity), retryable when the bounded queue is
+        full.  Total-capacity accounting discounts full prompt-prefix
+        pages the prefix cache already holds — a cached prompt is not
+        rejected for pages it will never claim.  The forecast is
+        OPTIMISTIC: ``prompt + max_new`` is a ceiling (stop tokens can
+        end generation early), so the discount gives a cached prompt the
+        benefit of the doubt; a request whose prefix actually outgrows
+        the pool fails cleanly later ("capacity", via the queue-head
+        feasibility backstop) instead of wedging the engine.
+        ``deadline_s`` overrides ``EngineConfig.deadline_s`` for this
+        request."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
-        if not self.pool.fits(prompt.size + max_new):
-            raise ValueError(
-                f"request needs {prompt.size + max_new} tokens; pool capacity "
-                f"is {self.pool.seq_capacity_tokens()} per sequence / "
-                f"{self.pool.n_pages - 1} pages total"
+        total = prompt.size + max_new
+        if total > self.pool.seq_capacity_tokens():
+            self.metrics.inc("admission_rejected")
+            raise AdmissionRejected(
+                "over_capacity", retryable=False,
+                needed_pages=pages_needed(total, self.ecfg.page_size),
+                available_pages=self.pool.max_pages_per_seq,
+            )
+        need = max(1, pages_needed(total, self.ecfg.page_size))
+        # -1: even a full-prefix hit claims one private copy-on-admit page
+        cached = min(self.pool.cached_prefix_pages(prompt), need - 1)
+        if need - cached > self.pool.n_pages - 1:
+            self.metrics.inc("admission_rejected")
+            raise AdmissionRejected(
+                "over_capacity", retryable=False,
+                needed_pages=need - cached,
+                available_pages=self.pool.n_pages - 1,
             )
         req = Request(
             prompt=prompt, max_new=max_new, arrival=arrival,
             sampling=sampling or SamplingParams(),
             stop_tokens=tuple(stop_tokens),
+            deadline_s=(self.ecfg.deadline_s if deadline_s is None
+                        else deadline_s),
         )
-        self.scheduler.submit(req)
+        try:
+            self.scheduler.submit(req)
+        except AdmissionRejected:
+            self.metrics.inc("admission_rejected")
+            raise
+        if req.deadline_s is not None:
+            self._deadlines = True
         return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request by id from ANY live state — waiting, queued,
+        mid-prefill, mid-decode, or mid-speculative-verify.  Pages and
+        prefix-trie refcounts are released exactly as a finish would
+        (the trie keeps its own refs on cached pages).  Returns whether
+        a live request was found; terminal requests are left alone."""
+        now = self.now()
+        sch = self.scheduler
+        for r in sch.waiting:
+            if r.rid == rid:
+                sch.waiting.remove(r)
+                self._cancel(r, now)
+                return True
+        for r in sch.queue:
+            if r.rid == rid:
+                sch.queue.remove(r)
+                self._cancel(r, now)
+                return True
+        for r in self.running:
+            if r.rid == rid:
+                self._cancel(r, now)  # _terminalize detaches from running
+                return True
+        return False
 
     # ---- telemetry ------------------------------------------------------
 
@@ -356,11 +451,19 @@ class Engine:
         with tr.span("step"):
             now = self.now()
             with tr.span("schedule"):
+                if self.faults.rules:
+                    self.faults.tick = self.metrics.counter("steps").value
+                    for rid in self.faults.cancel_rids():
+                        self.cancel(rid)
                 self.scheduler.admit_arrivals(now)
+                if self._deadlines:
+                    self._enforce_deadlines(now)
                 plan = self.scheduler.plan(self.running, self.pool, now=now)
                 self.metrics.inc("prefix_hit_tokens", plan.prefix_hit_tokens)
-                decode = self._ensure_decode_pages(plan)
+                decode = self._ensure_decode_pages(plan, now)
+                self._check_queue_head(now)
                 # drop chunks whose request the page-ensure pass evicted
+                # (or a fault/cancel/deadline terminalized)
                 chunks = [
                     (r, n) for r, n in plan.prefill
                     if r.state is RequestState.PREFILL
@@ -386,6 +489,8 @@ class Engine:
                         self._run_decode(decode, now)
                 worked = True
             self.metrics.inc("steps")
+            if self.faults.rules:
+                self._reconcile_faults()
         return worked
 
     # ---- internals ------------------------------------------------------
@@ -415,7 +520,16 @@ class Engine:
             p = nucleus / nucleus.sum()
         return int(req.rng.choice(p.size, p=p))
 
-    def _evict(self, victim: Request) -> None:
+    def _evict(self, victim: Request, now: float) -> None:
+        cap = self.ecfg.max_evictions
+        if cap is not None and victim.n_evictions >= cap:
+            # eviction-storm guard: a sequence thrashing in and out of
+            # residency FAILS cleanly — freeing its pages for the asking
+            # lane — instead of replaying its prefix forever (two near-
+            # capacity requests can otherwise evict each other's progress
+            # until the run-loop backstop trips)
+            self._fail(victim, "eviction_storm", now)
+            return
         self.pool.release(victim.slot)
         self.running.remove(victim)
         self.scheduler.requeue(victim)
@@ -425,24 +539,96 @@ class Engine:
             generated=len(victim.out_tokens), n_evictions=victim.n_evictions,
         )
 
-    def _ensure_decode_pages(self, plan: StepPlan) -> list[Request]:
+    def _ensure_decode_pages(self, plan: StepPlan, now: float) -> list[Request]:
         """Claim a page for each decode lane's next token, evicting under
         pressure.  Lanes are served oldest-first and the victim is always
         the NEWEST running request — possibly the asking lane itself —
         so requests already granted pages this step are never clawed back
-        (strict-FCFS preemption)."""
+        (strict-FCFS preemption).  An armed ``alloc_fail`` rule makes the
+        targeted lane's claim fail terminally (FAILED, "alloc_fail")."""
         active = []
+        faults = self.faults if self.faults.rules else None
         for r in sorted(plan.decode, key=lambda r: (r.arrival, r.rid)):
             if r.state is not RequestState.DECODE:
-                continue  # already evicted as someone else's victim
+                continue  # evicted (or terminalized) as a side effect
+            if faults is not None and faults.fire("alloc_fail", rid=r.rid):
+                self._fail(r, "alloc_fail", now)
+                continue
             while not self.pool.extend(r.slot, self.pool.length(r.slot) + 1):
                 victim = max(self.running, key=lambda q: (q.arrival, q.rid))
-                self._evict(victim)
-                if victim is r:
-                    break
+                self._evict(victim, now)
+                if r.state is not RequestState.DECODE:
+                    break  # r itself was evicted or stormed out
             else:
                 active.append(r)
         return active
+
+    def _enforce_deadlines(self, now: float) -> None:
+        """Fail queued/running requests past their wall-clock deadline.
+        Checked at tick boundaries: a mid-tick expiry fails at the next
+        boundary — the tick in flight is never torn down."""
+        sch = self.scheduler
+        expired = [
+            r for r in (*sch.queue, *self.running)
+            if r.deadline_s is not None and now - r.arrival > r.deadline_s
+        ]
+        for r in expired:
+            if r in sch.queue:
+                sch.queue.remove(r)
+            self.metrics.inc("deadline_missed")
+            self._fail(r, "deadline", now)
+
+    def _check_queue_head(self, now: float) -> None:
+        """Fail a head-of-queue request that can NEVER be admitted: a
+        decoding sequence needs its whole prefix resident at once, so a
+        prefix needing more distinct pages than the pool owns is
+        infeasible — cached or not (shared trie pages still occupy
+        residency).  This is the exact backstop behind submit's
+        OPTIMISTIC capacity forecast (``max_new`` is a ceiling; stop
+        tokens can end generation early): a request whose generated
+        prefix actually outgrows the pool fails cleanly here with reason
+        "capacity".  Strict FCFS means an infeasible head would starve
+        everything behind it and stall the run loop otherwise."""
+        q = self.scheduler.queue
+        if not q:
+            return
+        head = q[0]
+        need = max(1, pages_needed(len(head.prefix), self.ecfg.page_size))
+        if need > self.pool.n_pages - 1:
+            q.popleft()
+            self._fail(head, "capacity", now)
+
+    def _reconcile_faults(self) -> None:
+        """Turn this step's fault firings (plan.log) into telemetry: one
+        dynamic ``fault:<kind>`` counter bump and one trace event each."""
+        log = self.faults.log
+        for entry in log[self._fault_log_pos:]:
+            self.metrics.inc("fault:" + entry["kind"])
+            self.tracer.event("fault_injected", **entry)
+        self._fault_log_pos = len(log)
+
+    def _screen_lanes(self, lanes: list[Request], logits, now: float) -> None:
+        """Quarantine lanes whose logits carry NaN/Inf: ONE fused per-lane
+        isfinite reduction on device (only a (B,) bool crosses to the
+        host), then the poisoned lane FAILS ("nan_logits") while
+        co-batched lanes keep their exact, untouched logit rows — blast
+        radius is one request."""
+        ok = np.asarray(_lane_finite(logits))
+        for b, r in enumerate(lanes):
+            if ok[b] or r.state.terminal:
+                continue
+            self.metrics.inc("quarantined_lanes")
+            self._fail(r, "nan_logits", now)
+
+    def _fail_dispatch(self, lanes, exc: FaultInjected, now: float) -> None:
+        """A dispatch_error fault fired at the adapter entry: nothing ran,
+        no pool length advanced.  Fail ONLY the targeted request; the
+        surviving lanes retry next tick (recomputing the identical step)
+        and stay token-identical to a fault-free run."""
+        for r in lanes:
+            if r is not None and r.rid == exc.rid and not r.state.terminal:
+                self._fail(r, "dispatch_error", now)
+                return
 
     def _note_emit(self, req: Request, now: float) -> None:
         """Post-emit lifecycle hook: mark the request's true first token
@@ -452,16 +638,33 @@ class Engine:
                 "first_token", rid=req.rid, ttft_s=now - req.arrival
             )
 
-    def _finish(self, req: Request, now: float) -> None:
-        req.state = RequestState.FINISHED
+    def _terminalize(self, req: Request, state: RequestState, reason: str,
+                     now: float) -> None:
+        """Shared terminal transition (FINISHED/CANCELLED/FAILED): stamp
+        state + finish_reason, release pages (refcount-correct from any
+        live state — the prefix trie keeps its own refs), detach from
+        ``running``, and count the reason (``finish:<reason>``)."""
+        req.state = state
+        req.finish_reason = reason
         req.t_finish = now
-        self.pool.release(req.slot)
-        req.slot = None
-        self.running.remove(req)
+        if req.slot is not None:
+            self.pool.release(req.slot)
+            req.slot = None
+        if req in self.running:
+            self.running.remove(req)
         self.finished.append(req)
+        self.metrics.inc("finish:" + reason)
+
+    def _finish(self, req: Request, now: float) -> None:
+        reason = (
+            "stop" if req.out_tokens and req.out_tokens[-1] in req.stop_tokens
+            else "length"
+        )
+        self._terminalize(req, RequestState.FINISHED, reason, now)
         # in-engine lifecycle latencies: one histogram implementation
         # (telemetry.Histogram) observes the same values an external
-        # consumer would derive from (arrival, t_first, token_times)
+        # consumer would derive from (arrival, t_first, token_times).
+        # FINISHED only — a cancelled/failed request has no honest e2e.
         m = self.metrics
         m.histogram("ttft_s").observe(req.t_first - req.arrival)
         m.histogram("e2e_s").observe(now - req.arrival)
@@ -475,6 +678,23 @@ class Engine:
             e2e_s=now - req.arrival, n_evictions=req.n_evictions,
         )
 
+    def _cancel(self, req: Request, now: float) -> None:
+        self._terminalize(req, RequestState.CANCELLED, "cancelled", now)
+        self.metrics.inc("cancelled")
+        self.tracer.event(
+            "request_cancelled", rid=req.rid, tokens=len(req.out_tokens),
+        )
+
+    def _fail(self, req: Request, reason: str, now: float) -> None:
+        if req in self.scheduler.queue:  # failed while queued (deadline,
+            self.scheduler.queue.remove(req)  # capacity, storm requeue)
+        self._terminalize(req, RequestState.FAILED, reason, now)
+        self.metrics.inc("failed")
+        self.tracer.event(
+            "request_failed", rid=req.rid, reason=reason,
+            tokens=len(req.out_tokens), n_evictions=req.n_evictions,
+        )
+
     def _after_prefill_chunk(self, req: Request, n: int, last_logits,
                              now: float) -> None:
         """Shared chunk epilogue: advance, register cached prompt pages,
@@ -485,8 +705,13 @@ class Engine:
             covered = min(req.prefill_pos, len(req.prompt))
             self.pool.register_prefix(req.slot, req.prompt[:covered])
         if req.prefill_pos == len(req.prefix):
-            req.state = RequestState.DECODE
             last = np.asarray(last_logits)
+            if self.ecfg.screen_logits and not np.all(np.isfinite(last)):
+                # poisoned boundary logits: quarantine before emitting
+                self.metrics.inc("quarantined_lanes")
+                self._fail(req, "nan_logits", now)
+                return
+            req.state = RequestState.DECODE
             req.emit(
                 self._boundary_token(req, last), now,
                 last if self.ecfg.record_logits else None,
@@ -522,13 +747,23 @@ class Engine:
         chunk[0, :n] = prefix[start : start + n]
         positions = (np.arange(C, dtype=np.int32) + start)[None]
         ctx_k, ctx_v = self.pool.gather([req.slot])
-        logits, k_new, v_new = self.adapter(
-            jnp.asarray(chunk),
-            jnp.asarray(positions),
-            ctx_k,
-            ctx_v,
-            jnp.asarray([start], jnp.int32),
-        )
+        if self.faults.rules:
+            self.faults.lane_rids = (req.rid,)
+            # only the boundary chunk's last logit is consumed; earlier
+            # chunks' logits are discarded, so NaN there is unobservable
+            self.faults.poison_rids = (
+                (req.rid,) if start + n == len(prefix) else ())
+        try:
+            logits, k_new, v_new = self.adapter(
+                jnp.asarray(chunk),
+                jnp.asarray(positions),
+                ctx_k,
+                ctx_v,
+                jnp.asarray([start], jnp.int32),
+            )
+        except FaultInjected as e:
+            self._fail_dispatch([req], e, now)
+            return  # prefill_pos unchanged: a surviving req replans as-is
         self.pool.write_span(req.slot, start, n, k_new[:, 0], v_new[:, 0])
         self._after_prefill_chunk(req, n, logits[0, n - 1], now)
 
@@ -557,9 +792,20 @@ class Engine:
         pages, offs = self.pool.span_addresses(slots, starts, ns, C)
         bt = self.pool.block_table(slots)
         bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
-        logits = self.adapter.prefill_paged(
-            tokens, positions, bt, ctx_len, pages, offs, self.pool
-        )
+        if self.faults.rules:
+            self.faults.lane_rids = tuple(r.rid for r, _ in chunks)
+            self.faults.poison_rids = tuple(
+                r.rid for r, n in chunks
+                if r.prefill_pos + n == len(r.prefix))
+        try:
+            logits = self.adapter.prefill_paged(
+                tokens, positions, bt, ctx_len, pages, offs, self.pool
+            )
+        except FaultInjected as e:
+            # lengths never advanced (no note_span_written): surviving
+            # chunks replan next tick and recompute the identical KV
+            self._fail_dispatch([r for r, _ in chunks], e, now)
+            return
         self.pool.note_span_written(slots, starts, ns)
         self.metrics.inc("prefill_batches")
         self.metrics.counter("prefill_batch_size").peak(len(chunks))
@@ -604,36 +850,49 @@ class Engine:
             positions[b, 0] = ctx_len[b]
         pos_list = [int(p) for p in positions[:, 0]]
         sel_np = None
-        if self.paged:
-            bt = self.pool.block_table(slots)
-            bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
-            pages, offs = self.pool.addresses(slots, pos_list)
-            if self.ecfg.device_sample:
-                sel, logits = self.adapter.decode_paged_sample(
-                    tokens, positions, bt, ctx_len, pages, offs,
-                    self._sampling_arrays(decode, B), self.pool,
-                )
-                sel_np = np.asarray(sel[:, 0])
+        if self.faults.rules:
+            self.faults.lane_rids = tuple(r.rid for r in decode)
+            self.faults.poison_rids = self.faults.lane_rids
+        try:
+            if self.paged:
+                bt = self.pool.block_table(slots)
+                bt = bt[:, : self._active_pages(int(ctx_len.max(initial=1)))]
+                pages, offs = self.pool.addresses(slots, pos_list)
+                if self.ecfg.device_sample:
+                    sel, logits = self.adapter.decode_paged_sample(
+                        tokens, positions, bt, ctx_len, pages, offs,
+                        self._sampling_arrays(decode, B), self.pool,
+                    )
+                    sel_np = np.asarray(sel[:, 0])
+                else:
+                    logits = self.adapter.decode_paged(
+                        tokens, positions, bt, ctx_len, pages, offs, self.pool
+                    )
+                self.pool.note_written(slots, pos_list)
             else:
-                logits = self.adapter.decode_paged(
-                    tokens, positions, bt, ctx_len, pages, offs, self.pool
+                ctx_k, ctx_v = self.pool.gather(slots)
+                logits, k_new, v_new = self.adapter(
+                    jnp.asarray(tokens),
+                    jnp.asarray(positions),
+                    ctx_k,
+                    ctx_v,
+                    jnp.asarray(ctx_len),
                 )
-            self.pool.note_written(slots, pos_list)
-        else:
-            ctx_k, ctx_v = self.pool.gather(slots)
-            logits, k_new, v_new = self.adapter(
-                jnp.asarray(tokens),
-                jnp.asarray(positions),
-                ctx_k,
-                ctx_v,
-                jnp.asarray(ctx_len),
-            )
-            self.pool.write(slots, pos_list, k_new[:, :, 0], v_new[:, :, 0])
+                self.pool.write(slots, pos_list, k_new[:, :, 0], v_new[:, :, 0])
+        except FaultInjected as e:
+            # nothing dispatched, lengths untouched: fail the target only;
+            # surviving lanes redo the identical step next tick
+            self._fail_dispatch(decode, e, now)
+            return
+        if self.ecfg.screen_logits:
+            self._screen_lanes(decode, logits, now)
         with self.tracer.span("emit", lanes=len(decode)):
             logits_np = None
             if sel_np is None or self.ecfg.record_logits:
                 logits_np = np.asarray(logits[:, 0])
             for b, r in enumerate(decode):
+                if r.state.terminal:
+                    continue  # quarantined by the screen this tick
                 tok = (
                     int(sel_np[b]) if sel_np is not None
                     else self._select_token(r, logits_np[b])
@@ -702,11 +961,25 @@ class Engine:
             else (np.zeros(B, np.float32), np.ones(B, np.float32),
                   np.zeros(B, np.int32), np.zeros(B, np.int32))
         )
-        sel, n_acc, logits = self.adapter.verify_paged(
-            tokens, positions, bt, ctx_len, pages, offs, drafts, n_drafts,
-            sampling, self.pool,
-        )
+        if self.faults.rules:
+            self.faults.lane_rids = tuple(r.rid for r in decode)
+            self.faults.poison_rids = self.faults.lane_rids
+        try:
+            sel, n_acc, logits = self.adapter.verify_paged(
+                tokens, positions, bt, ctx_len, pages, offs, drafts, n_drafts,
+                sampling, self.pool,
+            )
+        except FaultInjected as e:
+            self._fail_dispatch(decode, e, now)
+            # unmap the opportunistic draft page claims: lengths never
+            # advanced, so surviving lanes re-draft from ctx_len next tick
+            for b, r in enumerate(decode):
+                if not r.state.terminal:
+                    self.pool.truncate(r.slot, starts[b])
+            return
         self.pool.note_span_written(slots, starts, widths)
+        if self.ecfg.screen_logits:
+            self._screen_lanes(decode, logits, now)
         self.metrics.inc("spec_ticks")
         self.metrics.inc("spec_lanes", len(decode))
         with self.tracer.span("emit", lanes=len(decode)):
@@ -716,6 +989,8 @@ class Engine:
             sel_np, n_acc_np = np.asarray(sel), np.asarray(n_acc)
             extra = 0
             for b, r in enumerate(decode):
+                if r.state.terminal:
+                    continue  # quarantined by the screen; slot already freed
                 length = int(ctx_len[b])
                 emitted = 0
                 if self.ecfg.device_sample:

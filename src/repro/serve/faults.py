@@ -1,0 +1,296 @@
+"""Deterministic fault injection for the serving stack.
+
+A :class:`FaultPlan` is a small list of trigger→fault rules that the
+engine, pool, adapter, and artifact loader consult at well-defined
+points.  The default plan is empty and every hook degrades to an
+iteration over an empty list, so the hot path pays nothing when no
+faults are armed.
+
+Fault kinds
+-----------
+
+``alloc_fail``
+    The engine's per-tick page claim for a decode lane fails.  The
+    targeted request FAILS with ``finish_reason="alloc_fail"``; nothing
+    else is touched.
+``pool_exhausted``
+    One :meth:`PagedKVPool.extend`/:meth:`admit` call reports no pages.
+    Transient: the engine recovers through its normal evict/requeue or
+    defer paths, so no request fails — this exercises the recovery
+    machinery itself.
+``nan_logits``
+    The adapter poisons the targeted request's lane of the returned
+    logits with NaN *after* the fused dispatch — exactly what a corrupt
+    artifact or a numerically unstable kernel would produce.  With
+    ``EngineConfig.screen_logits`` the lane is quarantined (FAILED,
+    ``finish_reason="nan_logits"``) while co-batched lanes keep their
+    exact token streams.
+``dispatch_error``
+    The adapter raises :class:`FaultInjected` at the entry of a fused
+    dispatch, before any pool buffer is touched.  The engine fails only
+    the targeted request; surviving lanes retry next tick and stay
+    token-identical to a fault-free run.
+``corrupt_shard``
+    Artifact loading sees a checksum mismatch on the given shard and
+    raises :class:`~repro.checkpoint.store.ArtifactCorruption`.
+``cancel``
+    The engine calls :meth:`Engine.cancel` on the given request id at
+    the given tick boundary — deterministic mid-flight cancellation
+    from CLI fault plans and benchmarks.
+
+Rule triggers: ``tick`` (engine step index, from the steps counter),
+``rid`` (request id), ``shard`` (artifact shard index), ``times`` (how
+often the rule fires before disarming; default once).  A rule with no
+``tick`` fires at the first opportunity; a rule with no ``rid`` binds to
+the first live lane of the dispatch it fires on.
+
+The plan string grammar (``--fault-plan``)::
+
+    kind[@key=val[,key=val...]][;rule...]
+
+e.g. ``"alloc_fail@rid=0;nan_logits@rid=2;cancel@rid=4,tick=6"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.checkpoint.store import ArtifactCorruption
+
+__all__ = [
+    "FAULT_KINDS",
+    "AdmissionRejected",
+    "ArtifactCorruption",
+    "FaultInjected",
+    "FaultPlan",
+    "FaultRule",
+    "NO_FAULTS",
+    "parse_fault_plan",
+]
+
+FAULT_KINDS = (
+    "alloc_fail",
+    "pool_exhausted",
+    "nan_logits",
+    "dispatch_error",
+    "corrupt_shard",
+    "cancel",
+)
+
+
+class AdmissionRejected(ValueError):
+    """Structured admission backpressure from :meth:`Engine.submit`.
+
+    ``retryable=True`` means the rejection is transient (bounded queue
+    full): back off and resubmit.  ``retryable=False`` means this
+    engine can never serve the request (it exceeds per-sequence or
+    total pool capacity) and resubmitting is pointless.
+
+    Subclasses :class:`ValueError` so callers of the old bare-ValueError
+    contract keep working.
+    """
+
+    def __init__(self, reason: str, *, retryable: bool,
+                 needed_pages: Optional[int] = None,
+                 available_pages: Optional[int] = None,
+                 pending: Optional[int] = None,
+                 limit: Optional[int] = None):
+        self.reason = reason
+        self.retryable = retryable
+        self.needed_pages = needed_pages
+        self.available_pages = available_pages
+        self.pending = pending
+        self.limit = limit
+        parts = [f"admission rejected ({reason})"]
+        if needed_pages is not None:
+            parts.append(f"needs {needed_pages} pages, "
+                         f"{available_pages} available")
+        if limit is not None:
+            parts.append(f"{pending} pending >= max_queue {limit}")
+        parts.append("retryable" if retryable else "not retryable")
+        super().__init__("; ".join(parts))
+
+
+class FaultInjected(RuntimeError):
+    """Raised by an armed ``dispatch_error`` rule at an adapter entry."""
+
+    def __init__(self, rule: "FaultRule", rid: Optional[int] = None):
+        self.rule = rule
+        self.rid = rid
+        super().__init__(f"injected dispatch fault (rid={rid}, rule={rule})")
+
+
+@dataclasses.dataclass
+class FaultRule:
+    kind: str
+    tick: Optional[int] = None
+    rid: Optional[int] = None
+    shard: Optional[int] = None
+    times: int = 1
+    fired: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of "
+                f"{', '.join(FAULT_KINDS)}")
+        if self.times < 1:
+            raise ValueError(f"times must be >= 1, got {self.times}")
+        if self.kind == "cancel" and self.rid is None:
+            raise ValueError("cancel rules must name a rid")
+
+    @property
+    def armed(self) -> bool:
+        return self.fired < self.times
+
+
+class FaultPlan:
+    """An ordered set of :class:`FaultRule` plus the dispatch context the
+    engine maintains (current ``tick``, ``lane_rids`` of the in-flight
+    dispatch).  ``log`` records every firing for telemetry/tests."""
+
+    def __init__(self, rules=()):
+        self.rules = [r if isinstance(r, FaultRule) else FaultRule(**r)
+                      for r in rules]
+        self.tick = 0
+        self.lane_rids: tuple = ()
+        # lanes whose logits this dispatch actually CONSUMES (decode,
+        # verify, and prefill chunks reaching the prompt boundary) —
+        # nan_logits only fires there, so the poison is always observable
+        # by the screen instead of vanishing with a discarded chunk
+        self.poison_rids: tuple = ()
+        self.log: list = []
+
+    def __repr__(self):
+        return f"FaultPlan({self.rules!r}, tick={self.tick})"
+
+    @property
+    def active(self) -> bool:
+        return any(r.armed for r in self.rules)
+
+    def _record(self, rule: FaultRule, **ctx) -> FaultRule:
+        rule.fired += 1
+        self.log.append({"tick": self.tick, "kind": rule.kind, **ctx})
+        return rule
+
+    def _tick_match(self, rule: FaultRule) -> bool:
+        return rule.tick is None or rule.tick == self.tick
+
+    def fire(self, kind: str, rid: Optional[int] = None,
+             shard: Optional[int] = None) -> Optional[FaultRule]:
+        """Consume and return the first armed rule of ``kind`` matching
+        the given context, or None.  A rule pinned to a rid only fires
+        when that rid is offered."""
+        for rule in self.rules:
+            if rule.kind != kind or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            if rule.rid is not None and rule.rid != rid:
+                continue
+            if rule.shard is not None and rule.shard != shard:
+                continue
+            return self._record(rule, rid=rid, shard=shard)
+        return None
+
+    # ------------------------------------------------------------------
+    # adapter-side hooks (lane_rids is set by the engine per dispatch)
+
+    def check_dispatch(self) -> None:
+        """Raise :class:`FaultInjected` if a ``dispatch_error`` rule is
+        armed for this dispatch.  Called at the entry of every fused
+        forward, before any donated pool buffer is consumed."""
+        for rule in self.rules:
+            if rule.kind != "dispatch_error" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            rid = rule.rid
+            if rid is not None and rid not in self.lane_rids:
+                continue
+            if rid is None:
+                rid = next((r for r in self.lane_rids if r is not None),
+                           None)
+            self._record(rule, rid=rid)
+            raise FaultInjected(rule, rid=rid)
+
+    def nan_lanes(self) -> list:
+        """Lane indices of the current dispatch to poison with NaN
+        (consumes matching ``nan_logits`` rules)."""
+        lanes = []
+        for rule in self.rules:
+            if rule.kind != "nan_logits" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            if rule.rid is not None:
+                if rule.rid not in self.poison_rids:
+                    continue
+                lane = self.lane_rids.index(rule.rid)
+            else:
+                lane = next((i for i, r in enumerate(self.lane_rids)
+                             if r is not None and r in self.poison_rids),
+                            None)
+                if lane is None:
+                    continue
+            self._record(rule, rid=self.lane_rids[lane], lane=lane)
+            lanes.append(lane)
+        return lanes
+
+    # ------------------------------------------------------------------
+    # engine / loader hooks
+
+    def cancel_rids(self) -> list:
+        """Request ids whose ``cancel`` rules fire at the current tick."""
+        rids = []
+        for rule in self.rules:
+            if rule.kind != "cancel" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            self._record(rule, rid=rule.rid)
+            rids.append(rule.rid)
+        return rids
+
+    def corrupt_shards(self) -> set:
+        """Shard indices whose manifest digests the loader should treat
+        as mismatched (consumes ``corrupt_shard`` rules)."""
+        shards = set()
+        for rule in self.rules:
+            if rule.kind != "corrupt_shard" or not rule.armed:
+                continue
+            self._record(rule, shard=rule.shard)
+            shards.add(0 if rule.shard is None else rule.shard)
+        return shards
+
+
+#: Shared inert default: hooks that consult it iterate an empty rule
+#: list.  Never mutate it — engines build their own plan.
+NO_FAULTS = FaultPlan()
+
+
+def parse_fault_plan(spec: str) -> FaultPlan:
+    """Parse the ``--fault-plan`` grammar (see module docstring)."""
+    rules = []
+    for part in (p.strip() for p in spec.split(";")):
+        if not part:
+            continue
+        kind, _, argstr = part.partition("@")
+        kw = {}
+        if argstr:
+            for item in argstr.split(","):
+                key, eq, val = item.partition("=")
+                key = key.strip()
+                if not eq or key not in ("tick", "rid", "shard", "times"):
+                    raise ValueError(
+                        f"bad fault rule argument {item!r} in {part!r}; "
+                        "expected tick=/rid=/shard=/times=")
+                try:
+                    kw[key] = int(val)
+                except ValueError:
+                    raise ValueError(
+                        f"fault rule argument {item!r} is not an integer")
+        rules.append(FaultRule(kind=kind.strip(), **kw))
+    if not rules:
+        raise ValueError(f"empty fault plan {spec!r}")
+    return FaultPlan(rules)

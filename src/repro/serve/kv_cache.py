@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.serve.faults import NO_FAULTS
 
 __all__ = ["PagedKVPool", "pages_needed", "quantize_kv_int8"]
 
@@ -190,6 +191,9 @@ class PagedKVPool:
         self._next_node = 1
         self.cow_copies = 0  # pages copied before a write (COW)
         self.prefix_hit_pages = 0  # pages mapped from the trie at admit
+        # fault-injection hooks (serve/faults.py); the engine points this
+        # at its plan — the inert default iterates an empty rule list
+        self.faults = NO_FAULTS
 
     # ---- accounting -----------------------------------------------------
 
@@ -243,6 +247,8 @@ class PagedKVPool:
         need_total = max(1, pages_needed(n_tokens, self.page_size))
         if not self._free_slots or need_total > self.max_pages_per_seq:
             return None
+        if self.faults.rules and self.faults.fire("pool_exhausted"):
+            return None  # injected transient exhaustion (admission defers)
         shared: list[int] = []
         if self.prefix_cache and tokens is not None:
             shared = [
@@ -281,6 +287,8 @@ class PagedKVPool:
         need = pages_needed(new_len, self.page_size) - len(st.pages)
         if need <= 0:
             return True
+        if self.faults.rules and self.faults.fire("pool_exhausted"):
+            return False  # injected transient exhaustion (evict/requeue path)
         if len(st.pages) + need > self.max_pages_per_seq:
             return False
         if not self._available(need):
@@ -330,6 +338,17 @@ class PagedKVPool:
     def _page_key(self, parent: int, tokens: np.ndarray, i: int) -> tuple:
         ps = self.page_size
         return (parent, tokens[i * ps : (i + 1) * ps].tobytes())
+
+    def cached_prefix_pages(self, tokens) -> int:
+        """How many full leading pages of ``tokens`` the trie holds right
+        now — the pages an admission would map shared instead of claiming.
+        Admission-capacity estimates use this so a cached prompt is not
+        rejected for pages it will never claim.  (Walking the trie
+        refreshes the chain's LRU position, which is what we want: a
+        prompt being sized up for admission is about to be served.)"""
+        if not self.prefix_cache:
+            return 0
+        return len(self._prefix_lookup(np.asarray(tokens, np.int32)))
 
     def _prefix_lookup(self, tokens: np.ndarray) -> list[int]:
         """Longest chain of cached full pages matching ``tokens``; returns

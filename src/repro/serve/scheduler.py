@@ -4,7 +4,14 @@ Lifecycle::
 
     QUEUED -> PREFILL -> DECODE -> FINISHED
        ^________|__________|           (eviction under page pressure
-        requeues with the generated prefix intact)
+        \\_______|__________|______     requeues with the generated
+                                   \\   prefix intact)
+                       CANCELLED / FAILED
+
+Terminal states carry a ``finish_reason`` on the request: ``"length"``
+or ``"stop"`` for FINISHED, ``"cancelled"`` for CANCELLED, and a fault
+domain (``"deadline"``, ``"alloc_fail"``, ``"nan_logits"``,
+``"dispatch_error"``, ``"eviction_storm"``, ``"capacity"``) for FAILED.
 
 Each engine step has a token budget.  Running decode sequences cost one
 token each and are served first (decode-prioritized, the latency-friendly
@@ -30,9 +37,11 @@ from typing import Optional
 
 import numpy as np
 
+from repro.serve.faults import AdmissionRejected
 from repro.serve.telemetry import NULL_TRACER
 
 __all__ = [
+    "AdmissionRejected",
     "Request",
     "RequestState",
     "SamplingParams",
@@ -75,6 +84,13 @@ class RequestState(enum.Enum):
     PREFILL = "prefill"
     DECODE = "decode"
     FINISHED = "finished"
+    CANCELLED = "cancelled"
+    FAILED = "failed"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (RequestState.FINISHED, RequestState.CANCELLED,
+                        RequestState.FAILED)
 
 
 @dataclasses.dataclass(eq=False)  # identity semantics: ndarray fields +
@@ -86,7 +102,14 @@ class Request:                    # list.remove/in on running queues
     stop_tokens: tuple = ()  # emitting any of these finishes the request
     rid: int = dataclasses.field(default_factory=lambda: next(_ids))
 
+    # wall-clock deadline in seconds from ``arrival``; enforced by the
+    # engine at tick boundaries (None = no deadline)
+    deadline_s: Optional[float] = None
+
     state: RequestState = RequestState.QUEUED
+    # why the request reached its terminal state ("length"/"stop"/
+    # "cancelled"/fault domain); None while live
+    finish_reason: Optional[str] = None
     slot: Optional[int] = None
     prefill_pos: int = 0  # tokens of ``prefix`` already written to pages
     out_tokens: list = dataclasses.field(default_factory=list)
@@ -153,11 +176,15 @@ class StepPlan:
 class TokenBudgetFCFS:
     """FCFS queue + per-step token budgeting against a PagedKVPool."""
 
-    def __init__(self, *, token_budget: int, prefill_chunk: int):
+    def __init__(self, *, token_budget: int, prefill_chunk: int,
+                 max_queue: Optional[int] = None):
         if token_budget < 1 or prefill_chunk < 1:
             raise ValueError("token_budget and prefill_chunk must be >= 1")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
+        self.max_queue = max_queue
         self.waiting: list[Request] = []  # not yet arrived (virtual clock)
         self.queue: deque[Request] = deque()  # arrived, FCFS
         # speculative accept debt: extra tokens emitted beyond the one
@@ -177,6 +204,10 @@ class TokenBudgetFCFS:
         self._accept_debt += n_tokens
 
     def submit(self, req: Request) -> None:
+        if self.max_queue is not None and self.pending >= self.max_queue:
+            raise AdmissionRejected(
+                "queue_full", retryable=True,
+                pending=self.pending, limit=self.max_queue)
         self.waiting.append(req)
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 

@@ -1,0 +1,89 @@
+"""Hypothesis pool-leak audit (ISSUE 7): random interleavings of pool
+ops must leave page counts and prefix-trie refcounts exactly consistent.
+
+Deterministic chaos tests live in test_chaos.py; this module holds only
+the property sweep and skips wholesale without hypothesis (repo idiom —
+scripts/ci.sh best-effort installs it)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.serve import PagedKVPool
+
+
+def _audit(pool):
+    """Recompute every page's refcount from first principles (slot block
+    tables + trie nodes) and require exact agreement with the
+    incremental accounting, including the free list."""
+    refs = np.zeros(pool.n_pages, np.int64)
+    for slot_state in pool._slots.values():
+        for pg in slot_state.pages:
+            refs[pg] += 1
+    for nid, node in pool._nodes.items():
+        if nid != 0:
+            refs[node.page] += 1
+    np.testing.assert_array_equal(refs[1:], pool._page_ref[1:])
+    free = set(pool._free_pages)
+    assert len(free) == len(pool._free_pages)  # no double-free
+    for p in range(1, pool.n_pages):
+        assert (p in free) == (refs[p] == 0)
+    assert pool.pages_in_use == pool.n_pages - 1 - len(free)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.data())
+def test_pool_refcount_leak_audit(data):
+    """Random interleavings of admit / extend / truncate / COW /
+    register_prefix / release — the pool-level faces of submit, evict,
+    speculative rollback, cache fork, cancel, and finish — keep the
+    refcount invariants at every step, and a final drain returns every
+    non-cached page to the free list."""
+    cfg = get_smoke_config("qwen3-14b")
+    pool = PagedKVPool(cfg, n_pages=10, page_size=4, n_slots=4,
+                       max_pages_per_seq=6, prefix_cache=True)
+    # tiny alphabet so prompts collide -> real trie sharing and COW
+    tok = st.lists(st.integers(0, 2), min_size=1, max_size=20)
+    tokens_of: dict[int, np.ndarray] = {}
+    for _ in range(data.draw(st.integers(5, 30), label="n_ops")):
+        op = data.draw(st.sampled_from(
+            ["admit", "extend", "truncate", "cow", "register", "release"]
+        ), label="op")
+        slots = sorted(pool._slots)
+        if op == "admit":
+            tokens = np.asarray(data.draw(tok, label="tokens"), np.int32)
+            slot = pool.admit(len(tokens), tokens=tokens)
+            if slot is not None:
+                tokens_of[slot] = tokens
+        elif not slots:
+            continue
+        else:
+            slot = data.draw(st.sampled_from(slots), label="slot")
+            slot_state = pool._slots[slot]
+            if op == "extend":
+                pool.extend(slot, data.draw(
+                    st.integers(1, pool.seq_capacity_tokens()),
+                    label="new_len"))
+            elif op == "truncate":
+                pool.truncate(slot, data.draw(
+                    st.integers(0, slot_state.length), label="trunc_len"))
+            elif op == "cow" and slot_state.pages and pool._free_pages:
+                pool._ensure_private(slot, data.draw(
+                    st.integers(0, len(slot_state.pages) - 1),
+                    label="page"))
+            elif op == "register":
+                pool.register_prefix(
+                    slot, tokens_of.get(slot, np.zeros(0, np.int32)))
+            elif op == "release":
+                pool.release(slot)
+                tokens_of.pop(slot, None)
+        _audit(pool)
+    for slot in sorted(pool._slots):
+        pool.release(slot)
+    _audit(pool)
+    assert pool.pages_in_use == pool.cached_pages
