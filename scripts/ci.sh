@@ -88,18 +88,44 @@ python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --speculative 4 \
   --host-sample --check
 
-# telemetry: a traced serve (sync barriers + periodic metrics) must stay
-# token-identical AND emit a schema-valid Chrome/Perfetto trace
+# telemetry: a traced serve (sync barriers + periodic metrics + quality
+# canaries + shadow sampling) must stay token-identical AND emit a
+# schema-valid Chrome/Perfetto trace carrying the canary/drift events
 python -m repro.launch.serve --arch qwen3-14b --smoke \
   --requests 4 --prompt-len 16 --gen 8 --paged --paged-prefill \
   --trace-out "$tmp/serve_trace.json" --trace-sync --metrics-every 0.5 \
-  --check
+  --canary-every 0.5 --shadow-rate 1.0 --check
 python - "$tmp/serve_trace.json" <<'PY'
 import json, sys
 from repro.serve import validate_chrome_trace
-n = validate_chrome_trace(json.load(open(sys.argv[1])))
-print(f"[ci] serve trace schema OK ({n} events)")
+obj = json.load(open(sys.argv[1]))
+n = validate_chrome_trace(obj)
+names = {e.get("name") for e in obj["traceEvents"]}
+missing = {"canary_probe", "shadow_drift"} - names
+assert not missing, f"quality events missing from trace: {missing}"
+print(f"[ci] serve trace schema OK ({n} events, quality events present)")
 PY
+
+# quality observability smoke (serve/quality.py, DESIGN.md §13): the
+# artifact written above carries a per-layer quality manifest — render
+# it, pin it as a baseline, gate a serve on that baseline, and run
+# online canaries + full-rate shadow drift sampling.  The canary NLL
+# gauge must appear in the summary and the zero-leak gate still holds.
+python -m repro.launch.quality_report "$tmp/artifact" \
+  --write-baseline "$tmp/quality_base.json"
+python -m repro.launch.quality_report "$tmp/artifact" \
+  --baseline "$tmp/quality_base.json" --threshold 1.1
+quality_out="$(python -m repro.launch.serve --arch qwen3-14b --smoke \
+  --requests 4 --prompt-len 16 --gen 8 --load-quantized "$tmp/artifact" \
+  --quality-baseline "$tmp/quality_base.json" --quality-strict \
+  --canary-every 0.5 --shadow-rate 1.0)"
+echo "$quality_out"
+echo "$quality_out" | grep -q "quality baseline OK" \
+  || { echo "[ci] quality smoke: baseline check missing"; exit 1; }
+echo "$quality_out" | grep -q "canary_nll=" \
+  || { echo "[ci] quality smoke: canary NLL gauge missing"; exit 1; }
+echo "$quality_out" | grep -q "flips=0" \
+  || { echo "[ci] quality smoke: shadow drift reported flips"; exit 1; }
 
 # chaos smoke (serve/faults.py): one allocator failure, one NaN lane,
 # one mid-decode cancel injected into a checked paged run — targeted

@@ -12,6 +12,7 @@ mirroring the paper's "multiply by W = U^T Ŵ V" factorization (Sec. 4.1).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -177,7 +178,20 @@ def quantize_layer(
     key: Optional[jax.Array] = None,
     collect_stats: bool = True,
 ) -> tuple[QuantizedLinear, dict]:
-    """Algorithm 3 on one layer.  W: (m, n), H: (n, n) SPD proxy Hessian."""
+    """Algorithm 3 on one layer.  W: (m, n), H: (n, n) SPD proxy Hessian.
+
+    With ``collect_stats`` the returned dict is a per-layer *quality
+    report* (DESIGN.md §13): the incoherence µ(W)/µ(H) before and after
+    preprocessing, the raw Hessian's spectrum extremes and condition
+    number, the absolute and H-relative proxy loss, weight-error norms,
+    and the wall-clock spent in this call.  These are the numbers QuIP's
+    guarantees are stated in — recording them is what makes a bad
+    Hessian or a silently-skipped transform visible at quantize time
+    instead of at perplexity time.  The µ(H) measurements eigendecompose
+    H twice; at smoke scale that is free, at cluster scale pass
+    ``collect_stats=False`` on the hot path and audit a layer sample.
+    """
+    t0 = time.perf_counter()
     m, n = W.shape
     W = W.astype(jnp.float32)
     H = H.astype(jnp.float32)
@@ -231,14 +245,42 @@ def quantize_layer(
     stats: dict = {}
     if collect_stats:
         What = layer.dequantize()
+        err = What - W
+        # post-incoherence W on its native scale: invert only the grid
+        # map (to_grid is affine), leaving the U·W·Vᵀ conjugation in
+        # place — µ of exactly what the rounding method saw
+        W_post = inc.from_grid(Wg, state.s, state.maxq)
+        evals_pre, Q_pre = jnp.linalg.eigh(H)
+        _, Q_post = jnp.linalg.eigh(Ht)
+        lmin = float(jnp.min(evals_pre))
+        lmax = float(jnp.max(evals_pre))
+        ploss = float(proxy_loss(What, W, H))
+        # H-relative proxy loss: normalize by tr(W H Wᵀ), the proxy value
+        # of quantizing everything to zero — scale-free across layers
+        whw = float(jnp.einsum("ij,jk,ik->", W, H, W))
         stats = {
-            "proxy_loss": float(proxy_loss(What, W, H)),
+            "proxy_loss": ploss,
+            "proxy_rel": ploss / whw if whw > 0 else 0.0,
             "frob_rel_err": float(
-                jnp.linalg.norm(What - W) / jnp.linalg.norm(W)
+                jnp.linalg.norm(err) / jnp.linalg.norm(W)
             ),
+            "max_abs_err": float(jnp.max(jnp.abs(err))),
             "s": float(state.s),
             "mu_w_pre": float(inc.mu_weight(W)),
+            "mu_w_post": float(inc.mu_weight(W_post)),
+            "mu_h_pre": float(
+                jnp.max(jnp.abs(Q_pre)) * jnp.sqrt(float(n))
+            ),
+            "mu_h_post": float(
+                jnp.max(jnp.abs(Q_post)) * jnp.sqrt(float(n))
+            ),
+            "h_lambda_min": lmin,
+            "h_lambda_max": lmax,
+            "h_cond": lmax / max(lmin, 1e-30),
+            "m": m,
+            "n": n,
             "bits": cfg.bits,
             "method": cfg.label(),
+            "wall_s": time.perf_counter() - t0,
         }
     return layer, stats

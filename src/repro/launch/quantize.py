@@ -322,13 +322,27 @@ def main(argv=None):
 
     if args.out_dir:
         from repro.serve.artifacts import save_quantized
+        from repro.serve.quality import build_quality_section
 
+        # the quality section ships INSIDE the manifest, next to the
+        # shard digests: the audit describes exactly the weights it
+        # travels with (render with launch/quality_report.py)
+        quality = build_quality_section(qm.stats)
         path = save_quantized(
             args.out_dir, qm, qcfg,
             extra_meta={"stats": qm.stats, "smoke": args.smoke,
-                        "seed": args.seed},
+                        "seed": args.seed, "quality": quality},
         )
+        agg = quality["aggregate"]
         print(f"[quantize] artifact saved to {path}")
+        if agg:
+            print(
+                f"[quantize] quality: layers={agg['n_layers']} "
+                f"total_proxy={agg['total_proxy_loss']:.4g} "
+                f"max_proxy_rel={agg['max_proxy_rel']:.4g} "
+                f"max_mu_w_post={agg['max_mu_w_post']:.3g} "
+                f"max_h_cond={agg['max_h_cond']:.3g}"
+            )
 
     eval_tokens = make_calibration(
         cfg.vocab, n_segments=8, seg_len=args.calib_len, seed=args.seed + 99

@@ -65,6 +65,19 @@ KV pool at span edges so durations measure device time rather than async
 dispatch enqueue; ``--metrics-every SECS`` prints periodic one-line
 metric snapshots to stderr (serve/telemetry.py — all off by default,
 with a one-no-op-call hot-path cost when off).
+
+Serving-quality canaries (DESIGN.md §13; serve/quality.py):
+``--canary-every SECS`` runs a teacher-forced NLL probe over a pinned
+canary prompt set through the dense reference trunk at that period (plus
+once at run start) — out-of-band, the KV pool is untouched, so live
+traffic stays token-identical; ``--shadow-rate F`` re-scores a
+deterministic crc32-selected fraction of finished requests against the
+same dense oracle and histograms max-abs-logit-diff / token-flip-rate.
+``--quality-baseline PATH`` (with ``--load-quantized``) compares the
+artifact's quality manifest against a stored baseline
+(``launch/quality_report.py --write-baseline``) and warns on layers
+whose proxy loss regressed beyond ``--quality-threshold``;
+``--quality-strict`` refuses to serve instead.
 """
 from __future__ import annotations
 
@@ -146,6 +159,11 @@ def build_engine(adapter, *, max_seq_len, args, paged=None,
         screen_logits=(
             getattr(args, "screen_logits", False) if robust else False
         ),
+        # quality canaries follow the robustness gating: a --check oracle
+        # must stay a bare reference run (no probes, no shadow re-scores)
+        canary_every=getattr(args, "canary_every", None) if robust else None,
+        shadow_rate=getattr(args, "shadow_rate", 0.0) if robust else 0.0,
+        shadow_seed=getattr(args, "seed", 0),
     )
     return Engine(adapter, ecfg, faults=faults if robust else None)
 
@@ -270,8 +288,35 @@ def main(argv=None):
     ap.add_argument("--metrics-every", type=float, default=None,
                     metavar="SECS",
                     help="print a one-line metrics snapshot (throughput "
-                         "counters, pool occupancy, TTFT/ITL p50) to "
-                         "stderr every SECS seconds of engine time")
+                         "counters, pool occupancy, TTFT/ITL/e2e p50+p99) "
+                         "to stderr every SECS seconds of engine time")
+    # serving-quality canaries (DESIGN.md §13; serve/quality.py)
+    ap.add_argument("--canary-every", type=float, default=None,
+                    metavar="SECS",
+                    help="teacher-forced NLL probe over a pinned canary "
+                         "prompt set every SECS seconds (plus once at run "
+                         "start) — out-of-band over the dense reference "
+                         "trunk, live traffic stays token-identical")
+    ap.add_argument("--canary-prompts", type=int, default=2,
+                    help="canary set size (pinned sequences per probe)")
+    ap.add_argument("--canary-len", type=int, default=16,
+                    help="canary sequence length (tokens)")
+    ap.add_argument("--shadow-rate", type=float, default=0.0, metavar="F",
+                    help="re-score this deterministic fraction of finished "
+                         "requests against the dense oracle trunk "
+                         "(max-abs-logit-diff + token-flip-rate "
+                         "histograms; crc32 selection, not hash())")
+    ap.add_argument("--quality-baseline", default=None, metavar="PATH",
+                    help="with --load-quantized: compare the artifact's "
+                         "quality manifest against this baseline JSON "
+                         "(launch/quality_report.py --write-baseline) and "
+                         "warn on proxy-loss regressions")
+    ap.add_argument("--quality-threshold", type=float, default=1.2,
+                    help="regression ratio for --quality-baseline "
+                         "(default 1.2x)")
+    ap.add_argument("--quality-strict", action="store_true",
+                    help="refuse to serve (exit nonzero) on any "
+                         "--quality-baseline regression instead of warning")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -315,6 +360,24 @@ def main(argv=None):
             "--trace-sync sharpens span timing for a recorded trace; "
             "add --trace-out PATH"
         )
+    if not 0.0 <= args.shadow_rate <= 1.0:
+        raise SystemExit(
+            f"--shadow-rate must be in [0, 1], got {args.shadow_rate}"
+        )
+    if args.canary_every is not None and args.canary_every <= 0:
+        raise SystemExit(
+            f"--canary-every must be > 0 seconds, got {args.canary_every}"
+        )
+    if args.quality_baseline and not args.load_quantized:
+        raise SystemExit(
+            "--quality-baseline audits an artifact's quality manifest; "
+            "add --load-quantized DIR (quantize with --out-dir first)"
+        )
+    if args.quality_strict and not args.quality_baseline:
+        raise SystemExit(
+            "--quality-strict needs a baseline to enforce; add "
+            "--quality-baseline PATH"
+        )
     mesh = None
     if args.mesh:
         try:
@@ -354,6 +417,34 @@ def main(argv=None):
         label = f"quip-{meta['quip_config']['bits']}bit[artifact]"
         print(f"[serve] loaded quantized artifact: {cfg.name} "
               f"{meta['quip_config']['bits']}-bit ({args.load_quantized})")
+        if args.quality_baseline:
+            from repro.serve.quality import check_artifact_quality, \
+                load_baseline
+
+            try:
+                baseline = load_baseline(args.quality_baseline)
+            except (FileNotFoundError, ValueError) as e:
+                raise SystemExit(f"--quality-baseline: {e}")
+            regressions = check_artifact_quality(
+                meta.get("quality"), baseline,
+                threshold=args.quality_threshold,
+            )
+            for r in regressions:
+                print(f"[serve] QUALITY REGRESSION {r['layer']}: "
+                      f"proxy {r['baseline']:.4g} -> "
+                      f"{'missing' if r['current'] is None else format(r['current'], '.4g')}"
+                      f" (> {args.quality_threshold:.2f}x baseline)")
+            if regressions and args.quality_strict:
+                raise SystemExit(
+                    f"refusing to serve: {len(regressions)} layer(s) "
+                    f"regressed beyond {args.quality_threshold:.2f}x the "
+                    f"quality baseline (drop --quality-strict to serve "
+                    f"anyway)"
+                )
+            if not regressions:
+                print(f"[serve] quality baseline OK "
+                      f"({len(baseline['proxy_loss'])} layers within "
+                      f"{args.quality_threshold:.2f}x)")
     else:
         cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
         model = build_model(cfg)
@@ -411,6 +502,13 @@ def main(argv=None):
         adapter, max_seq_len=args.prompt_len + args.gen, args=args,
         faults=faults,
     )
+    if args.canary_every is not None:
+        # pinned OFF the traffic seed stream: the canary set must stay
+        # fixed across runs for the NLL gauge to be comparable
+        engine.attach_canary(make_calibration(
+            cfg.vocab, n_segments=args.canary_prompts,
+            seg_len=args.canary_len, seed=args.seed + 1234,
+        ).tokens)
     tracer = None
     if args.trace_out:
         from repro.serve import Tracer
@@ -501,6 +599,16 @@ def main(argv=None):
               f"ttft_p99={s['ttft_s_p99'] * 1e3:.1f}ms "
               f"itl_p50={(s['itl_s_p50'] or 0) * 1e3:.2f}ms "
               f"queue_p50={(s['queue_s_p50'] or 0) * 1e3:.1f}ms")
+    if args.canary_every is not None:
+        print(f"[serve] quality: canary_nll={s['canary_nll']:.6f} "
+              f"canary_runs={s['canary_runs']} "
+              f"act_absmax={s['act_absmax']:.3g} act_sat={s['act_sat']:.2e}")
+    if args.shadow_rate > 0:
+        print(f"[serve] shadow: samples={s['shadow_samples']} "
+              f"tokens={s['shadow_tokens']} flips={s['shadow_token_flips']} "
+              f"max_abs_logit_diff_p99="
+              f"{s.get('shadow_max_abs_logit_diff_p99') or 0:.3g} "
+              f"flip_rate_p99={s.get('shadow_flip_rate_p99') or 0:.3g}")
     if tracer is not None:
         from repro.serve import phase_breakdown
 

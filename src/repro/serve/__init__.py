@@ -28,7 +28,12 @@ Pieces (each usable on its own):
   * :mod:`repro.serve.faults`    — failure domains: typed admission /
     integrity / dispatch exceptions and a seeded deterministic
     fault-injection plan (``parse_fault_plan``) the engine, pool,
-    adapter, and artifact loader all honour behind a no-op default.
+    adapter, and artifact loader all honour behind a no-op default;
+  * :mod:`repro.serve.quality`   — quantization-quality observability:
+    per-layer quality manifests (incoherence µ, Hessian spectrum, proxy
+    loss) folded into artifacts, baseline regression checks at load, and
+    online serving-quality canaries (teacher-forced NLL probe + shadow
+    fp-oracle drift sampling) at serve time.
 """
 from repro.serve.adapter import CachedDecoder
 from repro.serve.artifacts import ArtifactCorruption, load_quantized, save_quantized
@@ -42,6 +47,15 @@ from repro.serve.faults import (
     parse_fault_plan,
 )
 from repro.serve.kv_cache import PagedKVPool
+from repro.serve.quality import (
+    ShadowSampler,
+    build_quality_section,
+    canary_probe,
+    check_artifact_quality,
+    load_baseline,
+    teacher_forced_nll,
+    write_baseline,
+)
 from repro.serve.scheduler import Request, RequestState, TokenBudgetFCFS
 from repro.serve.telemetry import (
     MetricsRegistry,
@@ -72,4 +86,11 @@ __all__ = [
     "MetricsRegistry",
     "phase_breakdown",
     "validate_chrome_trace",
+    "ShadowSampler",
+    "build_quality_section",
+    "canary_probe",
+    "check_artifact_quality",
+    "load_baseline",
+    "teacher_forced_nll",
+    "write_baseline",
 ]

@@ -236,6 +236,10 @@ class CachedDecoder:
             self._forward_verify_q, donate_argnums=(12, 13, 14, 15),
             static_argnums=(16,),
         )
+        # quality probe: dense teacher-forced forward + per-layer
+        # activation reductions (serve/quality.py canaries); compiles
+        # only if a canary actually runs
+        self._fwd_probe = jax.jit(self._forward_probe)
 
     # ---- constructors ---------------------------------------------------
 
@@ -339,6 +343,79 @@ class CachedDecoder:
         o = o.astype(x.dtype).reshape(B, T, cfg.q_dim)
         x = x + blk["attn.wo"](o)
         return self._mlp(blk, x), k, v
+
+    # ---- quality probe ---------------------------------------------------
+
+    def activation_probe(self, tokens):
+        """Teacher-forced causal forward over full sequences with
+        per-layer activation reductions fused into the same dispatch
+        (serve/quality.py canary probe; DESIGN.md §13).
+
+        tokens (B, S) int32.  Returns ``(logits (B, S, V) float32 np,
+        {"absmax": (L+1,), "sat": (L+1,)})`` — entry i is the hidden
+        state entering block i (the residual stream the block's linears
+        consume), entry L the final pre-norm hidden state; ``sat`` is
+        the fraction of elements at or beyond
+        :data:`repro.serve.quality.SAT_THRESHOLD` (an fp16-overflow
+        early warning).  The sequence is padded to the next power of two
+        (causal attention — pad positions cannot influence real ones,
+        and are masked out of the reductions), bounding compiles across
+        canary/shadow lengths.  Runs the dense reference trunk with an
+        empty context window: the KV pool is never touched, so an
+        in-flight engine's traffic stays token-identical.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"tokens must be (B, S), got {tokens.shape}")
+        B, S = tokens.shape
+        Sp = 1
+        while Sp < S:
+            Sp <<= 1
+        padded = np.zeros((B, Sp), np.int32)
+        padded[:, :S] = tokens
+        positions = np.tile(np.arange(Sp, dtype=np.int32), (B, 1))
+        cfg = self.cfg
+        ctx = jnp.zeros(
+            (cfg.n_layers, B, 0, cfg.n_kv_heads, cfg.head_dim), jnp.float32
+        )
+        with self.tracer.span("dispatch:activation_probe",
+                              lanes=B, tokens=S):
+            logits, absmax, sat = self._fwd_probe(
+                jnp.asarray(padded), jnp.asarray(positions), ctx, ctx,
+                jnp.zeros((B,), jnp.int32), jnp.int32(S),
+            )
+        return np.asarray(logits[:, :S], np.float32), {
+            "absmax": np.asarray(absmax, np.float64),
+            "sat": np.asarray(sat, np.float64),
+        }
+
+    def _forward_probe(self, tokens, positions, ctx_k, ctx_v, ctx_len,
+                       n_valid):
+        from repro.serve.quality import SAT_THRESHOLD
+
+        cfg = self.cfg
+        B, T = tokens.shape
+        valid = (jnp.arange(T, dtype=jnp.int32) < n_valid)[None, :, None]
+        n_el = jnp.maximum(n_valid * B, 1)
+        absmax, sat = [], []
+
+        def reduce(x):
+            ax = jnp.abs(x.astype(jnp.float32)) * valid
+            absmax.append(jnp.max(ax))
+            sat.append(
+                jnp.sum(ax >= SAT_THRESHOLD) / (n_el * x.shape[-1])
+            )
+
+        x = L.embed(self.embed, tokens)
+        for i, blk in enumerate(self.blocks):
+            reduce(x)
+            x, _, _ = self._block(
+                blk, x, positions, ctx_k[i], ctx_v[i], ctx_len
+            )
+        reduce(x)
+        x = L.norm_apply(self.final_norm, x, cfg)
+        logits = L.lm_logits(self.embed, x)
+        return logits, jnp.stack(absmax), jnp.stack(sat)
 
     # ---- shared block pieces --------------------------------------------
 

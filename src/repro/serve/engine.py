@@ -81,6 +81,7 @@ from repro.serve.adapter import CachedDecoder, sample_tokens
 from repro.serve.drafter import make_drafter
 from repro.serve.faults import AdmissionRejected, FaultInjected, FaultPlan
 from repro.serve.kv_cache import page_bucket, pages_needed
+from repro.serve.quality import ShadowSampler, canary_probe
 from repro.serve.scheduler import (
     Request,
     RequestState,
@@ -117,6 +118,11 @@ _STAT_COUNTERS = (
     "deadline_missed",  # FAILED specifically for blowing deadline_s
     "quarantined_lanes",  # lanes the NaN/Inf screen pulled mid-batch
     "admission_rejected",  # submits refused with AdmissionRejected
+    # ---- quality canaries (serve/quality.py, DESIGN.md §13) ----
+    "canary_runs",  # out-of-band teacher-forced NLL probes run
+    "shadow_samples",  # finished requests the drift sampler re-scored
+    "shadow_tokens",  # emissions those samples covered
+    "shadow_token_flips",  # emissions whose serving/oracle argmax differ
 )
 
 
@@ -155,6 +161,13 @@ class EngineConfig:
     #   replaying its prefix forever (None = legacy unbounded behavior)
     screen_logits: bool = False  # per-lane NaN/Inf screen on every step's
     #   logits; a poisoned lane is quarantined, co-batched lanes unharmed
+    # ---- quality canaries (DESIGN.md §13; serve/quality.py) ----
+    canary_every: Optional[float] = None  # seconds between teacher-forced
+    #   NLL probes over the pinned canary set (attach_canary); one probe
+    #   also fires at run start so the gauge exists from tick zero
+    shadow_rate: float = 0.0  # fraction of requests re-scored against
+    #   the dense oracle on finish (deterministic crc32 selection)
+    shadow_seed: int = 0  # selection seed (stable across processes)
 
     @property
     def pages_per_seq(self) -> int:
@@ -231,6 +244,23 @@ class Engine:
         self.metrics.gauge("faults_injected", fn=lambda: len(self.faults.log))
         for name in ("ttft_s", "itl_s", "queue_s", "e2e_s"):
             self.metrics.histogram(name)
+        # quality canaries: the shadow sampler re-scores a deterministic
+        # fraction of finished requests against the adapter's dense
+        # trunk; the canary probe needs a pinned prompt set, attached
+        # via attach_canary (out-of-band — never touches the pool)
+        self.shadow = (
+            ShadowSampler(adapter, ecfg.shadow_rate, seed=ecfg.shadow_seed,
+                          metrics=self.metrics, tracer=NULL_TRACER)
+            if ecfg.shadow_rate > 0.0 else None
+        )
+        if self.shadow is not None:
+            for name in ("shadow_max_abs_logit_diff", "shadow_flip_rate"):
+                self.metrics.histogram(name)
+        if ecfg.canary_every is not None and ecfg.canary_every <= 0:
+            raise ValueError(
+                f"canary_every must be > 0 seconds, got {ecfg.canary_every}"
+            )
+        self.canary_tokens: Optional[np.ndarray] = None
         # span tracing is OFF by default: NULL_TRACER's span() is a no-op
         # returning a shared context manager — the whole telemetry tax
         self.tracer = NULL_TRACER
@@ -293,6 +323,11 @@ class Engine:
             deadline_s=(self.ecfg.deadline_s if deadline_s is None
                         else deadline_s),
         )
+        if self.shadow is not None:
+            # decided at submit so the decode paths know to materialize
+            # this request's emission logits (crc32 of (seed, rid) —
+            # deterministic across processes and batch composition)
+            req.shadow = self.shadow.selects(req.rid)
         try:
             self.scheduler.submit(req)
         except AdmissionRejected:
@@ -349,6 +384,45 @@ class Engine:
         self.tracer = tracer
         self.adapter.tracer = tracer
         self.scheduler.tracer = tracer
+        if self.shadow is not None:
+            self.shadow.tracer = tracer
+
+    def attach_canary(self, tokens: np.ndarray) -> None:
+        """Pin the canary prompt set: (B, S) int32 token ids scored
+        teacher-forced by every canary probe.  The set must stay FIXED
+        for the gauge to be comparable across ticks/restarts — hence
+        attached once, not sampled from traffic."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim == 1:
+            tokens = tokens[None]
+        if tokens.ndim != 2 or tokens.shape[1] < 2:
+            raise ValueError(
+                f"canary set must be (B, S>=2) token ids, got {tokens.shape}"
+            )
+        self.canary_tokens = tokens
+
+    def _run_canary(self) -> None:
+        """One out-of-band quality probe: teacher-forced NLL over the
+        pinned canary set plus per-layer activation absmax / saturation,
+        all published as gauges.  Runs the adapter's dense trunk against
+        an EMPTY context — the KV pool is untouched, so live traffic
+        stays token-identical with canaries on."""
+        nll, act = canary_probe(self.adapter, self.canary_tokens)
+        m = self.metrics
+        m.gauge("canary_nll").set(nll)
+        m.inc("canary_runs")
+        absmax, sat = act["absmax"], act["sat"]
+        m.gauge("act_absmax").set(float(absmax.max()))
+        m.gauge("act_sat").set(float(sat.max()))
+        for i in range(len(absmax)):
+            m.gauge(f"act_absmax:{i}").set(float(absmax[i]))
+            m.gauge(f"act_sat:{i}").set(float(sat[i]))
+        self.tracer.event(
+            "canary_probe", nll=nll,
+            act_absmax=float(absmax.max()), act_sat=float(sat.max()),
+            prompts=int(self.canary_tokens.shape[0]),
+            tokens=int(self.canary_tokens.size),
+        )
 
     def _sync_barrier(self) -> None:
         """Block until every enqueued device step has retired.  The pool
@@ -402,6 +476,17 @@ class Engine:
         next_metrics = (
             self.now() + metrics_every if metrics_every else float("inf")
         )
+        # canary cadence mirrors next_metrics, plus one immediate probe so
+        # the gauge exists from tick zero (short smoke runs still canary)
+        canary_on = (
+            self.ecfg.canary_every is not None
+            and self.canary_tokens is not None
+        )
+        if canary_on:
+            self._run_canary()
+        next_canary = (
+            self.now() + self.ecfg.canary_every if canary_on else float("inf")
+        )
         while self.scheduler.pending or self.running:
             if self.step():
                 worked_steps, stalls = worked_steps + 1, 0
@@ -424,13 +509,17 @@ class Engine:
             if self.now() >= next_metrics:
                 self._emit_metrics_snapshot()
                 next_metrics = self.now() + metrics_every
+            if self.now() >= next_canary:
+                self._run_canary()
+                next_canary = self.now() + self.ecfg.canary_every
         assert len(self.finished) - done0 == todo
         return self.finished[done0:]
 
     _METRICS_LINE_KEYS = (
         "steps", "decode_tokens", "prefill_tokens", "evictions",
         "pages_in_use", "occupancy", "finished", "acceptance_rate",
-        "ttft_s_p50", "itl_s_p50",
+        "ttft_s_p50", "ttft_s_p99", "itl_s_p50", "itl_s_p99",
+        "e2e_s_p50", "e2e_s_p99", "canary_nll",
     )
 
     def _emit_metrics_snapshot(self) -> None:
@@ -677,6 +766,10 @@ class Engine:
             "request_finished", rid=req.rid, tokens=len(req.out_tokens),
             e2e_s=now - req.arrival, n_evictions=req.n_evictions,
         )
+        if req.shadow and self.shadow is not None:
+            # FINISHED only: a cancelled/failed stream has no complete
+            # emission record to score against the oracle
+            self.shadow.observe(req)
 
     def _cancel(self, req: Request, now: float) -> None:
         self._terminalize(req, RequestState.CANCELLED, "cancelled", now)
@@ -714,7 +807,7 @@ class Engine:
             req.state = RequestState.DECODE
             req.emit(
                 self._boundary_token(req, last), now,
-                last if self.ecfg.record_logits else None,
+                last if self.ecfg.record_logits or req.shadow else None,
             )
             self._note_emit(req, now)
             if req.done:
@@ -888,7 +981,8 @@ class Engine:
             self._screen_lanes(decode, logits, now)
         with self.tracer.span("emit", lanes=len(decode)):
             logits_np = None
-            if sel_np is None or self.ecfg.record_logits:
+            if (sel_np is None or self.ecfg.record_logits
+                    or any(r.shadow for r in decode)):
                 logits_np = np.asarray(logits[:, 0])
             for b, r in enumerate(decode):
                 if r.state.terminal:
@@ -899,7 +993,8 @@ class Engine:
                 )
                 r.emit(
                     tok, now,
-                    logits_np[b] if self.ecfg.record_logits else None,
+                    logits_np[b] if self.ecfg.record_logits or r.shadow
+                    else None,
                 )
                 self._note_emit(r, now)
                 self.metrics.inc("decode_tokens")
@@ -984,7 +1079,8 @@ class Engine:
         self.metrics.inc("spec_lanes", len(decode))
         with self.tracer.span("emit", lanes=len(decode)):
             logits_np = None
-            if not self.ecfg.device_sample or self.ecfg.record_logits:
+            if (not self.ecfg.device_sample or self.ecfg.record_logits
+                    or any(r.shadow for r in decode)):
                 logits_np = np.asarray(logits)
             sel_np, n_acc_np = np.asarray(sel), np.asarray(n_acc)
             extra = 0
@@ -992,13 +1088,13 @@ class Engine:
                 if r.state.terminal:
                     continue  # quarantined by the screen; slot already freed
                 length = int(ctx_len[b])
+                keep = self.ecfg.record_logits or r.shadow
                 emitted = 0
                 if self.ecfg.device_sample:
                     for i in range(int(n_acc_np[b]) + 1):
                         r.emit(
                             int(sel_np[b, i]), now,
-                            logits_np[b, i] if self.ecfg.record_logits
-                            else None,
+                            logits_np[b, i] if keep else None,
                         )
                         self._note_emit(r, now)
                         emitted += 1
@@ -1010,8 +1106,7 @@ class Engine:
                         tok = self._select_token(r, logits_np[b, i])
                         r.emit(
                             tok, now,
-                            logits_np[b, i] if self.ecfg.record_logits
-                            else None,
+                            logits_np[b, i] if keep else None,
                         )
                         self._note_emit(r, now)
                         emitted += 1

@@ -122,8 +122,14 @@ class Request:                    # list.remove/in on running queues
     t_first: Optional[float] = None
     t_finish: Optional[float] = None
     token_times: list = dataclasses.field(default_factory=list)
-    # optional per-emission last-token logits (tests/--check)
+    # optional per-emission last-token logits (tests/--check); also
+    # recorded for shadow-sampled requests so the drift oracle can
+    # re-score the finished stream (serve/quality.py)
     step_logits: list = dataclasses.field(default_factory=list)
+    # picked for shadow fp-oracle drift sampling (--shadow-rate): the
+    # engine records this request's emission logits and re-scores them
+    # against the dense reference trunk on finish
+    shadow: bool = False
     # lazily-built numpy Generator for non-greedy sampling; survives
     # eviction (the replayed request continues its draw sequence)
     _rng: Optional[np.random.Generator] = dataclasses.field(

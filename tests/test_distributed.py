@@ -441,3 +441,50 @@ def test_tp_engine_traced_token_parity_and_mesh_tags(mesh, tmp_path):
         e["args"]["mesh_model"] == mesh.shape["model"] for e in spans
     )
     assert phase_breakdown(tracer.spans)["coverage"] >= 0.95
+
+
+# ---------------------------------------------------------------------------
+# Quality canaries under TP: the sharded canary scores what the unsharded
+# one would (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def test_tp_canary_nll_matches_single_device(mesh):
+    """The teacher-forced canary probe runs the same dense trunk on
+    single-device and TP adapters; GSPMD sharding is a layout choice,
+    so the NLL must agree to float tolerance (the probe's NLL itself is
+    float64 on host — any divergence is real logit drift)."""
+    from repro.serve.quality import teacher_forced_nll
+
+    plain, dist, model, _ = _adapters(mesh)
+    canary = make_calibration(model.cfg.vocab, n_segments=2, seg_len=12,
+                              seed=99).tokens
+    single = teacher_forced_nll(plain, canary)
+    sharded = teacher_forced_nll(dist, canary)
+    assert abs(single - sharded) < 1e-6
+
+
+def test_tp_engine_canary_gauge_matches_offline(mesh):
+    """End-to-end: a TP engine's canary gauge equals the offline
+    teacher-forced NLL computed through the same sharded adapter."""
+    from repro.serve.quality import teacher_forced_nll
+
+    _, dist, model, _ = _adapters(mesh)
+    cfg = model.cfg
+    canary = make_calibration(cfg.vocab, n_segments=2, seg_len=12,
+                              seed=99).tokens
+    prompts = make_calibration(cfg.vocab, n_segments=2, seg_len=8,
+                               seed=3).tokens
+    gen = 3
+    engine = Engine(dist, EngineConfig(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8, paged_decode=True,
+        canary_every=1e-4,
+    ))
+    engine.attach_canary(canary)
+    for p in prompts:
+        engine.submit(np.asarray(p), max_new=gen)
+    engine.run()
+    s = engine.summary()
+    assert s["canary_runs"] >= 1
+    assert s["canary_nll"] == teacher_forced_nll(dist, canary)

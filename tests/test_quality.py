@@ -1,0 +1,331 @@
+"""Quantization-quality observability tests (DESIGN.md §13).
+
+Pins the three layers of serve/quality.py:
+
+  * quantize time — the per-layer quality report carries the paper's
+    incoherence/proxy-loss numbers and incoherence processing helps (in
+    expectation) on random SPD Hessians;
+  * artifact time — the quality section round-trips through the manifest,
+    baseline comparison flags regressions, and pre-quality-manifest
+    artifacts warn instead of failing;
+  * serve time — the online canary NLL gauge equals the offline
+    teacher-forced value bit-for-bit (fp AND quantized), and shadow
+    drift sampling reports exactly zero token flips when the serving
+    path IS the oracle path.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from conftest import make_hessian, make_weights
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.quantizer import QuipConfig, quantize_layer
+from repro.data import make_calibration
+from repro.models import build_model
+from repro.serve import CachedDecoder, Engine, EngineConfig
+from repro.serve.quality import (
+    ShadowSampler,
+    build_quality_section,
+    check_artifact_quality,
+    load_baseline,
+    teacher_forced_nll,
+    write_baseline,
+)
+
+
+def _smoke_cfg():
+    return get_smoke_config("qwen3-14b")
+
+
+@pytest.fixture(scope="module")
+def fp_adapter():
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, CachedDecoder.from_model(model, params)
+
+
+# ---------------------------------------------------------------------------
+# quantize-time quality reports
+# ---------------------------------------------------------------------------
+
+
+def test_quality_report_fields_sane(small_wh):
+    W, H = small_wh
+    _, st = quantize_layer(W, H, QuipConfig(bits=2, method="ldlq"), seed=0)
+    for key in ("proxy_loss", "proxy_rel", "frob_rel_err", "max_abs_err",
+                "mu_w_pre", "mu_w_post", "mu_h_pre", "mu_h_post",
+                "h_lambda_min", "h_lambda_max", "h_cond", "wall_s"):
+        assert key in st, key
+        assert np.isfinite(st[key]), key
+    assert st["proxy_loss"] > 0
+    assert 0 < st["proxy_rel"] < 1  # 2-bit LDLQ beats quantize-to-zero
+    assert st["h_lambda_max"] >= st["h_lambda_min"] > 0  # SPD after damping?
+    assert st["h_cond"] == pytest.approx(
+        st["h_lambda_max"] / st["h_lambda_min"], rel=1e-6
+    )
+    # µ lower bound: µ(W) >= 1 for any nonzero matrix, µ(H) >= 1 always
+    assert st["mu_w_pre"] >= 1.0 and st["mu_w_post"] >= 1.0
+    assert st["mu_h_pre"] >= 1.0 and st["mu_h_post"] >= 1.0
+    assert st["wall_s"] > 0
+    assert (st["m"], st["n"]) == W.shape
+    assert st["bits"] == 2 and "ldlq" in st["method"]
+
+
+def test_incoherence_improves_proxy_in_expectation():
+    """QuIP's central claim at quality-report granularity: incoherence
+    preprocessing does not hurt the proxy loss in expectation.  Mean over
+    seeds — the guarantee is distributional, not per-instance."""
+    deltas = []
+    for seed in range(5):
+        W = make_weights(16, 16, seed=seed)
+        H = make_hessian(16, seed=seed, tokens=256)
+        cfg_on = QuipConfig(bits=2, method="ldlq", incoherence=True)
+        cfg_off = QuipConfig(bits=2, method="ldlq", incoherence=False)
+        _, st_on = quantize_layer(W, H, cfg_on, seed=seed)
+        _, st_off = quantize_layer(W, H, cfg_off, seed=seed)
+        deltas.append(st_off["proxy_loss"] - st_on["proxy_loss"])
+        # the report must also SHOW the incoherence working: µ(W) post
+        # is bounded for random orthogonal conjugation
+        assert st_on["mu_w_post"] < 100
+    assert np.mean(deltas) > 0, (
+        f"incoherence-on proxy loss should beat incoherence-off on "
+        f"average; deltas={deltas}"
+    )
+
+
+# ---------------------------------------------------------------------------
+# quality manifest + baselines
+# ---------------------------------------------------------------------------
+
+
+def _fake_stats(n_blocks=2, ploss=1.0):
+    st = {
+        "proxy_loss": ploss, "proxy_rel": 0.1, "frob_rel_err": 0.5,
+        "max_abs_err": 0.2, "s": 1.0, "mu_w_pre": 4.0, "mu_w_post": 3.5,
+        "mu_h_pre": 4.0, "mu_h_post": 3.6, "h_lambda_min": 1e-3,
+        "h_lambda_max": 10.0, "h_cond": 1e4, "m": 8, "n": 8, "bits": 2,
+        "method": "ldlq+incp@2b", "wall_s": 0.1,
+    }
+    return [{"attn.wq": dict(st), "mlp.wi": dict(st)}
+            for _ in range(n_blocks)]
+
+
+def test_quality_section_and_baseline_roundtrip(tmp_path):
+    quality = build_quality_section(_fake_stats())
+    assert quality["format"] == 1
+    assert set(quality["layers"]) == {
+        "0/attn.wq", "0/mlp.wi", "1/attn.wq", "1/mlp.wi"
+    }
+    agg = quality["aggregate"]
+    assert agg["n_layers"] == 4
+    assert agg["total_proxy_loss"] == pytest.approx(4.0)
+
+    path = tmp_path / "base.json"
+    write_baseline(path, quality, source="test")
+    base = load_baseline(path)
+    assert base["kind"] == "quip_quality_baseline"
+    assert base["proxy_loss"]["0/attn.wq"] == pytest.approx(1.0)
+
+    # identical artifact: clean
+    assert check_artifact_quality(quality, base, threshold=1.2) == []
+    # regressed artifact: the 1.2x threshold flags exactly the bad layer
+    worse = build_quality_section(_fake_stats())
+    worse["layers"]["1/mlp.wi"]["proxy_loss"] = 1.5
+    regs = check_artifact_quality(worse, base, threshold=1.2)
+    assert [r["layer"] for r in regs] == ["1/mlp.wi"]
+    assert regs[0]["reason"] == "proxy_loss"
+    assert regs[0]["ratio"] == pytest.approx(1.5)
+    # a layer the baseline knows but the artifact lost is a regression too
+    partial = build_quality_section(_fake_stats())
+    del partial["layers"]["0/attn.wq"]
+    regs = check_artifact_quality(partial, base)
+    assert [r["reason"] for r in regs] == ["missing_layer"]
+
+
+def test_pre_quality_manifest_warns_and_compares_clean(tmp_path):
+    quality = build_quality_section(_fake_stats())
+    path = tmp_path / "base.json"
+    write_baseline(path, quality)
+    base = load_baseline(path)
+    for legacy in (None, {}):  # artifacts saved before quality manifests
+        with pytest.warns(UserWarning, match="no quality section"):
+            assert check_artifact_quality(legacy, base) == []
+
+
+def test_load_baseline_rejects_wrong_kind(tmp_path):
+    path = tmp_path / "not_base.json"
+    path.write_text('{"kind": "something_else"}')
+    with pytest.raises(ValueError, match="not a quality baseline"):
+        load_baseline(path)
+
+
+def test_artifact_manifest_carries_quality_section(tmp_path):
+    """launch/quantize.py --out-dir folds the quality section into the
+    saved manifest and quality_report.py reads it back."""
+    from repro.launch.quality_report import load_manifest
+    from repro.launch.quantize import quantize_dense_model
+    from repro.serve.artifacts import save_quantized
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_calibration(cfg.vocab, n_segments=2, seg_len=16, seed=7)
+    qcfg = QuipConfig(bits=2, method="ldlq", use_kernel=False)
+    qm = quantize_dense_model(params, cfg, qcfg, calib.tokens, seed=0,
+                              verbose=False)
+    quality = build_quality_section(qm.stats)
+    save_quantized(tmp_path / "art", qm, qcfg,
+                   extra_meta={"quality": quality})
+    meta = load_manifest(tmp_path / "art")
+    assert meta["quality"]["aggregate"]["n_layers"] == len(quality["layers"])
+    assert meta["quality"] == quality  # JSON round-trip is exact
+
+
+# ---------------------------------------------------------------------------
+# serve-time canaries
+# ---------------------------------------------------------------------------
+
+
+def _canary_engine(adapter, prompts, gen, **kw):
+    ecfg = EngineConfig(
+        max_seq_len=prompts.shape[1] + gen, n_slots=4, page_size=4,
+        token_budget=32, prefill_chunk=8, **kw,
+    )
+    return Engine(adapter, ecfg)
+
+
+def test_canary_gauge_equals_offline_nll_fp(fp_adapter):
+    """The online canary NLL gauge IS the offline teacher-forced value —
+    equality, not tolerance (one jitted probe graph serves both)."""
+    cfg, adapter = fp_adapter
+    canary = make_calibration(cfg.vocab, n_segments=2, seg_len=12,
+                              seed=99).tokens
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=3).tokens
+    engine = _canary_engine(adapter, prompts, 4, canary_every=1e-4)
+    engine.attach_canary(canary)
+    for p in prompts:
+        engine.submit(np.asarray(p), max_new=4)
+    engine.run()
+    s = engine.summary()
+    assert s["canary_runs"] >= 1
+    assert s["canary_nll"] == teacher_forced_nll(adapter, canary)
+    # activation probe published per-layer gauges for every block edge
+    assert s["act_absmax"] > 0
+    assert 0.0 <= s["act_sat"] <= 1.0
+    for i in range(cfg.n_layers + 1):
+        assert f"act_absmax:{i}" in s
+
+
+def test_canary_gauge_equals_offline_nll_quantized():
+    from repro.launch.quantize import quantize_dense_model
+
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    calib = make_calibration(cfg.vocab, n_segments=2, seg_len=16, seed=7)
+    qm = quantize_dense_model(
+        params, cfg, QuipConfig(bits=2, method="ldlq", use_kernel=False),
+        calib.tokens, seed=0, verbose=False,
+    )
+    adapter = CachedDecoder.from_quantized(qm)
+    canary = make_calibration(cfg.vocab, n_segments=2, seg_len=12,
+                              seed=99).tokens
+    prompts = make_calibration(cfg.vocab, n_segments=2, seg_len=8,
+                               seed=3).tokens
+    engine = _canary_engine(adapter, prompts, 3, canary_every=1e-4)
+    engine.attach_canary(canary)
+    for p in prompts:
+        engine.submit(np.asarray(p), max_new=3)
+    engine.run()
+    # bit-for-bit: a FRESH adapter over the same quantized model computes
+    # the identical gauge value offline
+    offline = teacher_forced_nll(CachedDecoder.from_quantized(qm), canary)
+    assert engine.summary()["canary_nll"] == offline
+
+
+def test_canary_is_out_of_band(fp_adapter):
+    """Canaries must not perturb traffic: tokens with canaries on equal
+    tokens with canaries off, and the pool sees no canary pages."""
+    cfg, adapter = fp_adapter
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=3).tokens
+    outs = []
+    for canary_every in (None, 1e-4):
+        engine = _canary_engine(adapter, prompts, 5,
+                                canary_every=canary_every)
+        if canary_every is not None:
+            engine.attach_canary(make_calibration(
+                cfg.vocab, n_segments=2, seg_len=12, seed=99).tokens)
+        reqs = [engine.submit(np.asarray(p), max_new=5) for p in prompts]
+        engine.run()
+        assert engine.pool.pages_in_use == 0  # probes never touch the pool
+        outs.append([tuple(r.out_tokens) for r in reqs])
+    assert outs[0] == outs[1]
+
+
+def test_canary_requires_attach_and_validates():
+    cfg = _smoke_cfg()
+    model = build_model(cfg)
+    adapter = CachedDecoder.from_model(model, model.init(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="canary_every"):
+        _canary_engine(adapter, np.zeros((1, 8), np.int32), 2,
+                       canary_every=-1.0)
+    engine = _canary_engine(adapter, np.zeros((1, 8), np.int32), 2)
+    with pytest.raises(ValueError, match="canary set"):
+        engine.attach_canary(np.zeros((2, 1), np.int32))  # S < 2
+
+
+# ---------------------------------------------------------------------------
+# shadow drift sampling
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_zero_flips_fp_engine(fp_adapter):
+    """Gather-dense fp engine: the serving forward IS the oracle trunk,
+    so drift sampling at rate 1.0 must see exactly zero token flips."""
+    cfg, adapter = fp_adapter
+    prompts = make_calibration(cfg.vocab, n_segments=3, seg_len=10,
+                               seed=3).tokens
+    engine = _canary_engine(adapter, prompts, 5, shadow_rate=1.0)
+    reqs = [engine.submit(np.asarray(p), max_new=5) for p in prompts]
+    engine.run()
+    s = engine.summary()
+    assert all(r.shadow for r in reqs)
+    assert s["shadow_samples"] == len(reqs)
+    assert s["shadow_tokens"] == sum(len(r.out_tokens) for r in reqs)
+    assert s["shadow_token_flips"] == 0
+    assert s["shadow_flip_rate_p99"] == 0.0
+    # non-shadow runs don't keep logits; shadow runs only for their reqs
+    assert all(len(r.step_logits) == len(r.out_tokens) for r in reqs)
+
+
+def test_shadow_selection_deterministic_and_rate_shaped():
+    sampler = ShadowSampler(None, 0.25, seed=3)
+    picks = [sampler.selects(rid) for rid in range(2000)]
+    assert picks == [sampler.selects(rid) for rid in range(2000)]
+    assert 0.15 < np.mean(picks) < 0.35  # crc32 is uniform enough
+    assert not any(ShadowSampler(None, 0.0).selects(r) for r in range(50))
+    all_in = ShadowSampler(None, 1.0)
+    assert all(all_in.selects(r) for r in range(50))
+    with pytest.raises(ValueError, match="shadow rate"):
+        ShadowSampler(None, 1.5)
+
+
+def test_shadow_observe_skips_incomplete_logit_streams(fp_adapter):
+    """A request whose emission logits are missing (e.g. replayed after
+    eviction before shadow wiring existed) scores nothing rather than
+    scoring a misaligned stream."""
+    from repro.serve.scheduler import Request
+
+    _, adapter = fp_adapter
+    sampler = ShadowSampler(adapter, 1.0)
+    req = Request(prompt=np.arange(4, dtype=np.int32), max_new=3)
+    req.out_tokens = [1, 2, 3]
+    req.step_logits = []  # nothing recorded
+    assert sampler.observe(req) is None
