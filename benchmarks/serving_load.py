@@ -29,7 +29,17 @@ carries cancelled / failed / deadline_missed counts, and the ttft/itl p99
 columns measure tail latency UNDER cancellation churn: surviving requests
 pay for the page releases and batch-shape changes the cancels cause.
 
-Latency percentiles come from the engine's OWN lifecycle histograms
+``--http`` runs the same open-loop workload OVER THE WIRE through the
+streaming front door (``serve/frontdoor``): the engine lives behind an
+asyncio HTTP/SSE server and every client measures latency at its own
+socket, so ttft/itl include HTTP framing, the tick loop, and scheduling.
+``--overload-burst N`` fires a synchronized mid-run volley and records
+the 200/429/413 admission split plus degradation-ladder transitions —
+the record is written to ``BENCH_serving_http.json`` by convention, and
+the run fails if the graceful drain leaks a single KV page.
+
+Latency percentiles (in-process mode) come from the engine's OWN
+lifecycle histograms
 (``Engine.summary()``), asserted equal to an external recomputation from
 raw request timestamps — the benchmark cross-checks the telemetry it
 reports.  Both observe FINISHED requests only: a cancelled request's
@@ -63,6 +73,158 @@ def pctl(xs, q):
 
 def rnd(x, n):
     return None if x is None else round(x, n)
+
+
+def _sse_events(resp):
+    """Incrementally parse SSE frames off a live ``http.client`` response,
+    yielding ``(t_received, event, payload)`` per complete frame."""
+    ev, data = None, None
+    for raw in resp.fp:
+        line = raw.decode("utf-8", "replace").rstrip("\n")
+        if line.startswith("event: "):
+            ev = line[len("event: "):]
+        elif line.startswith("data: "):
+            data = line[len("data: "):]
+        elif not line and ev is not None:
+            yield time.perf_counter(), ev, json.loads(data)
+            ev, data = None, None
+
+
+def run_http(args, cfg, engine, prompts, lengths, arrivals):
+    """Over-the-wire run: the front door owns the engine; this process
+    plays the clients.  Latency is measured where the user feels it —
+    at the socket — so ttft/itl here include HTTP framing, the asyncio
+    tick loop, and scheduling, on top of the engine's own numbers."""
+    import http.client
+    import threading
+
+    from repro.serve.frontdoor import FrontDoor
+
+    engine.reset_clock()
+    engine.reset_stats()
+    fd = FrontDoor(engine, drain_timeout_s=args.drain_timeout_s)
+    fd.start_in_thread()
+    results = [None] * args.requests
+    t0 = time.perf_counter()
+
+    def client(i):
+        t_due = t0 + float(arrivals[i])
+        delay = t_due - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        body = json.dumps({
+            "prompt": [int(t) for t in prompts[i][: lengths[i]]],
+            "max_new": args.gen,
+            "stream": True,
+        })
+        c = http.client.HTTPConnection("127.0.0.1", fd.port, timeout=300)
+        try:
+            c.request("POST", "/v1/generate", body,
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            if r.status != 200:
+                results[i] = {"status": r.status}
+                r.read()
+                return
+            token_times, done = [], None
+            for t_ev, ev, payload in _sse_events(r):
+                if ev == "token":
+                    token_times.append(t_ev)
+                elif ev == "done":
+                    done = payload
+            results[i] = {"status": 200, "t_due": t_due,
+                          "token_times": token_times, "done": done}
+        finally:
+            c.close()
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(args.requests)]
+    for t in threads:
+        t.start()
+
+    burst_statuses = []
+    if args.overload_burst:
+        # overload probe: a synchronized volley mid-run — every response
+        # must be a typed verdict (200 admitted, 429/413 shed), never a
+        # connection error
+        mid = float(arrivals[len(arrivals) // 2])
+        lock = threading.Lock()
+
+        def burst():
+            delay = t0 + mid - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            body = json.dumps({
+                "prompt": [int(t) for t in prompts[0][:8]],
+                "max_new": 2, "stream": False, "tenant": "burst",
+            })
+            c = http.client.HTTPConnection(
+                "127.0.0.1", fd.port, timeout=300)
+            try:
+                c.request("POST", "/v1/generate", body,
+                          {"Content-Type": "application/json"})
+                r = c.getresponse()
+                r.read()
+                with lock:
+                    burst_statuses.append(r.status)
+            finally:
+                c.close()
+
+        bts = [threading.Thread(target=burst, daemon=True)
+               for _ in range(args.overload_burst)]
+        for t in bts:
+            t.start()
+        threads += bts
+
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    report = fd.drain_and_join(reason="bench_complete")
+
+    ok = [r for r in results if r and r["status"] == 200 and r["done"]]
+    ttft = [r["token_times"][0] - r["t_due"]
+            for r in ok if r["token_times"]]
+    itl = [b - a for r in ok
+           for a, b in zip(r["token_times"], r["token_times"][1:])]
+    statuses = [r["status"] for r in results if r] + burst_statuses
+    total = sum(r["done"]["n_tokens"] for r in ok)
+    m = engine.metrics
+
+    def count(name):
+        return m.counter(name).value
+
+    rec = {
+        "label": ("quip-%db" % args.bits) if args.quantize else "fp",
+        "arch": cfg.name,
+        "mode": "http",
+        "transport": "http-sse",
+        "decode_path": "paged" if args.paged else "gather-dense",
+        "requests": args.requests,
+        "rate_req_s": args.rate,
+        "max_queue": args.max_queue,
+        "overload_burst": args.overload_burst,
+        "wall_s": round(wall, 3),
+        "tok_s": round(total / wall, 2),
+        # CLIENT-side percentiles, measured at the socket
+        "ttft_p50_s": rnd(pctl(ttft, 50), 4),
+        "ttft_p99_s": rnd(pctl(ttft, 99), 4),
+        "itl_p50_s": rnd(pctl(itl, 50), 4),
+        "itl_p99_s": rnd(pctl(itl, 99), 4),
+        "http_200": statuses.count(200),
+        "http_429": statuses.count(429),
+        "http_413": statuses.count(413),
+        "http_other": len([s for s in statuses
+                           if s not in (200, 429, 413)]),
+        "shed_requests": count("shed_requests"),
+        "ladder_escalations": count("ladder_escalations"),
+        "ladder_deescalations": count("ladder_deescalations"),
+        "client_disconnects": count("client_disconnects"),
+        "drain_clean": report.clean,
+        "leaked_pages": report.leaked_pages,
+        "served_total": report.served_total,
+        "peak_kv_pages": engine.pool.peak_pages_in_use,
+    }
+    return rec
 
 
 def main(argv=None):
@@ -121,6 +283,20 @@ def main(argv=None):
                     help="per-request wall-clock deadline enforced at tick "
                          "boundaries; missed deadlines FAIL the request "
                          "(deadline_missed in the record)")
+    ap.add_argument("--http", action="store_true",
+                    help="over-the-wire mode: serve through the streaming "
+                         "front door (serve/frontdoor) and measure CLIENT-"
+                         "side SSE latency — ttft/itl include HTTP framing, "
+                         "the asyncio tick loop, and the socket")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission queue (submits past it get "
+                         "429 queue_full over HTTP)")
+    ap.add_argument("--overload-burst", type=int, default=0, metavar="N",
+                    help="with --http: fire N extra concurrent requests "
+                         "mid-run and record the 200/429/413 admission "
+                         "split — overload must shed, never crash")
+    ap.add_argument("--drain-timeout-s", type=float, default=10.0,
+                    help="with --http: graceful-drain budget at shutdown")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args(argv)
@@ -129,6 +305,11 @@ def main(argv=None):
                  "add --paged")
     if not 0.0 <= args.cancel_rate <= 1.0:
         ap.error("--cancel-rate is a fraction in [0, 1]")
+    if args.http and (args.cancel_rate or args.trace):
+        ap.error("--http measures the wire path; --cancel-rate/--trace "
+                 "are in-process-run features")
+    if args.overload_burst and not args.http:
+        ap.error("--overload-burst needs --http")
 
     cfg = get_smoke_config(args.arch)
     if not args.smoke:
@@ -171,6 +352,7 @@ def main(argv=None):
         draft=args.draft,
         device_sample=args.paged and not args.host_sample,
         deadline_s=args.deadline_s,
+        max_queue=args.max_queue,
     ))
     # warm the jit caches so compile time doesn't pollute latency stats
     warm = engine.submit(np.asarray(prompts[0]), max_new=2, arrival=0.0)
@@ -189,6 +371,14 @@ def main(argv=None):
             [np.tile(header, (args.requests, 1)), prompts[:, len(header):]],
             axis=1,
         )
+    if args.http:
+        rec = run_http(args, cfg, engine, prompts, lengths, arrivals)
+        print(json.dumps(rec, indent=1))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rec, f)
+        return 0
+
     reqs = [
         engine.submit(np.asarray(prompts[i][: lengths[i]]), max_new=args.gen,
                       arrival=float(arrivals[i]))

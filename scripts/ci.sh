@@ -140,6 +140,83 @@ echo "$chaos_out"
 echo "$chaos_out" | grep -q "outcomes: finished=3 cancelled=1 failed=2" \
   || { echo "[ci] chaos smoke: unexpected outcome mix"; exit 1; }
 
+# streaming front door (serve/frontdoor, DESIGN.md §14): boot the HTTP/
+# SSE server, run two concurrent token streams over localhost, kill one
+# client mid-stream (its lane must cancel and release its pages), then
+# SIGTERM the server while the survivor is still streaming — graceful
+# drain must exit 0 with zero leaked KV pages and the disconnect visible
+# as a finish:cancelled counter
+python - <<'PY'
+import http.client, json, signal, socket, struct, subprocess, sys
+import threading, time
+
+s = socket.socket(); s.bind(("127.0.0.1", 0))
+port = s.getsockname()[1]; s.close()
+srv = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-14b",
+     "--smoke", "--http-port", str(port), "--prompt-len", "16",
+     "--gen", "256", "--drain-timeout-s", "5"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+try:
+    deadline = time.time() + 180
+    while True:
+        assert time.time() < deadline, "front door never came up"
+        assert srv.poll() is None, "server died during startup"
+        try:
+            c = http.client.HTTPConnection("127.0.0.1", port, timeout=2)
+            c.request("GET", "/healthz")
+            ok = c.getresponse().status == 200
+            c.close()
+            if ok:
+                break
+        except OSError:
+            time.sleep(0.2)
+
+    results = []
+
+    def stream(abort_after=None):
+        body = json.dumps({"prompt": list(range(1, 17)), "max_new": 256})
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=120)
+        c.request("POST", "/v1/generate", body,
+                  {"Content-Type": "application/json"})
+        r = c.getresponse()
+        assert r.status == 200, r.status
+        n = 0
+        for raw in r.fp:
+            line = raw.decode("utf-8", "replace").rstrip("\n")
+            if line.startswith("event: token"):
+                n += 1
+                if abort_after and n >= abort_after:
+                    # vanish abruptly: RST, not a polite FIN
+                    sk = r.fp.raw._sock
+                    sk.setsockopt(socket.SOL_SOCKET, socket.SO_LINGER,
+                                  struct.pack("ii", 1, 0))
+                    r.close(); sk.close()
+                    results.append(("aborted", n))
+                    return
+        results.append(("done", n))
+
+    a = threading.Thread(target=stream)                      # survivor
+    b = threading.Thread(target=stream, kwargs={"abort_after": 2})
+    a.start(); b.start()
+    b.join(60)
+    assert ("aborted", 2) in results, results
+    time.sleep(0.3)             # let the cancel land, keep A in flight
+    srv.send_signal(signal.SIGTERM)   # drain under live traffic
+    a.join(60)
+    out, _ = srv.communicate(timeout=60)
+    print(out)
+    assert srv.returncode == 0, f"exit {srv.returncode}"
+    assert "drain[sigterm]" in out
+    assert "leak gate: clean" in out
+    assert "finish:cancelled=" in out, "disconnect cancel not counted"
+    assert any(kind == "done" and n > 0 for kind, n in results), results
+    print(f"[ci] front-door smoke OK ({results})")
+finally:
+    if srv.poll() is None:
+        srv.kill()
+PY
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -173,6 +250,12 @@ PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --cancel-rate 0.25 --deadline-s 60 \
   --out "$tmp/BENCH_serving_cancel.json"
+# over-the-wire baseline: the same open-loop workload through the HTTP/
+# SSE front door, client-side ttft/itl, plus a mid-run overload volley
+# that must shed (429/413) rather than crash, and a leak-gated drain
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
+  --paged --http --max-queue 8 --overload-burst 8 \
+  --out "$tmp/BENCH_serving_http.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
 # speculative draft-and-verify vs one-token decode (repetitive + random

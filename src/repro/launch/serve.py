@@ -123,11 +123,13 @@ def quantized_generate(qm, prompt, gen: int):
 
 def build_engine(adapter, *, max_seq_len, args, paged=None,
                  paged_prefill=None, prefix_cache=None,
-                 speculative=None, faults=None, robust=True) -> "Engine":
+                 speculative=None, faults=None, robust=True,
+                 tenants=None) -> "Engine":
     from repro.serve import Engine, EngineConfig
 
     paged = getattr(args, "paged", False) if paged is None else paged
     ecfg = EngineConfig(
+        tenants=tenants if robust else None,
         max_seq_len=max_seq_len,
         n_slots=args.slots,
         page_size=args.page_size,
@@ -267,6 +269,26 @@ def main(argv=None):
                          "dispatch_error|corrupt_shard|cancel and keys "
                          "tick/rid/shard/times, e.g. "
                          "'alloc_fail@rid=0;cancel@rid=4,tick=6'")
+    # streaming front door (DESIGN.md §14; serve/frontdoor/)
+    ap.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                    help="serve over HTTP/SSE instead of the fixed batch: "
+                         "start the asyncio front door on this port (0 = "
+                         "ephemeral), POST /v1/generate + healthz/readyz/"
+                         "metricsz; SIGTERM/SIGINT drain gracefully")
+    ap.add_argument("--http-host", default="127.0.0.1",
+                    help="front-door bind address (default 127.0.0.1)")
+    ap.add_argument("--tenants", default=None, metavar="SPEC",
+                    help="per-tenant admission policies, comma-separated "
+                         "'name:rate:burst:priority' (rate in req/s, empty "
+                         "or 'inf' = unlimited; priority 0 = highest), "
+                         "e.g. 'paid:inf:4:0,free:2.0:4:1'")
+    ap.add_argument("--drain-timeout-s", type=float, default=5.0,
+                    metavar="SECS",
+                    help="graceful-drain budget: in-flight lanes past this "
+                         "get cancelled (pages still released exactly)")
+    ap.add_argument("--no-ladder", action="store_true",
+                    help="disable the load-shedding degradation ladder "
+                         "(spec K shrink -> spec off -> shed lowest class)")
     ap.add_argument("--screen-logits", action="store_true",
                     help="NaN/Inf-screen every step's logits per lane "
                          "(one fused device reduction); a poisoned lane "
@@ -333,6 +355,19 @@ def main(argv=None):
         except ValueError as e:
             raise SystemExit(f"--fault-plan: {e}")
 
+    tenants = None
+    if args.tenants:
+        from repro.serve.frontdoor.admission import parse_tenants
+
+        try:
+            tenants = parse_tenants(args.tenants)
+        except ValueError as e:
+            raise SystemExit(f"--tenants: {e}")
+    if args.http_port is not None and args.check:
+        raise SystemExit(
+            "--check drives a fixed in-process workload; the HTTP front "
+            "door serves whatever clients send — drop one of the two"
+        )
     if args.speculative and not args.paged:
         raise SystemExit(
             "--speculative verifies drafts over the paged pool (the "
@@ -500,7 +535,7 @@ def main(argv=None):
 
     engine = build_engine(
         adapter, max_seq_len=args.prompt_len + args.gen, args=args,
-        faults=faults,
+        faults=faults, tenants=tenants,
     )
     if args.canary_every is not None:
         # pinned OFF the traffic seed stream: the canary set must stay
@@ -519,6 +554,36 @@ def main(argv=None):
         pool = engine.pool
         print(f"[serve] mesh data={dp} model={mp}: KV pool "
               f"{pool.total_bytes()} B total, {pool.device_bytes()} B/device")
+    if args.http_port is not None:
+        import asyncio
+
+        from repro.serve.frontdoor import FrontDoor
+
+        fd = FrontDoor(
+            engine, host=args.http_host, port=args.http_port,
+            drain_timeout_s=args.drain_timeout_s, ladder=not args.no_ladder,
+        )
+        report = asyncio.run(fd.serve_forever())
+        s = engine.summary()
+        for line in report.lines():
+            print(f"[serve] {line}")
+        fin = " ".join(
+            f"{k}={v}" for k, v in sorted(s.items())
+            if k.startswith("finish:")
+        )
+        if fin:
+            print(f"[serve] finish reasons: {fin}")
+        print(f"[serve] http: requests={s['http_requests']} "
+              f"rejections={s['http_rejections']} "
+              f"shed={s['shed_requests']} "
+              f"disconnects={s['client_disconnects']} "
+              f"ladder_escalations={s.get('ladder_escalations', 0)} "
+              f"ladder_deescalations={s.get('ladder_deescalations', 0)}")
+        if tracer is not None:
+            tracer.export_chrome_trace(args.trace_out)
+            print(f"[serve] trace: {len(tracer)} spans -> {args.trace_out}")
+        return report.exit_code
+
     stop_tokens = tuple(args.stop_token or ())
     try:  # validate the sampling flags before the admission loop, so bad
         # values don't surface as a misleading pool-capacity error below
@@ -550,8 +615,19 @@ def main(argv=None):
             raise SystemExit(f"cannot admit request: {e}")
         submitted.append((i, req))
     t0 = time.perf_counter()
-    done = engine.run(metrics_every=args.metrics_every)
+    interrupted = 0
+    try:
+        done = engine.run(metrics_every=args.metrics_every)
+    except KeyboardInterrupt:
+        # ^C is a drain request, not a crash: cancel every live lane
+        # (pages released refcount-exactly) and fall through to the same
+        # summary lines + leak gate a clean run prints
+        interrupted = len(engine.cancel_all())
+        done = engine.finished
     dt = time.perf_counter() - t0
+    if interrupted:
+        print(f"\n[serve] interrupted: drained {interrupted} in-flight "
+              f"request(s) as cancelled")
     s = engine.summary()
     total = sum(len(r.out_tokens) for r in done)
     print(f"[serve] {label} {cfg.name}: {len(done)} requests, {total} tokens "

@@ -33,12 +33,21 @@ Pieces (each usable on its own):
     per-layer quality manifests (incoherence µ, Hessian spectrum, proxy
     loss) folded into artifacts, baseline regression checks at load, and
     online serving-quality canaries (teacher-forced NLL probe + shadow
-    fp-oracle drift sampling) at serve time.
+    fp-oracle drift sampling) at serve time;
+  * :mod:`repro.serve.lifecycle` — engine drivers: the engine exposes a
+    pure ``tick()`` + lifecycle API, and a driver (the blocking
+    ``run_to_completion`` here, or the front door's async tick task)
+    owns the loop;
+  * :mod:`repro.serve.frontdoor` — streaming HTTP/SSE front door:
+    asyncio server that owns the engine thread, typed-admission → HTTP
+    mapping (429/413 + Retry-After), per-tenant token buckets +
+    priority classes, graceful SIGTERM/SIGINT drain through the KV leak
+    gate, and a reversible load-shedding degradation ladder.
 """
 from repro.serve.adapter import CachedDecoder
 from repro.serve.artifacts import ArtifactCorruption, load_quantized, save_quantized
 from repro.serve.distributed import DistributedCachedDecoder, make_serving_mesh
-from repro.serve.engine import Engine, EngineConfig
+from repro.serve.engine import Engine, EngineConfig, TickResult
 from repro.serve.faults import (
     AdmissionRejected,
     FaultInjected,
@@ -56,7 +65,13 @@ from repro.serve.quality import (
     teacher_forced_nll,
     write_baseline,
 )
-from repro.serve.scheduler import Request, RequestState, TokenBudgetFCFS
+from repro.serve.lifecycle import run_to_completion
+from repro.serve.scheduler import (
+    Request,
+    RequestState,
+    TenantPolicy,
+    TokenBudgetFCFS,
+)
 from repro.serve.telemetry import (
     MetricsRegistry,
     Tracer,
@@ -70,10 +85,13 @@ __all__ = [
     "make_serving_mesh",
     "Engine",
     "EngineConfig",
+    "TickResult",
     "PagedKVPool",
     "Request",
     "RequestState",
+    "TenantPolicy",
     "TokenBudgetFCFS",
+    "run_to_completion",
     "save_quantized",
     "load_quantized",
     "ArtifactCorruption",

@@ -96,7 +96,7 @@ from repro.serve.telemetry import (
     emit_metrics_line,
 )
 
-__all__ = ["Engine", "EngineConfig"]
+__all__ = ["Engine", "EngineConfig", "TickResult"]
 
 # counters the engine bumps on the hot path, in reporting order; the
 # legacy ``engine.stats`` mapping is a read view over exactly these
@@ -134,6 +134,22 @@ def _lane_finite(logits):
     return jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
 
 
+@dataclasses.dataclass
+class TickResult:
+    """What one :meth:`Engine.tick` did — the contract between the pure
+    tick function and whatever drives it (the front-door server, the
+    in-process :func:`repro.serve.lifecycle.run_to_completion` loop, or
+    a test).  ``emitted`` is every (request, token) emission of the tick
+    in emission order; ``finished`` is every request that reached a
+    terminal state since the previous tick's result was taken (including
+    between-tick cancels)."""
+
+    worked: bool
+    t: float
+    emitted: list  # [(Request, token), ...]
+    finished: list  # [Request, ...] newly terminal
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_seq_len: int  # per-sequence token capacity (prompt + generation)
@@ -156,6 +172,12 @@ class EngineConfig:
     #   deadline (from arrival), enforced at tick boundaries
     max_queue: Optional[int] = None  # bounded admission queue: submits past
     #   this many pending requests raise a retryable AdmissionRejected
+    # ---- multi-tenant admission (serve/frontdoor, DESIGN.md §14) ----
+    tenants: Optional[dict] = None  # tenant name -> scheduler.TenantPolicy
+    #   (token-bucket rate limits + default priority class); None = every
+    #   tenant unlimited at class 0 (exact legacy FCFS)
+    aging_s: float = 2.0  # seconds of queue wait that promote a request
+    #   one priority class (bounded-wait starvation freedom)
     max_evictions: Optional[int] = 8  # eviction-storm guard: a request
     #   evicted this many times FAILS ("eviction_storm") instead of
     #   replaying its prefix forever (None = legacy unbounded behavior)
@@ -218,10 +240,16 @@ class Engine:
         )
         self.scheduler = TokenBudgetFCFS(
             token_budget=ecfg.token_budget, prefill_chunk=ecfg.prefill_chunk,
-            max_queue=ecfg.max_queue,
+            max_queue=ecfg.max_queue, tenants=ecfg.tenants,
+            aging_s=ecfg.aging_s,
         )
         self.running: list[Request] = []
         self.finished: list[Request] = []
+        # per-tick result sinks (reset at every tick() entry): _note_emit
+        # and _terminalize record into these so TickResult can hand the
+        # server exactly what changed without diffing request state
+        self._tick_emitted: list = []
+        self._tick_finished: list = []
         # deterministic fault injection (serve/faults.py): the engine owns
         # the plan's dispatch context (tick, lane_rids) and points the
         # pool + adapter hooks at it.  Default: a fresh empty plan — every
@@ -281,6 +309,8 @@ class Engine:
         sampling: Optional[SamplingParams] = None,
         stop_tokens: tuple = (),
         deadline_s: Optional[float] = None,
+        tenant: str = "default",
+        priority: Optional[int] = None,
     ) -> Request:
         """Submit a request, or raise a typed :class:`AdmissionRejected`:
         non-retryable when the request can never fit this pool (per-
@@ -294,7 +324,10 @@ class Engine:
         the pool fails cleanly later ("capacity", via the queue-head
         feasibility backstop) instead of wedging the engine.
         ``deadline_s`` overrides ``EngineConfig.deadline_s`` for this
-        request."""
+        request.  ``tenant`` bills the submit against that tenant's
+        token bucket (retryable ``rate_limited`` rejection with a
+        retry-after hint when overdrawn); ``priority`` pins the class
+        (None inherits the tenant policy's)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -322,6 +355,7 @@ class Engine:
             stop_tokens=tuple(stop_tokens),
             deadline_s=(self.ecfg.deadline_s if deadline_s is None
                         else deadline_s),
+            tenant=tenant, priority=priority,
         )
         if self.shadow is not None:
             # decided at submit so the decode paths know to materialize
@@ -455,65 +489,61 @@ class Engine:
         self.metrics.reset()
         self.pool.peak_pages_in_use = self.pool.pages_in_use
 
+    # ---- lifecycle API (what a driver needs; DESIGN.md §14) -------------
+    #
+    # The engine does not own a loop: it exposes the pure ``tick()``
+    # plus these predicates, and a driver — the in-process
+    # ``lifecycle.run_to_completion`` (what ``run()`` delegates to) or
+    # the front-door server's async tick task — decides when to tick,
+    # when to sleep, and when to drain.
+
+    @property
+    def idle(self) -> bool:
+        """No pending (waiting/queued) and no running work."""
+        return not (self.scheduler.pending or self.running)
+
+    def next_arrival(self) -> Optional[float]:
+        """Arrival time of the earliest not-yet-arrived request (engine
+        clock), or None — what an idle driver may sleep until."""
+        return self.scheduler.waiting[0].arrival if self.scheduler.waiting \
+            else None
+
+    def live_requests(self) -> list[Request]:
+        """Every non-terminal request: waiting, queued, and running."""
+        sch = self.scheduler
+        return [*sch.waiting, *sch.queue, *self.running]
+
+    def cancel_all(self) -> list[Request]:
+        """Cancel every live request (drain-deadline teardown).  Returns
+        the requests cancelled; pages are released refcount-exactly."""
+        victims = self.live_requests()
+        for r in victims:
+            self.cancel(r.rid)
+        return victims
+
+    def set_speculative_k(self, k: int) -> int:
+        """Clamp the LIVE speculative draft depth to ``k`` (degradation
+        ladder hook).  Can only shrink below — or restore up to — the
+        configured ``EngineConfig.speculative_k`` (the drafter and the
+        verify dispatch buckets were built for it); with 0 the engine
+        falls back to plain one-token decode ticks.  Returns the depth
+        actually in effect.  Reversible: calling with the configured K
+        restores full speculation."""
+        if k < 0:
+            raise ValueError(f"speculative depth must be >= 0, got {k}")
+        self.spec_k = min(k, self.ecfg.speculative_k)
+        return self.spec_k
+
     def run(self, max_steps: Optional[int] = None,
             metrics_every: Optional[float] = None) -> list[Request]:
-        """Drive until every submitted request is finished.
+        """Drive until every submitted request is finished (delegates to
+        :func:`repro.serve.lifecycle.run_to_completion` — the engine
+        itself owns no loop)."""
+        from repro.serve.lifecycle import run_to_completion
 
-        ``max_steps`` bounds steps that DID work (a runaway-loop backstop);
-        idle iterations waiting on future arrivals don't consume it — an
-        open-loop workload may spend arbitrarily long between arrivals.
-        ``metrics_every`` (seconds) emits a one-line metrics snapshot to
-        stderr at that period while the loop runs.
-        """
-        todo = self.scheduler.pending + len(self.running)
-        budget_tokens = sum(
-            r.max_new + len(r.prefix)
-            for r in (*self.scheduler.waiting, *self.scheduler.queue, *self.running)
+        return run_to_completion(
+            self, max_steps=max_steps, metrics_every=metrics_every
         )
-        max_steps = max_steps or 1000 + 20 * budget_tokens
-        done0 = len(self.finished)
-        worked_steps = stalls = 0
-        next_metrics = (
-            self.now() + metrics_every if metrics_every else float("inf")
-        )
-        # canary cadence mirrors next_metrics, plus one immediate probe so
-        # the gauge exists from tick zero (short smoke runs still canary)
-        canary_on = (
-            self.ecfg.canary_every is not None
-            and self.canary_tokens is not None
-        )
-        if canary_on:
-            self._run_canary()
-        next_canary = (
-            self.now() + self.ecfg.canary_every if canary_on else float("inf")
-        )
-        while self.scheduler.pending or self.running:
-            if self.step():
-                worked_steps, stalls = worked_steps + 1, 0
-                if worked_steps > max_steps:
-                    raise RuntimeError(
-                        f"engine did not drain in {max_steps} working steps"
-                    )
-            elif self.scheduler.waiting:
-                # idle until the next virtual arrival
-                time.sleep(max(
-                    0.0, min(0.01, self.scheduler.waiting[0].arrival - self.now())
-                ))
-            else:
-                stalls += 1  # arrived work exists but nothing progressed
-                if stalls > 10_000:
-                    raise RuntimeError(
-                        "engine stalled: pending requests but no step "
-                        "makes progress (pool misconfigured?)"
-                    )
-            if self.now() >= next_metrics:
-                self._emit_metrics_snapshot()
-                next_metrics = self.now() + metrics_every
-            if self.now() >= next_canary:
-                self._run_canary()
-                next_canary = self.now() + self.ecfg.canary_every
-        assert len(self.finished) - done0 == todo
-        return self.finished[done0:]
 
     _METRICS_LINE_KEYS = (
         "steps", "decode_tokens", "prefill_tokens", "evictions",
@@ -529,6 +559,18 @@ class Engine:
 
     def step(self) -> bool:
         """One engine step; returns whether any token work was done.
+        Compatibility wrapper over :meth:`tick`."""
+        return self.tick().worked
+
+    def tick(self) -> TickResult:
+        """One engine tick — the pure unit of work a driver schedules.
+
+        Returns a :class:`TickResult` carrying every ``(request, token)``
+        emitted this tick (in emit order) and every request that reached
+        a terminal state since the last tick ended, so a streaming front
+        door can fan tokens out to clients without polling request
+        objects.  Terminalizations that happen BETWEEN ticks (a server-
+        side ``cancel()``) are reported by the next tick.
 
         Span taxonomy (telemetry, DESIGN.md §11): the whole tick is one
         ``step`` span; its direct children are ``schedule`` (arrival
@@ -580,7 +622,14 @@ class Engine:
             self.metrics.inc("steps")
             if self.faults.rules:
                 self._reconcile_faults()
-        return worked
+        result = TickResult(
+            worked=worked, t=now,
+            emitted=self._tick_emitted, finished=self._tick_finished,
+        )
+        # fresh sinks (not .clear()) so the returned lists stay valid
+        self._tick_emitted = []
+        self._tick_finished = []
+        return result
 
     # ---- internals ------------------------------------------------------
 
@@ -630,21 +679,27 @@ class Engine:
 
     def _ensure_decode_pages(self, plan: StepPlan, now: float) -> list[Request]:
         """Claim a page for each decode lane's next token, evicting under
-        pressure.  Lanes are served oldest-first and the victim is always
-        the NEWEST running request — possibly the asking lane itself —
-        so requests already granted pages this step are never clawed back
-        (strict-FCFS preemption).  An armed ``alloc_fail`` rule makes the
-        targeted lane's claim fail terminally (FAILED, "alloc_fail")."""
+        pressure.  Lanes are served best-class-oldest-first and the
+        victim is always the worst-class NEWEST running request —
+        possibly the asking lane itself — so requests already granted
+        pages this step are never clawed back (strict-FCFS preemption
+        within a class; low classes yield pages to high ones).  An armed
+        ``alloc_fail`` rule makes the targeted lane's claim fail
+        terminally (FAILED, "alloc_fail")."""
         active = []
         faults = self.faults if self.faults.rules else None
-        for r in sorted(plan.decode, key=lambda r: (r.arrival, r.rid)):
+        lane_key = lambda r: (r.priority or 0, r.arrival, r.rid)
+        for r in sorted(plan.decode, key=lane_key):
             if r.state is not RequestState.DECODE:
                 continue  # evicted (or terminalized) as a side effect
             if faults is not None and faults.fire("alloc_fail", rid=r.rid):
                 self._fail(r, "alloc_fail", now)
                 continue
             while not self.pool.extend(r.slot, self.pool.length(r.slot) + 1):
-                victim = max(self.running, key=lambda q: (q.arrival, q.rid))
+                # victim: lowest class first (largest priority number),
+                # then newest — with one class this is the legacy
+                # strict-FCFS choice, so token identity is preserved
+                victim = max(self.running, key=lane_key)
                 self._evict(victim, now)
                 if r.state is not RequestState.DECODE:
                     break  # r itself was evicted or stormed out
@@ -721,7 +776,9 @@ class Engine:
 
     def _note_emit(self, req: Request, now: float) -> None:
         """Post-emit lifecycle hook: mark the request's true first token
-        (a replayed request keeps its original ``t_first``)."""
+        (a replayed request keeps its original ``t_first``) and record
+        the emission for this tick's :class:`TickResult`."""
+        self._tick_emitted.append((req, req.out_tokens[-1]))
         if len(req.out_tokens) == 1:
             self.tracer.event(
                 "first_token", rid=req.rid, ttft_s=now - req.arrival
@@ -742,6 +799,7 @@ class Engine:
         if req in self.running:
             self.running.remove(req)
         self.finished.append(req)
+        self._tick_finished.append(req)
         self.metrics.inc("finish:" + reason)
 
     def _finish(self, req: Request, now: float) -> None:

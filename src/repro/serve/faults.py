@@ -37,12 +37,26 @@ Fault kinds
     The engine calls :meth:`Engine.cancel` on the given request id at
     the given tick boundary — deterministic mid-flight cancellation
     from CLI fault plans and benchmarks.
+``slow_client``
+    The front door stalls the targeted request's SSE write path for
+    ``ms`` milliseconds per consult — a client that stops reading.
+``disconnect``
+    The front door drops the targeted request's connection once
+    ``tokens`` tokens have streamed (default 1) — exercising the
+    disconnect → :meth:`Engine.cancel` path without a real client
+    misbehaving on cue.
+``admission_burst``
+    The front door injects ``n`` synthetic low-priority admissions at
+    the matching tick — a retry storm on demand, driving the admission
+    backpressure and degradation-ladder machinery.
 
 Rule triggers: ``tick`` (engine step index, from the steps counter),
 ``rid`` (request id), ``shard`` (artifact shard index), ``times`` (how
-often the rule fires before disarming; default once).  A rule with no
-``tick`` fires at the first opportunity; a rule with no ``rid`` binds to
-the first live lane of the dispatch it fires on.
+often the rule fires before disarming; default once).  Network-layer
+parameters: ``tokens`` (disconnect threshold), ``ms`` (slow-client
+stall), ``n`` (burst size).  A rule with no ``tick`` fires at the first
+opportunity; a rule with no ``rid`` binds to the first live lane of the
+dispatch it fires on.
 
 The plan string grammar (``--fault-plan``)::
 
@@ -75,6 +89,10 @@ FAULT_KINDS = (
     "dispatch_error",
     "corrupt_shard",
     "cancel",
+    # ---- network-layer faults (serve/frontdoor, DESIGN.md §14) ----
+    "slow_client",  # stall the SSE write path for the targeted stream
+    "disconnect",  # drop the client connection mid-stream
+    "admission_burst",  # inject a burst of synthetic admissions at a tick
 )
 
 
@@ -82,9 +100,18 @@ class AdmissionRejected(ValueError):
     """Structured admission backpressure from :meth:`Engine.submit`.
 
     ``retryable=True`` means the rejection is transient (bounded queue
-    full): back off and resubmit.  ``retryable=False`` means this
-    engine can never serve the request (it exceeds per-sequence or
-    total pool capacity) and resubmitting is pointless.
+    full, tenant rate limit, load shed): back off — for
+    ``retry_after_s`` seconds when set — and resubmit.
+    ``retryable=False`` means this engine can never serve the request
+    (it exceeds per-sequence or total pool capacity) and resubmitting
+    is pointless.
+
+    ``str()`` carries every actionable detail (reason, needed/available
+    pages, queue occupancy, retry-after, the retryable flag) so CLI
+    errors and HTTP response bodies never need to reach into the
+    attributes; :meth:`to_dict` is the structured form the front door
+    serializes, and :attr:`http_status` the HTTP mapping (429 for
+    retryable backpressure, 413 for a request that can never fit).
 
     Subclasses :class:`ValueError` so callers of the old bare-ValueError
     contract keep working.
@@ -94,21 +121,48 @@ class AdmissionRejected(ValueError):
                  needed_pages: Optional[int] = None,
                  available_pages: Optional[int] = None,
                  pending: Optional[int] = None,
-                 limit: Optional[int] = None):
+                 limit: Optional[int] = None,
+                 retry_after_s: Optional[float] = None,
+                 tenant: Optional[str] = None):
         self.reason = reason
         self.retryable = retryable
         self.needed_pages = needed_pages
         self.available_pages = available_pages
         self.pending = pending
         self.limit = limit
+        self.retry_after_s = retry_after_s
+        self.tenant = tenant
         parts = [f"admission rejected ({reason})"]
+        if tenant is not None:
+            parts.append(f"tenant {tenant!r}")
         if needed_pages is not None:
             parts.append(f"needs {needed_pages} pages, "
                          f"{available_pages} available")
         if limit is not None:
             parts.append(f"{pending} pending >= max_queue {limit}")
+        if retry_after_s is not None:
+            parts.append(f"retry after {retry_after_s:.3g}s")
         parts.append("retryable" if retryable else "not retryable")
         super().__init__("; ".join(parts))
+
+    @property
+    def http_status(self) -> int:
+        """HTTP mapping: 413 (payload too large) for a request this pool
+        can NEVER hold, 429 (too many requests) for every transient
+        rejection — queue_full, rate_limited, shed."""
+        return 413 if self.reason == "over_capacity" else 429
+
+    def to_dict(self) -> dict:
+        """JSON-serializable body for HTTP error responses (None fields
+        omitted so clients see only the relevant context)."""
+        out = {"error": self.reason, "retryable": self.retryable,
+               "detail": str(self)}
+        for key in ("needed_pages", "available_pages", "pending", "limit",
+                    "retry_after_s", "tenant"):
+            v = getattr(self, key)
+            if v is not None:
+                out[key] = v
+        return out
 
 
 class FaultInjected(RuntimeError):
@@ -127,6 +181,11 @@ class FaultRule:
     rid: Optional[int] = None
     shard: Optional[int] = None
     times: int = 1
+    # ---- network-layer rule parameters (serve/frontdoor) ----
+    tokens: Optional[int] = None  # disconnect: after this many streamed
+    #   tokens (default: the first one)
+    ms: Optional[int] = None  # slow_client: stall per consult, milliseconds
+    n: Optional[int] = None  # admission_burst: synthetic submits per firing
     fired: int = 0
 
     def __post_init__(self):
@@ -138,6 +197,10 @@ class FaultRule:
             raise ValueError(f"times must be >= 1, got {self.times}")
         if self.kind == "cancel" and self.rid is None:
             raise ValueError("cancel rules must name a rid")
+        if self.kind == "slow_client" and self.ms is None:
+            raise ValueError("slow_client rules must set ms= (stall length)")
+        if self.kind == "admission_burst" and (self.n is None or self.n < 1):
+            raise ValueError("admission_burst rules must set n= (burst size)")
 
     @property
     def armed(self) -> bool:
@@ -252,6 +315,56 @@ class FaultPlan:
             rids.append(rule.rid)
         return rids
 
+    # ------------------------------------------------------------------
+    # front-door (router/stream) hooks — serve/frontdoor consults these
+    # on the network path, so chaos plans cover slow clients, mid-stream
+    # disconnects, and synthetic admission bursts without a real client
+    # misbehaving on cue
+
+    def stall_ms(self, rid: Optional[int] = None) -> Optional[int]:
+        """Milliseconds to stall the stream write for ``rid`` (consumes a
+        matching ``slow_client`` rule), or None."""
+        for rule in self.rules:
+            if rule.kind != "slow_client" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            if rule.rid is not None and rule.rid != rid:
+                continue
+            self._record(rule, rid=rid, ms=rule.ms)
+            return rule.ms
+        return None
+
+    def disconnect_after(self, rid: Optional[int], n_sent: int) -> bool:
+        """Whether the stream for ``rid`` should be forcibly dropped now,
+        ``n_sent`` tokens in (consumes a matching ``disconnect`` rule once
+        the stream has shipped ``rule.tokens`` tokens; default 1)."""
+        for rule in self.rules:
+            if rule.kind != "disconnect" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            if rule.rid is not None and rule.rid != rid:
+                continue
+            if n_sent < (rule.tokens if rule.tokens is not None else 1):
+                continue
+            self._record(rule, rid=rid, tokens=n_sent)
+            return True
+        return False
+
+    def admission_burst(self) -> int:
+        """Synthetic admissions the router should inject this tick
+        (consumes matching ``admission_burst`` rules; 0 when none fire)."""
+        total = 0
+        for rule in self.rules:
+            if rule.kind != "admission_burst" or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            self._record(rule, n=rule.n)
+            total += rule.n
+        return total
+
     def corrupt_shards(self) -> set:
         """Shard indices whose manifest digests the loader should treat
         as mismatched (consumes ``corrupt_shard`` rules)."""
@@ -281,10 +394,11 @@ def parse_fault_plan(spec: str) -> FaultPlan:
             for item in argstr.split(","):
                 key, eq, val = item.partition("=")
                 key = key.strip()
-                if not eq or key not in ("tick", "rid", "shard", "times"):
+                if not eq or key not in ("tick", "rid", "shard", "times",
+                                         "tokens", "ms", "n"):
                     raise ValueError(
                         f"bad fault rule argument {item!r} in {part!r}; "
-                        "expected tick=/rid=/shard=/times=")
+                        "expected tick=/rid=/shard=/times=/tokens=/ms=/n=")
                 try:
                     kw[key] = int(val)
                 except ValueError:

@@ -1,0 +1,35 @@
+"""Streaming front door: the asyncio HTTP/SSE server that drives the
+engine tick loop and makes overload a first-class, tested regime
+(DESIGN.md §14).
+
+Layout
+------
+- :mod:`server`    — :class:`FrontDoor`: HTTP/1.1 + SSE on asyncio, owns
+  the engine thread and the tick task, graceful drain on SIGTERM/SIGINT.
+- :mod:`admission` — request validation, ``--tenants`` spec parsing, and
+  the typed :class:`AdmissionRejected` → HTTP mapping (429/413 bodies,
+  Retry-After).
+- :mod:`streaming` — SSE encoding and the cursor-diff
+  :class:`TokenStream` that fans tick results out to clients.
+- :mod:`ladder`    — the load-shedding :class:`DegradationLadder`
+  (shrink speculative K → disable speculation → shed lowest class).
+- :mod:`drain`     — :class:`DrainReport` + the KV-pool leak gate.
+"""
+from repro.serve.frontdoor.admission import parse_tenants, rejection_response
+from repro.serve.frontdoor.drain import DrainReport, leak_gate
+from repro.serve.frontdoor.ladder import DegradationLadder, LadderConfig
+from repro.serve.frontdoor.server import FrontDoor, run_server
+from repro.serve.frontdoor.streaming import TokenStream, sse_event
+
+__all__ = [
+    "DegradationLadder",
+    "DrainReport",
+    "FrontDoor",
+    "LadderConfig",
+    "TokenStream",
+    "leak_gate",
+    "parse_tenants",
+    "rejection_response",
+    "run_server",
+    "sse_event",
+]

@@ -26,6 +26,19 @@ tick actually accepted are charged — as a debt against the NEXT step's
 budget (:meth:`TokenBudgetFCFS.charge_accepted`).  Rejected draft tokens
 never touch the budget, so a lane whose drafts miss is not double-charged
 when the same tokens are re-proposed on the retry tick.
+
+Multi-tenant admission (serve/frontdoor, DESIGN.md §14): every request
+carries a ``tenant`` and a ``priority`` class (0 = highest; larger =
+lower).  A :class:`TenantPolicy` map gives each tenant a token-bucket
+rate limit (``rate`` admissions/s refilling up to ``burst``) and a
+default priority class; a submit that overdraws its tenant's bucket is
+rejected with a retryable ``AdmissionRejected("rate_limited")`` carrying
+``retry_after_s``.  The arrived queue orders by EFFECTIVE priority —
+``priority - floor(wait / aging_s)``, clamped at 0 — then FCFS within a
+class, so a low-priority request ages into the top class after a bounded
+wait and strict head-of-queue admission then guarantees it schedules: no
+starvation.  With every request in class 0 (the default) the order
+degenerates to exactly the old FCFS behavior.
 """
 from __future__ import annotations
 
@@ -46,10 +59,64 @@ __all__ = [
     "RequestState",
     "SamplingParams",
     "StepPlan",
+    "TenantPolicy",
+    "TokenBucket",
     "TokenBudgetFCFS",
 ]
 
 _ids = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantPolicy:
+    """Per-tenant admission policy: a token-bucket rate limit and the
+    default priority class for the tenant's requests.
+
+    ``rate`` is admissions per second refilling a bucket capped at
+    ``burst`` (None = unlimited).  ``priority`` is the class requests
+    inherit when they don't name one (0 = highest; larger = lower)."""
+
+    rate: Optional[float] = None
+    burst: int = 4
+    priority: int = 0
+
+    def __post_init__(self):
+        if self.rate is not None and self.rate <= 0:
+            raise ValueError(f"rate must be > 0 (or None), got {self.rate}")
+        if self.burst < 1:
+            raise ValueError(f"burst must be >= 1, got {self.burst}")
+        if self.priority < 0:
+            raise ValueError(f"priority must be >= 0, got {self.priority}")
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` tokens/s refill, capped at
+    ``burst``.  :meth:`try_take` returns None on success or the seconds
+    until one token will be available (the Retry-After hint)."""
+
+    __slots__ = ("rate", "burst", "tokens", "_t")
+
+    def __init__(self, rate: float, burst: int):
+        if rate <= 0 or burst < 1:
+            raise ValueError(f"need rate > 0 and burst >= 1, "
+                             f"got rate={rate} burst={burst}")
+        self.rate = float(rate)
+        self.burst = float(burst)
+        self.tokens = float(burst)
+        self._t: Optional[float] = None
+
+    def _refill(self, now: float) -> None:
+        if self._t is not None and now > self._t:
+            self.tokens = min(self.burst, self.tokens + (now - self._t) * self.rate)
+        if self._t is None or now > self._t:
+            self._t = now
+
+    def try_take(self, now: float, cost: float = 1.0) -> Optional[float]:
+        self._refill(now)
+        if self.tokens >= cost:
+            self.tokens -= cost
+            return None
+        return (cost - self.tokens) / self.rate
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +172,12 @@ class Request:                    # list.remove/in on running queues
     # wall-clock deadline in seconds from ``arrival``; enforced by the
     # engine at tick boundaries (None = no deadline)
     deadline_s: Optional[float] = None
+
+    # multi-tenant admission: the tenant the request bills against, and
+    # its priority class (0 = highest; None = inherit the tenant
+    # policy's class, resolved at scheduler.submit)
+    tenant: str = "default"
+    priority: Optional[int] = None
 
     state: RequestState = RequestState.QUEUED
     # why the request reached its terminal state ("length"/"stop"/
@@ -180,19 +253,32 @@ class StepPlan:
 
 
 class TokenBudgetFCFS:
-    """FCFS queue + per-step token budgeting against a PagedKVPool."""
+    """Priority/FCFS queue + per-step token budgeting against a
+    PagedKVPool.  With no tenant policies and every request in class 0
+    (the defaults), behavior is exactly the original strict FCFS."""
+
+    #: policy applied to tenants absent from the configured map
+    DEFAULT_POLICY = TenantPolicy()
 
     def __init__(self, *, token_budget: int, prefill_chunk: int,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 tenants: Optional[dict] = None,
+                 aging_s: float = 2.0):
         if token_budget < 1 or prefill_chunk < 1:
             raise ValueError("token_budget and prefill_chunk must be >= 1")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if aging_s <= 0:
+            raise ValueError(f"aging_s must be > 0 seconds, got {aging_s}")
         self.token_budget = token_budget
         self.prefill_chunk = prefill_chunk
         self.max_queue = max_queue
+        self.tenants: dict[str, TenantPolicy] = dict(tenants or {})
+        self.aging_s = aging_s
+        self._buckets: dict[str, TokenBucket] = {}
         self.waiting: list[Request] = []  # not yet arrived (virtual clock)
-        self.queue: deque[Request] = deque()  # arrived, FCFS
+        self.queue: deque[Request] = deque()  # arrived; kept sorted by
+        #   (effective priority, arrival, rid) — FCFS within a class
         # speculative accept debt: extra tokens emitted beyond the one
         # planned per decode lane, charged against the NEXT step's budget
         self._accept_debt = 0
@@ -209,7 +295,63 @@ class TokenBudgetFCFS:
             raise ValueError(f"accepted token charge must be >= 0, got {n_tokens}")
         self._accept_debt += n_tokens
 
+    # ---- multi-tenant admission -----------------------------------------
+
+    def policy(self, tenant: str) -> TenantPolicy:
+        """The tenant's configured policy (unknown tenants get the
+        unlimited class-0 default)."""
+        return self.tenants.get(tenant, self.DEFAULT_POLICY)
+
+    def shed_priority(self) -> int:
+        """The priority class the degradation ladder sheds first: the
+        LOWEST configured class (largest number), never class 0 — with a
+        single class configured nothing is sheddable and the ladder's
+        shed rung only refuses explicitly low-priority traffic."""
+        classes = [p.priority for p in self.tenants.values()]
+        return max(1, max(classes, default=1))
+
+    def _charge_bucket(self, req: Request) -> None:
+        pol = self.policy(req.tenant)
+        if pol.rate is None:
+            return
+        bucket = self._buckets.get(req.tenant)
+        if bucket is None:
+            bucket = self._buckets[req.tenant] = TokenBucket(
+                pol.rate, pol.burst)
+        retry_after = bucket.try_take(req.arrival)
+        if retry_after is not None:
+            raise AdmissionRejected(
+                "rate_limited", retryable=True, tenant=req.tenant,
+                retry_after_s=retry_after)
+
+    def effective_priority(self, req: Request, now: float) -> int:
+        """Aged class: every ``aging_s`` seconds of queue wait promotes a
+        request one class, clamped at 0 — bounded-wait starvation
+        freedom for low-priority traffic."""
+        pri = req.priority or 0
+        if pri <= 0:
+            return 0
+        return max(0, pri - int((now - req.arrival) / self.aging_s))
+
+    def _sort_queue(self, now: float) -> None:
+        """Re-rank the arrived queue by (effective priority, arrival,
+        rid).  Skipped entirely while every queued request sits in class
+        0 — the all-default hot path stays a plain FCFS deque."""
+        if any(r.priority for r in self.queue):
+            self.queue = deque(sorted(
+                self.queue,
+                key=lambda r: (self.effective_priority(r, now),
+                               r.arrival, r.rid),
+            ))
+
     def submit(self, req: Request) -> None:
+        if req.priority is None:
+            req.priority = self.policy(req.tenant).priority
+        elif req.priority < 0:
+            raise ValueError(f"priority must be >= 0, got {req.priority}")
+        self._charge_bucket(req)  # rate limit before queue bound: a
+        #   rate-limited tenant can't convert its excess into queue_full
+        #   rejections that punish everyone else
         if self.max_queue is not None and self.pending >= self.max_queue:
             raise AdmissionRejected(
                 "queue_full", retryable=True,
@@ -218,8 +360,12 @@ class TokenBudgetFCFS:
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
     def admit_arrivals(self, now: float) -> None:
+        moved = False
         while self.waiting and self.waiting[0].arrival <= now:
             self.queue.append(self.waiting.pop(0))
+            moved = True
+        if moved or self.queue:
+            self._sort_queue(now)
 
     def requeue(self, req: Request) -> None:
         """Evicted request: back to the head (it predates queued arrivals)."""
@@ -234,6 +380,7 @@ class TokenBudgetFCFS:
         return len(self.waiting) + len(self.queue)
 
     def plan(self, running: list[Request], pool, now: float = 0.0) -> StepPlan:
+        self._sort_queue(now)  # aging may have promoted a queued class
         decode = [r for r in running if r.state is RequestState.DECODE]
         # settle last tick's speculative accept debt first: accepted extras
         # ate real budget, so they displace this step's prefill work (a
@@ -242,11 +389,12 @@ class TokenBudgetFCFS:
         self._accept_debt = 0
         prefill: list[tuple[Request, int]] = []
         hit_tokens = 0
-        # continue sequences already mid-prefill (oldest first); every
-        # chunk joins the same co-batchable group as this step's admissions
+        # continue sequences already mid-prefill (best class first, FCFS
+        # within it); every chunk joins the same co-batchable group as
+        # this step's admissions
         for r in sorted(
             (r for r in running if r.state is RequestState.PREFILL),
-            key=lambda r: (r.arrival, r.rid),
+            key=lambda r: (self.effective_priority(r, now), r.arrival, r.rid),
         ):
             if budget <= 0:
                 break
@@ -272,7 +420,8 @@ class TokenBudgetFCFS:
             self.tracer.event(
                 "request_admitted", rid=r.rid, queue_s=now - r.arrival,
                 prompt_tokens=len(r.prefix), cached_tokens=r.prefill_pos,
-                replay=r.n_evictions > 0,
+                replay=r.n_evictions > 0, tenant=r.tenant,
+                priority=r.priority or 0,
             )
             running.append(r)
             n = min(self.prefill_chunk, len(r.prefix) - r.prefill_pos, budget)

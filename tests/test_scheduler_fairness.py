@@ -1,0 +1,274 @@
+"""Scheduler fairness under multi-tenant admission (ISSUE 9).
+
+Hypothesis property sweeps (gated on hypothesis being importable —
+the deterministic tests below always run): (1) under mixed priority
+classes with aging every submitted
+request is eventually admitted — no starvation; (2) per-tenant token
+buckets never admit beyond ``burst + rate * window``.  Deterministic
+unit tests below cover the bucket math, priority ordering, the
+all-class-0 FCFS fast path, and the rate-before-queue-bound ordering.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serve.faults import AdmissionRejected
+from repro.serve.scheduler import (
+    Request,
+    RequestState,
+    TenantPolicy,
+    TokenBucket,
+    TokenBudgetFCFS,
+)
+
+
+class FakePool:
+    """The minimal pool surface ``plan()`` touches: bounded slots,
+    nothing cached.  Lets fairness sweeps run pure scheduling."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._live: set[int] = set()
+        self._next = 0
+
+    def admit(self, n_tokens: int, tokens=None):
+        if len(self._live) >= self.n_slots:
+            return None
+        self._next += 1
+        self._live.add(self._next)
+        return self._next
+
+    def length(self, slot: int) -> int:
+        return 0
+
+    def release(self, slot: int) -> None:
+        self._live.remove(slot)
+
+
+def _req(arrival=0.0, priority=None, tenant="default", n_prompt=4,
+         max_new=4):
+    return Request(prompt=np.arange(1, 1 + n_prompt, dtype=np.int32),
+                   max_new=max_new, arrival=arrival, tenant=tenant,
+                   priority=priority)
+
+
+def _drive(sched, pool, *, dt=0.25, service_plans=2, max_t=400.0):
+    """Simulate the engine loop over a fake pool: plan each step, give
+    every running request ``service_plans`` planning rounds, then
+    finish it (slot freed).  Returns the virtual time each request was
+    admitted at."""
+    running: list[Request] = []
+    seen_plans: dict[int, int] = {}
+    admitted_at: dict[int, float] = {}
+    t = 0.0
+    while (sched.pending or running) and t < max_t:
+        sched.admit_arrivals(t)
+        plan = sched.plan(running, pool, now=t)
+        for r in list(running):
+            if r.rid not in admitted_at:
+                admitted_at[r.rid] = t
+            seen_plans[r.rid] = seen_plans.get(r.rid, 0) + 1
+            if seen_plans[r.rid] >= service_plans:
+                pool.release(r.slot)
+                running.remove(r)
+                r.state = RequestState.FINISHED
+        t += dt
+    return admitted_at
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweeps (the deterministic tests below must still
+# run without hypothesis, so only THIS section is gated — repo CI
+# best-effort installs hypothesis, the bare container lacks it)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - container without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(st.lists(
+        st.tuples(st.integers(0, 3),  # priority class
+                  st.floats(0.0, 4.0, allow_nan=False)),  # arrival
+        min_size=1, max_size=16,
+    ))
+    def test_no_starvation_under_mixed_priorities(specs):
+        """Every submitted request is admitted within a bounded wait,
+        no matter how priorities and arrivals interleave: aging
+        promotes any class to 0 after priority * aging_s seconds, and
+        class 0 is strict FCFS — so the oldest request can be overtaken
+        only finitely often."""
+        sched = TokenBudgetFCFS(token_budget=8, prefill_chunk=4,
+                                aging_s=0.5)
+        pool = FakePool(n_slots=2)
+        reqs = [_req(arrival=a, priority=p) for p, a in specs]
+        for r in reqs:
+            sched.submit(r)
+        admitted_at = _drive(sched, pool)
+        assert len(admitted_at) == len(reqs), "a request starved"
+        assert not sched.pending
+        for r in reqs:
+            assert r.rid in admitted_at
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        rate=st.floats(0.5, 10.0, allow_nan=False),
+        burst=st.integers(1, 5),
+        offsets=st.lists(st.floats(0.0, 8.0, allow_nan=False),
+                         min_size=1, max_size=64),
+    )
+    def test_token_bucket_never_exceeds_rate(rate, burst, offsets):
+        """Admissions over any window never exceed burst + rate*window."""
+        bucket = TokenBucket(rate, burst)
+        admitted = []
+        for t in sorted(offsets):
+            if bucket.try_take(t) is None:
+                admitted.append(t)
+        # the invariant holds within EVERY sub-window, not just
+        # end-to-end
+        for i, t0 in enumerate(admitted):
+            for j in range(i, len(admitted)):
+                assert (j - i + 1
+                        <= burst + rate * (admitted[j] - t0) + 1e-6)
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.floats(0.0, 10.0, allow_nan=False),
+                    min_size=1, max_size=32))
+    def test_unlimited_tenant_never_rejected(times):
+        sched = TokenBudgetFCFS(
+            token_budget=8, prefill_chunk=4,
+            tenants={"vip": TenantPolicy(rate=None)})
+        for t in sorted(times):
+            sched.submit(_req(arrival=t, tenant="vip"))
+        assert sched.pending == len(times)
+else:
+    @pytest.mark.skip(reason="property sweeps need hypothesis")
+    def test_no_starvation_under_mixed_priorities():
+        pass
+
+    @pytest.mark.skip(reason="property sweeps need hypothesis")
+    def test_token_bucket_never_exceeds_rate():
+        pass
+
+
+# ---------------------------------------------------------------------------
+# deterministic unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_token_bucket_refill_math():
+    b = TokenBucket(1.0, 2)
+    assert b.try_take(0.0) is None
+    assert b.try_take(0.0) is None  # burst of 2
+    retry = b.try_take(0.0)
+    assert retry == pytest.approx(1.0)  # one token refills in 1s
+    assert b.try_take(0.5) is not None  # still short
+    assert b.try_take(1.0) is None  # refilled
+    # non-monotonic clocks never mint tokens
+    assert b.try_take(0.0) is not None
+
+
+def test_rate_limited_rejection_is_typed_and_retryable():
+    sched = TokenBudgetFCFS(
+        token_budget=8, prefill_chunk=4,
+        tenants={"free": TenantPolicy(rate=0.5, burst=1)},
+    )
+    sched.submit(_req(arrival=0.0, tenant="free"))
+    with pytest.raises(AdmissionRejected) as ei:
+        sched.submit(_req(arrival=0.0, tenant="free"))
+    e = ei.value
+    assert e.reason == "rate_limited" and e.retryable
+    assert e.tenant == "free" and e.retry_after_s == pytest.approx(2.0)
+    assert e.http_status == 429
+
+
+def test_rate_limit_charged_before_queue_bound():
+    """A rate-limited tenant's excess must surface as rate_limited, not
+    consume everyone's queue_full budget."""
+    sched = TokenBudgetFCFS(
+        token_budget=8, prefill_chunk=4, max_queue=1,
+        tenants={"free": TenantPolicy(rate=0.001, burst=1)},
+    )
+    sched.submit(_req(arrival=0.0, tenant="free"))  # fills the queue
+    with pytest.raises(AdmissionRejected) as ei:
+        sched.submit(_req(arrival=0.0, tenant="free"))
+    assert ei.value.reason == "rate_limited"
+    with pytest.raises(AdmissionRejected) as ei:
+        sched.submit(_req(arrival=0.0, tenant="other"))
+    assert ei.value.reason == "queue_full"
+    assert ei.value.pending == 1 and ei.value.limit == 1
+
+
+def test_priority_orders_queue_fcfs_within_class():
+    sched = TokenBudgetFCFS(token_budget=8, prefill_chunk=4)
+    lo1 = _req(arrival=0.0, priority=2)
+    hi = _req(arrival=0.2, priority=0)
+    lo2 = _req(arrival=0.1, priority=2)
+    for r in (lo1, hi, lo2):
+        sched.submit(r)
+    sched.admit_arrivals(0.5)
+    assert [r.rid for r in sched.queue] == [hi.rid, lo1.rid, lo2.rid]
+
+
+def test_all_class_zero_keeps_plain_fcfs_deque():
+    """The fast path: no priorities anywhere -> queue is the original
+    arrival-ordered deque, untouched by sorting."""
+    sched = TokenBudgetFCFS(token_budget=8, prefill_chunk=4)
+    reqs = [_req(arrival=0.1 * i) for i in range(5)]
+    for r in reqs:
+        sched.submit(r)
+    sched.admit_arrivals(10.0)
+    assert [r.rid for r in sched.queue] == [r.rid for r in reqs]
+
+
+def test_aging_promotes_low_class_to_head():
+    sched = TokenBudgetFCFS(token_budget=8, prefill_chunk=4, aging_s=1.0)
+    old_lo = _req(arrival=0.0, priority=2)
+    fresh_hi = _req(arrival=2.5, priority=0)
+    sched.submit(old_lo)
+    sched.submit(fresh_hi)
+    sched.admit_arrivals(2.6)
+    # at t=2.6 old_lo has waited 2.6s -> aged 2 classes -> class 0,
+    # and within class 0 its earlier arrival wins the head
+    assert sched.effective_priority(old_lo, 2.6) == 0
+    assert [r.rid for r in sched.queue] == [old_lo.rid, fresh_hi.rid]
+
+
+def test_shed_priority_is_lowest_configured_class_never_zero():
+    assert TokenBudgetFCFS(token_budget=8, prefill_chunk=4
+                           ).shed_priority() == 1
+    sched = TokenBudgetFCFS(
+        token_budget=8, prefill_chunk=4,
+        tenants={"paid": TenantPolicy(priority=0),
+                 "batch": TenantPolicy(priority=3)},
+    )
+    assert sched.shed_priority() == 3
+
+
+def test_tenant_policy_resolves_default_priority():
+    sched = TokenBudgetFCFS(
+        token_budget=8, prefill_chunk=4,
+        tenants={"free": TenantPolicy(priority=2)},
+    )
+    r = _req(tenant="free")
+    sched.submit(r)
+    assert r.priority == 2  # inherited from the policy
+    pinned = _req(tenant="free", priority=0)
+    sched.submit(pinned)
+    assert pinned.priority == 0  # explicit pin wins
+    with pytest.raises(ValueError):
+        sched.submit(_req(priority=-1))
+
+
+def test_tenant_policy_validation():
+    with pytest.raises(ValueError):
+        TenantPolicy(rate=0.0)
+    with pytest.raises(ValueError):
+        TenantPolicy(burst=0)
+    with pytest.raises(ValueError):
+        TenantPolicy(priority=-1)
