@@ -38,6 +38,17 @@ the 200/429/413 admission split plus degradation-ladder transitions —
 the record is written to ``BENCH_serving_http.json`` by convention, and
 the run fails if the graceful drain leaks a single KV page.
 
+``--fleet N`` (with ``--http``) serves the same workload through N
+data-parallel replica SUBPROCESSES behind the supervised fleet router
+(``serve/fleet``): the record gains per-replica balance, the affinity
+hit rate, and failover counts, and is written to ``BENCH_fleet.json``.
+``--kill-mid-run`` SIGKILLs the busiest replica at the workload
+midpoint — the ttft/itl percentiles then measure client-visible tail
+latency UNDER crash failover (the router resubmits each orphaned
+stream's prompt + journaled tokens to a survivor and splices the
+continuation), and the run fails unless every admitted stream still
+completed and every drained replica's leak gate was clean.
+
 Latency percentiles (in-process mode) come from the engine's OWN
 lifecycle histograms
 (``Engine.summary()``), asserted equal to an external recomputation from
@@ -90,6 +101,233 @@ def _sse_events(resp):
             ev, data = None, None
 
 
+def _measured_client(port, prompt_tokens, gen, t0, arrival):
+    """One open-loop client: sleep to its arrival time, POST a streaming
+    generate, and timestamp every SSE frame at the socket.  Transport
+    failures (a dropped stream the router could not rescue) come back as
+    status 0 so they count as incomplete, never as a crash of the
+    benchmark itself."""
+    import http.client
+
+    t_due = t0 + float(arrival)
+    delay = t_due - time.perf_counter()
+    if delay > 0:
+        time.sleep(delay)
+    body = json.dumps({
+        "prompt": [int(t) for t in prompt_tokens],
+        "max_new": gen,
+        "stream": True,
+    })
+    c = http.client.HTTPConnection("127.0.0.1", port, timeout=300)
+    try:
+        c.request("POST", "/v1/generate", body,
+                  {"Content-Type": "application/json"})
+        r = c.getresponse()
+        if r.status != 200:
+            r.read()
+            return {"status": r.status}
+        token_times, done = [], None
+        for t_ev, ev, payload in _sse_events(r):
+            if ev == "token":
+                token_times.append(t_ev)
+            elif ev == "done":
+                done = payload
+        return {"status": 200, "t_due": t_due,
+                "token_times": token_times, "done": done}
+    except (ConnectionError, OSError, http.client.HTTPException):
+        return {"status": 0, "done": None, "token_times": []}
+    finally:
+        c.close()
+
+
+def run_fleet(args, cfg, prompts, lengths, arrivals):
+    """N-replica fleet run: real ``launch/serve.py`` subprocesses behind
+    the supervised router (serve/fleet); this process plays the clients
+    AND — with ``--kill-mid-run`` — the chaos monkey.  Latency is
+    measured at the client socket THROUGH the router, so a mid-run
+    SIGKILL's failover splice shows up exactly where a user would feel
+    it: one stretched inter-token gap, then the stream finishes."""
+    import os
+    import signal
+    import threading
+
+    from repro.serve.fleet import (
+        FleetRouter,
+        ProcessReplicaFactory,
+        Supervisor,
+    )
+
+    # replica children import repro from source; make sure the tree is
+    # on their path however this script itself was launched
+    src = os.path.abspath("src")
+    env_pp = os.environ.get("PYTHONPATH", "")
+    if src not in env_pp.split(os.pathsep):
+        os.environ["PYTHONPATH"] = (
+            src + (os.pathsep + env_pp if env_pp else ""))
+
+    replica_argv = [
+        sys.executable, "-m", "repro.launch.serve",
+        "--arch", args.arch, "--smoke",
+        # identical weights on every replica (same seed): failover
+        # splices must be token-identical across incarnations
+        "--seed", str(args.seed),
+        "--prompt-len", str(args.prompt_len),
+        "--gen", str(args.gen),
+        "--slots", str(args.slots),
+        "--page-size", str(args.page_size),
+        "--token-budget", str(args.token_budget),
+        "--prefill-chunk", str(args.prefill_chunk),
+        "--drain-timeout-s", str(args.drain_timeout_s),
+    ]
+    if args.pages is not None:
+        replica_argv += ["--pages", str(args.pages)]
+    for flag, on in (("--paged", args.paged),
+                     ("--paged-prefill", args.paged_prefill),
+                     ("--prefix-cache", args.prefix_cache),
+                     ("--kv-int8", args.kv_int8),
+                     ("--host-sample", args.host_sample),
+                     ("--quantize", args.quantize)):
+        if on:
+            replica_argv.append(flag)
+    if args.quantize:
+        replica_argv += ["--bits", str(args.bits)]
+
+    factory = ProcessReplicaFactory(replica_argv)
+    sup = Supervisor(factory, args.fleet, probe_interval_s=0.25,
+                     start_timeout_s=600.0,
+                     replica_drain_timeout_s=args.drain_timeout_s + 30.0)
+    router = FleetRouter(sup, port=0,
+                         drain_timeout_s=args.drain_timeout_s)
+    router.start_in_thread()
+
+    # warm EVERY replica's jit caches directly at its own port (prefix
+    # affinity would funnel a router-side warm-up to one replica), so
+    # compile time stays out of the measured ttft
+    import http.client
+    for h in sup.handles:
+        c = http.client.HTTPConnection("127.0.0.1", h.port, timeout=300)
+        try:
+            c.request("POST", "/v1/generate", json.dumps({
+                "prompt": [int(t) for t in prompts[0][:8]],
+                "max_new": 2, "stream": False,
+            }), {"Content-Type": "application/json"})
+            c.getresponse().read()
+        finally:
+            c.close()
+
+    results = [None] * args.requests
+    t0 = time.perf_counter()
+
+    def client(i):
+        results[i] = _measured_client(
+            router.port, prompts[i][: lengths[i]], args.gen, t0,
+            arrivals[i])
+
+    threads = [threading.Thread(target=client, args=(i,), daemon=True)
+               for i in range(args.requests)]
+    kill_info = {}
+    if args.kill_mid_run:
+        def killer():
+            delay = (t0 + float(arrivals[len(arrivals) // 2])
+                     - time.perf_counter())
+            if delay > 0:
+                time.sleep(delay)
+            # the busiest healthy replica takes the SIGKILL: its live
+            # streams are exactly the ones failover must rescue.  Wait
+            # (bounded) for a replica to actually BE mid-stream first —
+            # Poisson arrivals can cluster past the nominal midpoint,
+            # and killing an idle replica exercises nothing
+            deadline = time.perf_counter() + 30.0
+            h = None
+            while time.perf_counter() < deadline:
+                busy = sorted(
+                    (x for x in sup.handles
+                     if x.state == "healthy" and x.inflight > 0),
+                    key=lambda x: (-x.inflight, x.index))
+                if busy:
+                    h = busy[0]
+                    break
+                time.sleep(0.01)
+            if h is None:  # workload already over: kill any survivor
+                h = next(x for x in sup.handles if x.state == "healthy")
+            kill_info.update(replica=h.index, pid=h.pid,
+                             inflight_at_kill=h.inflight,
+                             t_kill_s=round(time.perf_counter() - t0, 3))
+            os.kill(h.pid, signal.SIGKILL)
+
+        threads.append(threading.Thread(target=killer, daemon=True))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    if kill_info:
+        # let the killed slot finish its respawn before draining: the
+        # record then shows the recovery, and the fresh incarnation's
+        # leak gate is actually read (a replica still mid-model-build
+        # has no gate yet and drains as None)
+        h = sup.handles[kill_info["replica"]]
+        deadline = time.perf_counter() + 180.0
+        while time.perf_counter() < deadline and h.state != "healthy":
+            time.sleep(0.25)
+        kill_info["recovered"] = h.state == "healthy"
+        kill_info["restarts"] = h.restarts
+
+    counters = dict(router.counters)
+    per_replica = [h.to_dict() for h in sup.handles]
+    report = router.drain_and_join(reason="bench_complete")
+
+    ok = [r for r in results if r and r["status"] == 200 and r["done"]]
+    ttft = [r["token_times"][0] - r["t_due"]
+            for r in ok if r["token_times"]]
+    itl = [b - a for r in ok
+           for a, b in zip(r["token_times"], r["token_times"][1:])]
+    statuses = [r["status"] for r in results if r]
+    total = sum(r["done"]["n_tokens"] for r in ok)
+    hits = counters["affinity_hits"]
+    fallbacks = counters["affinity_fallbacks"]
+    rec = {
+        "label": ("quip-%db" % args.bits) if args.quantize else "fp",
+        "arch": cfg.name,
+        "mode": "fleet",
+        "transport": "http-sse",
+        "decode_path": "paged" if args.paged else "gather-dense",
+        "replicas": args.fleet,
+        "requests": args.requests,
+        "rate_req_s": args.rate,
+        "kill_mid_run": bool(args.kill_mid_run),
+        "kill": kill_info or None,
+        "wall_s": round(wall, 3),
+        "tok_s": round(total / wall, 2),
+        # CLIENT-side percentiles through the router; with a mid-run
+        # kill these ARE the tail-under-crash-failover figures
+        "ttft_p50_s": rnd(pctl(ttft, 50), 4),
+        "ttft_p99_s": rnd(pctl(ttft, 99), 4),
+        "itl_p50_s": rnd(pctl(itl, 50), 4),
+        "itl_p99_s": rnd(pctl(itl, 99), 4),
+        "itl_max_s": rnd(max(itl), 4) if itl else None,
+        "http_200": statuses.count(200),
+        "http_503": statuses.count(503),
+        "http_other": len([s for s in statuses if s not in (200, 503)]),
+        "incomplete": args.requests - len(ok),
+        "failovers": counters["failovers"],
+        "failover_exhausted": counters["failover_exhausted"],
+        "affinity_hit_rate": round(hits / max(1, hits + fallbacks), 3),
+        "affinity_hits": hits,
+        "affinity_fallbacks": fallbacks,
+        "per_replica_served": [r["served"] for r in per_replica],
+        "per_replica_routed": [r["routed"] for r in per_replica],
+        "restarts": sum(r["restarts"] for r in per_replica),
+        "completed": report.completed,
+        "failed": report.failed,
+        "aborted_streams": report.aborted_streams,
+        "drain_clean": report.clean,
+        "replica_exit_codes": [r["exit_code"] for r in report.replicas],
+    }
+    return rec
+
+
 def run_http(args, cfg, engine, prompts, lengths, arrivals):
     """Over-the-wire run: the front door owns the engine; this process
     plays the clients.  Latency is measured where the user feels it —
@@ -108,34 +346,8 @@ def run_http(args, cfg, engine, prompts, lengths, arrivals):
     t0 = time.perf_counter()
 
     def client(i):
-        t_due = t0 + float(arrivals[i])
-        delay = t_due - time.perf_counter()
-        if delay > 0:
-            time.sleep(delay)
-        body = json.dumps({
-            "prompt": [int(t) for t in prompts[i][: lengths[i]]],
-            "max_new": args.gen,
-            "stream": True,
-        })
-        c = http.client.HTTPConnection("127.0.0.1", fd.port, timeout=300)
-        try:
-            c.request("POST", "/v1/generate", body,
-                      {"Content-Type": "application/json"})
-            r = c.getresponse()
-            if r.status != 200:
-                results[i] = {"status": r.status}
-                r.read()
-                return
-            token_times, done = [], None
-            for t_ev, ev, payload in _sse_events(r):
-                if ev == "token":
-                    token_times.append(t_ev)
-                elif ev == "done":
-                    done = payload
-            results[i] = {"status": 200, "t_due": t_due,
-                          "token_times": token_times, "done": done}
-        finally:
-            c.close()
+        results[i] = _measured_client(
+            fd.port, prompts[i][: lengths[i]], args.gen, t0, arrivals[i])
 
     threads = [threading.Thread(target=client, args=(i,), daemon=True)
                for i in range(args.requests)]
@@ -295,6 +507,18 @@ def main(argv=None):
                     help="with --http: fire N extra concurrent requests "
                          "mid-run and record the 200/429/413 admission "
                          "split — overload must shed, never crash")
+    ap.add_argument("--fleet", type=int, default=None, metavar="N",
+                    help="with --http: serve through N data-parallel "
+                         "replica SUBPROCESSES behind the supervised "
+                         "fleet router (serve/fleet) instead of one in-"
+                         "process front door; the record gains per-"
+                         "replica balance, affinity hit rate and "
+                         "failover counts (BENCH_fleet.json by default)")
+    ap.add_argument("--kill-mid-run", action="store_true",
+                    help="with --fleet: SIGKILL the busiest replica at "
+                         "the workload midpoint — ttft/itl then measure "
+                         "the tail UNDER crash failover, and the record "
+                         "carries failovers / restarts / recovery")
     ap.add_argument("--drain-timeout-s", type=float, default=10.0,
                     help="with --http: graceful-drain budget at shutdown")
     ap.add_argument("--seed", type=int, default=0)
@@ -310,11 +534,54 @@ def main(argv=None):
                  "are in-process-run features")
     if args.overload_burst and not args.http:
         ap.error("--overload-burst needs --http")
+    if args.fleet is not None:
+        if not args.http:
+            ap.error("--fleet serves over the wire; add --http")
+        if args.fleet < 1:
+            ap.error("--fleet needs >= 1 replica")
+        if args.overload_burst:
+            ap.error("--overload-burst probes the single front door's "
+                     "admission ladder; drop --fleet")
+        if args.kill_mid_run and args.fleet < 2:
+            ap.error("--kill-mid-run needs >= 2 replicas to fail over to")
+        if args.out == "BENCH_serving.json":
+            args.out = "BENCH_fleet.json"
+    elif args.kill_mid_run:
+        ap.error("--kill-mid-run kills a fleet replica; add --fleet N")
 
     cfg = get_smoke_config(args.arch)
     if not args.smoke:
         print("[serving_load] full-scale arch on CPU is impractical; "
               "using the smoke config (pass --smoke to silence this)")
+    if args.fleet is not None:
+        # fleet parent never builds a model — each replica subprocess
+        # builds its own (same seed, identical weights); this process
+        # only generates the workload and plays the clients
+        rng = np.random.default_rng(args.seed)
+        arrivals = np.cumsum(
+            rng.exponential(1.0 / args.rate, args.requests))
+        prompts = make_calibration(
+            cfg.vocab, n_segments=args.requests, seg_len=args.prompt_len,
+            seed=args.seed + 3,
+        ).tokens
+        lengths = rng.integers(
+            max(4, args.prompt_len // 2), args.prompt_len + 1,
+            args.requests)
+        if args.prefix_len:
+            header = prompts[0][: min(args.prefix_len,
+                                      args.prompt_len - 1)]
+            lengths = np.maximum(lengths, len(header) + 1)
+            prompts = np.concatenate(
+                [np.tile(header, (args.requests, 1)),
+                 prompts[:, len(header):]], axis=1)
+        rec = run_fleet(args, cfg, prompts, lengths, arrivals)
+        print(json.dumps(rec, indent=1))
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rec, f)
+        # the run fails if any leak gate tripped or any admitted
+        # stream was lost (failover exists precisely so it isn't)
+        return 0 if rec["drain_clean"] and rec["incomplete"] == 0 else 1
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     if args.quantize:

@@ -217,6 +217,121 @@ finally:
         srv.kill()
 PY
 
+# replica-fleet chaos smoke (serve/fleet, DESIGN.md §15): boot 3 replica
+# subprocesses behind the supervised router, stream a reference, then
+# kill -9 the exact replica serving a live stream mid-flight — the
+# router must fail the stream over to a survivor and splice a token-
+# identical continuation into the SAME SSE stream; finally SIGTERM the
+# router: the coordinated fleet drain must exit 0 with every drained
+# replica's leak gate clean
+python - <<'PY'
+import http.client, json, os, signal, socket, subprocess, sys
+import threading, time
+
+from repro.serve.fleet import prefix_key, rendezvous_rank
+
+s = socket.socket(); s.bind(("127.0.0.1", 0))
+port = s.getsockname()[1]; s.close()
+srv = subprocess.Popen(
+    [sys.executable, "-m", "repro.launch.serve", "--arch", "qwen3-14b",
+     "--smoke", "--fleet", "3", "--router-port", str(port),
+     "--prompt-len", "16", "--gen", "24", "--drain-timeout-s", "10"],
+    stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True)
+
+
+def get_json(path):
+    c = http.client.HTTPConnection("127.0.0.1", port, timeout=5)
+    try:
+        c.request("GET", path)
+        r = c.getresponse()
+        return r.status, json.loads(r.read())
+    finally:
+        c.close()
+
+
+try:
+    deadline = time.time() + 600   # three parallel model builds
+    while True:
+        assert time.time() < deadline, "fleet never became healthy"
+        assert srv.poll() is None, "router died during startup"
+        try:
+            status, fz = get_json("/fleetz")
+            if status == 200 and all(
+                    r["state"] == "healthy" for r in fz["replicas"]):
+                break
+        except OSError:
+            pass
+        time.sleep(0.5)
+
+    GEN = 24
+    prompts = {"a": list(range(1, 17)), "b": list(range(21, 37))}
+
+    def stream(prompt, out, kill_at=None):
+        body = json.dumps({"prompt": prompt, "max_new": GEN})
+        c = http.client.HTTPConnection("127.0.0.1", port, timeout=300)
+        try:
+            c.request("POST", "/v1/generate", body,
+                      {"Content-Type": "application/json"})
+            r = c.getresponse()
+            assert r.status == 200, r.status
+            ev = None
+            for raw in r.fp:
+                line = raw.decode("utf-8", "replace").rstrip("\n")
+                if line.startswith("event: "):
+                    ev = line[len("event: "):]
+                elif line.startswith("data: ") and ev == "token":
+                    out.append(json.loads(line[len("data: "):])["token"])
+                    if kill_at is not None and len(out) == 2:
+                        kill_at()
+        finally:
+            c.close()
+
+    # unkilled references through the fleet (same weights everywhere)
+    refs = {}
+    for k, p in prompts.items():
+        refs[k] = []
+        stream(p, refs[k])
+        assert len(refs[k]) == GEN, (k, len(refs[k]))
+
+    # the sticky-affinity target of prompt A is the replica that will be
+    # serving it — that one takes the kill -9, mid-stream
+    victim = rendezvous_rank(prefix_key(prompts["a"]), 3)[0]
+    pid = next(r["pid"] for r in get_json("/fleetz")[1]["replicas"]
+               if r["index"] == victim)
+    killed = []
+
+    def kill_victim():
+        os.kill(pid, signal.SIGKILL)
+        killed.append(pid)
+
+    got = {"a": [], "b": []}
+    ta = threading.Thread(target=stream,
+                          args=(prompts["a"], got["a"], kill_victim))
+    tb = threading.Thread(target=stream, args=(prompts["b"], got["b"]))
+    ta.start(); tb.start()
+    ta.join(180); tb.join(180)
+    assert killed, "kill never fired"
+    for k in ("a", "b"):
+        assert got[k] == refs[k], (
+            f"stream {k} diverged after replica kill: "
+            f"{got[k][:6]}... vs {refs[k][:6]}...")
+    _, fz = get_json("/fleetz")
+    assert fz["router"]["failovers"] >= 1, fz["router"]
+    assert fz["journal"]["live"] == 0, fz["journal"]
+
+    srv.send_signal(signal.SIGTERM)   # coordinated fleet drain
+    out, _ = srv.communicate(timeout=180)
+    print(out)
+    assert srv.returncode == 0, f"exit {srv.returncode}"
+    assert "fleet drain[sigterm]" in out
+    assert "fleet leak gates: clean on every drained replica" in out
+    print(f"[ci] fleet chaos smoke OK (killed replica {victim} "
+          f"pid {pid} mid-stream; streams token-identical)")
+finally:
+    if srv.poll() is None:
+        srv.kill()
+PY
+
 # tensor-parallel serving (serve/distributed.py) on a forced multi-device
 # CPU host: the full distributed test file, then a 2-way model-parallel
 # serve that must be token-identical to the single-device oracle
@@ -256,6 +371,12 @@ PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
 PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 8 \
   --paged --http --max-queue 8 --overload-burst 8 \
   --out "$tmp/BENCH_serving_http.json"
+# replica-fleet record: two replica subprocesses behind the router,
+# SIGKILL the busiest one mid-run — fails unless every admitted stream
+# still completed and every drained replica's leak gate was clean
+PYTHONPATH=src python benchmarks/serving_load.py --smoke --requests 10 \
+  --rate 6 --gen 12 --http --fleet 2 --kill-mid-run \
+  --out "$tmp/BENCH_fleet.json"
 PYTHONPATH=src python benchmarks/decode_microbench.py --smoke --reps 5 \
   --out "$tmp/BENCH_decode.json"
 # speculative draft-and-verify vs one-token decode (repetitive + random

@@ -78,10 +78,28 @@ artifact's quality manifest against a stored baseline
 (``launch/quality_report.py --write-baseline``) and warns on layers
 whose proxy loss regressed beyond ``--quality-threshold``;
 ``--quality-strict`` refuses to serve instead.
+
+``--fleet N`` (DESIGN.md §15; serve/fleet/) serves N data-parallel
+replica processes behind one router on ``--router-port``: each replica
+is this same CLI with the fleet flags stripped and an ephemeral
+``--http-port`` appended, supervised with health probes (heartbeat +
+tick-stall watchdog), exponential-backoff restarts and a give-up
+circuit breaker.  The router balances by sticky prefix affinity with
+least-loaded fallback, passes typed rejections through unchanged, and
+journals every relayed token so a replica crash mid-stream fails over
+to a survivor with a token-identical spliced continuation (greedy and
+on-device-sampled paths).  ``--replica-fault IDX:SPEC`` arms a
+fault plan on one replica's FIRST incarnation only — e.g.
+``--replica-fault '1:replica_kill@tick=40'`` for a crash drill —
+while a plain ``--fault-plan`` would re-arm on every respawn.
+SIGTERM on the router runs the coordinated fleet drain (stop
+admission, finish streams, drain every replica, aggregate leak
+gates).
 """
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -94,6 +112,31 @@ from repro.data import make_calibration
 from repro.models import build_model
 
 __all__ = ["greedy_generate", "quantized_generate", "build_engine", "main"]
+
+# flags that configure the fleet parent (router + supervisor) and must
+# NOT reach replica child processes; --http-port/--http-host are
+# stripped too because the factory appends fresh ones per spawn
+_FLEET_ONLY_FLAGS = frozenset((
+    "--fleet", "--router-port", "--probe-interval-s", "--max-restarts",
+    "--restart-backoff-s", "--replica-fault", "--http-port",
+    "--http-host",
+))
+
+
+def _replica_argv(argv: list) -> list:
+    """The replica child command tail: ``argv`` minus the fleet-only
+    flags (handles both ``--flag value`` and ``--flag=value``).  Flags
+    must be spelled out in full on a fleet command line — argparse
+    prefix abbreviations would slip past this filter."""
+    out, i = [], 0
+    while i < len(argv):
+        arg = argv[i]
+        if arg.split("=", 1)[0] in _FLEET_ONLY_FLAGS:
+            i += 1 if "=" in arg else 2
+            continue
+        out.append(arg)
+        i += 1
+    return out
 
 
 def greedy_generate(model, params, prompt, gen: int, kv_dtype=None):
@@ -286,6 +329,36 @@ def main(argv=None):
                     metavar="SECS",
                     help="graceful-drain budget: in-flight lanes past this "
                          "get cancelled (pages still released exactly)")
+    ap.add_argument("--tick-stall-s", type=float, default=10.0,
+                    metavar="SECS",
+                    help="tick-stall watchdog threshold: /healthz flips "
+                         "to 503 'wedged' when the engine has not "
+                         "COMPLETED a tick in this long (the supervisor "
+                         "hard-restarts wedged replicas)")
+    # replica fleet (DESIGN.md §15; serve/fleet/)
+    ap.add_argument("--fleet", type=int, default=None, metavar="N",
+                    help="serve N data-parallel replica processes (each "
+                         "this CLI + an ephemeral --http-port) behind "
+                         "one supervised router; implies HTTP serving")
+    ap.add_argument("--router-port", type=int, default=0, metavar="PORT",
+                    help="fleet router bind port (0 = ephemeral; with "
+                         "--fleet)")
+    ap.add_argument("--probe-interval-s", type=float, default=0.5,
+                    metavar="SECS",
+                    help="supervisor health-probe period (with --fleet)")
+    ap.add_argument("--max-restarts", type=int, default=3, metavar="N",
+                    help="give-up circuit breaker: park a replica slot "
+                         "as 'gone' after N restarts (with --fleet)")
+    ap.add_argument("--restart-backoff-s", type=float, default=0.5,
+                    metavar="SECS",
+                    help="base restart backoff, doubling per restart "
+                         "(with --fleet)")
+    ap.add_argument("--replica-fault", action="append", default=None,
+                    metavar="IDX:SPEC",
+                    help="arm a --fault-plan SPEC on replica IDX's FIRST "
+                         "incarnation only (repeatable; with --fleet) — "
+                         "e.g. '1:replica_kill@tick=40' for a crash "
+                         "drill whose respawn comes back clean")
     ap.add_argument("--no-ladder", action="store_true",
                     help="disable the load-shedding degradation ladder "
                          "(spec K shrink -> spec off -> shed lowest class)")
@@ -413,6 +486,76 @@ def main(argv=None):
             "--quality-strict needs a baseline to enforce; add "
             "--quality-baseline PATH"
         )
+    if args.fleet is None:
+        for flag, val, default in (
+                ("--router-port", args.router_port, 0),
+                ("--replica-fault", args.replica_fault, None)):
+            if val != default:
+                raise SystemExit(f"{flag} only applies to a replica "
+                                 f"fleet; add --fleet N")
+    else:
+        if args.fleet < 1:
+            raise SystemExit(f"--fleet needs >= 1 replica, "
+                             f"got {args.fleet}")
+        if args.check:
+            raise SystemExit(
+                "--check drives a fixed in-process workload; --fleet "
+                "serves HTTP replicas — drop one of the two"
+            )
+        if args.http_port is not None:
+            raise SystemExit(
+                "--fleet assigns each replica its own ephemeral "
+                "--http-port; use --router-port for the client-facing "
+                "port"
+            )
+    if args.fleet is not None:
+        # fleet parent: never builds a model — it spawns N replica
+        # copies of this CLI (fleet flags stripped, fresh --http-port
+        # appended per spawn) and serves the router in front of them
+        import asyncio
+
+        from repro.serve.fleet import (
+            FleetRouter,
+            ProcessReplicaFactory,
+            Supervisor,
+        )
+
+        first_spawn: dict[int, list] = {}
+        for spec in args.replica_fault or ():
+            idx_s, sep, plan = spec.partition(":")
+            if not sep or not idx_s.isdigit():
+                raise SystemExit(
+                    f"--replica-fault expects IDX:SPEC, got {spec!r}")
+            idx = int(idx_s)
+            if not 0 <= idx < args.fleet:
+                raise SystemExit(
+                    f"--replica-fault: replica {idx} out of range for "
+                    f"--fleet {args.fleet}")
+            try:  # validate here, where the error is attributable
+                parse_fault_plan(plan)
+            except ValueError as e:
+                raise SystemExit(f"--replica-fault {spec!r}: {e}")
+            first_spawn.setdefault(idx, []).extend(
+                ["--fault-plan", plan])
+        tail = _replica_argv(
+            list(argv) if argv is not None else sys.argv[1:])
+        factory = ProcessReplicaFactory(
+            [sys.executable, "-m", "repro.launch.serve", *tail],
+            host=args.http_host, first_spawn_args=first_spawn,
+        )
+        sup = Supervisor(
+            factory, args.fleet, host=args.http_host,
+            probe_interval_s=args.probe_interval_s,
+            max_restarts=args.max_restarts,
+            backoff_base_s=args.restart_backoff_s,
+            replica_drain_timeout_s=args.drain_timeout_s + 30.0,
+        )
+        router = FleetRouter(
+            sup, host=args.http_host, port=args.router_port,
+            drain_timeout_s=args.drain_timeout_s,
+        )
+        report = asyncio.run(router.serve_forever())
+        return report.exit_code
     mesh = None
     if args.mesh:
         try:
@@ -562,6 +705,7 @@ def main(argv=None):
         fd = FrontDoor(
             engine, host=args.http_host, port=args.http_port,
             drain_timeout_s=args.drain_timeout_s, ladder=not args.no_ladder,
+            tick_stall_s=args.tick_stall_s,
         )
         report = asyncio.run(fd.serve_forever())
         s = engine.summary()

@@ -42,7 +42,13 @@ Pieces (each usable on its own):
     asyncio server that owns the engine thread, typed-admission → HTTP
     mapping (429/413 + Retry-After), per-tenant token buckets +
     priority classes, graceful SIGTERM/SIGINT drain through the KV leak
-    gate, and a reversible load-shedding degradation ladder.
+    gate, and a reversible load-shedding degradation ladder;
+  * :mod:`repro.serve.fleet`     — data-parallel replica fleet: a
+    supervisor (heartbeat + tick-stall watchdog, backoff restarts,
+    give-up circuit breaker) and an HTTP router with sticky
+    prefix-affinity balancing and journal-backed in-flight failover
+    that resumes a crashed replica's stream token-identically on a
+    survivor.
 """
 from repro.serve.adapter import CachedDecoder
 from repro.serve.artifacts import ArtifactCorruption, load_quantized, save_quantized

@@ -270,6 +270,14 @@ class Engine:
             self.metrics.gauge(name, fn=fn)
         self.metrics.gauge("finished", fn=lambda: len(self.finished))
         self.metrics.gauge("faults_injected", fn=lambda: len(self.faults.log))
+        # tick-stall watchdog: seconds since the last COMPLETED tick.  A
+        # dispatch that wedges inside tick() stops this advancing, so a
+        # supervisor (or any external LB reading /healthz) can tell a
+        # hung engine from a merely idle one — the tick loop keeps
+        # ticking through idleness, so a healthy server's age stays
+        # near the driver's sleep period.
+        self._last_tick_t = 0.0
+        self.metrics.gauge("last_tick_age_s", fn=self.last_tick_age_s)
         for name in ("ttft_s", "itl_s", "queue_s", "e2e_s"):
             self.metrics.histogram(name)
         # quality canaries: the shadow sampler re-scores a deterministic
@@ -311,6 +319,7 @@ class Engine:
         deadline_s: Optional[float] = None,
         tenant: str = "default",
         priority: Optional[int] = None,
+        resume_tokens: tuple = (),
     ) -> Request:
         """Submit a request, or raise a typed :class:`AdmissionRejected`:
         non-retryable when the request can never fit this pool (per-
@@ -327,7 +336,20 @@ class Engine:
         request.  ``tenant`` bills the submit against that tenant's
         token bucket (retryable ``rate_limited`` rejection with a
         retry-after hint when overdrawn); ``priority`` pins the class
-        (None inherits the tenant policy's)."""
+        (None inherits the tenant policy's).
+
+        ``resume_tokens`` seeds the request with tokens a PREVIOUS
+        attempt already emitted (fleet failover, DESIGN.md §15): the
+        request prefills over ``prompt + resume_tokens`` — the same
+        replay machinery eviction uses — and continues emitting at
+        emission index ``len(resume_tokens)``.  ``max_new`` keeps its
+        original meaning (total generation budget including the resumed
+        tokens), so a resumed request's stream is token-identical to an
+        uninterrupted run for greedy decoding and, with on-device
+        sampling, for seeded sampling too (the draw key folds in the
+        emission index, which resumes where it left off; the host-side
+        numpy sampler's generator state cannot be fast-forwarded, so
+        only those two modes carry the identity guarantee)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError("empty prompt")
@@ -349,6 +371,16 @@ class Engine:
                 needed_pages=need - cached,
                 available_pages=self.pool.n_pages - 1,
             )
+        resume = [int(t) for t in resume_tokens]
+        if resume:
+            if len(resume) >= max_new:
+                raise ValueError(
+                    f"resume_tokens already meets max_new "
+                    f"({len(resume)} >= {max_new}); nothing to resume")
+            if resume[-1] in tuple(stop_tokens):
+                raise ValueError(
+                    "resume_tokens ends on a stop token; the original "
+                    "stream already finished")
         req = Request(
             prompt=prompt, max_new=max_new, arrival=arrival,
             sampling=sampling or SamplingParams(),
@@ -357,6 +389,15 @@ class Engine:
                         else deadline_s),
             tenant=tenant, priority=priority,
         )
+        if resume:
+            # seed the replay state exactly as an eviction would leave
+            # it: out_tokens carries the prior emissions (prefill covers
+            # req.prefix = prompt + resume), token_times backfills with
+            # the arrival stamp so latency accounting stays aligned, and
+            # ``resumed`` lets the stream layer skip re-sending them
+            req.out_tokens = resume
+            req.token_times = [arrival] * len(resume)
+            req.resumed = len(resume)
         if self.shadow is not None:
             # decided at submit so the decode paths know to materialize
             # this request's emission logits (crc32 of (seed, rid) —
@@ -479,6 +520,15 @@ class Engine:
         Takes effect immediately — not lazily on the next ``now()`` —
         so arrivals submitted before the next step share the epoch."""
         self._t0 = time.perf_counter()
+        self._last_tick_t = 0.0
+
+    def last_tick_age_s(self) -> float:
+        """Seconds since the last completed :meth:`tick` (since the
+        clock epoch if none has completed yet).  The tick-stall
+        watchdog: a dispatch wedged INSIDE a tick stops this advancing
+        past the stall threshold, which flips ``/healthz`` unhealthy so
+        a fleet supervisor can hard-restart the replica."""
+        return self.now() - self._last_tick_t
 
     def reset_stats(self) -> None:
         """Zero the cumulative counters and latency histograms (pairs
@@ -629,6 +679,7 @@ class Engine:
         # fresh sinks (not .clear()) so the returned lists stay valid
         self._tick_emitted = []
         self._tick_finished = []
+        self._last_tick_t = self.now()  # watchdog: tick COMPLETED
         return result
 
     # ---- internals ------------------------------------------------------

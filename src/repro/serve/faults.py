@@ -49,14 +49,29 @@ Fault kinds
     The front door injects ``n`` synthetic low-priority admissions at
     the matching tick — a retry storm on demand, driving the admission
     backpressure and degradation-ladder machinery.
+``replica_kill``
+    The replica process exits IMMEDIATELY (``os._exit(137)``) at the
+    matching tick boundary — indistinguishable from a ``kill -9`` to
+    the fleet supervisor and to every client streaming from it.  Fired
+    by the front door's tick loop, so it composes with ``tick=``.
+``replica_hang``
+    The engine thread sleeps forever at the matching tick boundary: a
+    wedged dispatch.  The event loop stays alive (``/healthz`` still
+    answers — flipping to 503 once ``last_tick_age_s`` passes the
+    stall threshold), so this exercises the watchdog-then-hard-kill
+    path rather than crash detection.
+``replica_slow``
+    The engine thread sleeps ``ms`` milliseconds per matching tick
+    (``times`` firings) — a degraded replica that stays healthy but
+    falls behind, driving the router's over-pressure fallback.
 
 Rule triggers: ``tick`` (engine step index, from the steps counter),
 ``rid`` (request id), ``shard`` (artifact shard index), ``times`` (how
 often the rule fires before disarming; default once).  Network-layer
 parameters: ``tokens`` (disconnect threshold), ``ms`` (slow-client
-stall), ``n`` (burst size).  A rule with no ``tick`` fires at the first
-opportunity; a rule with no ``rid`` binds to the first live lane of the
-dispatch it fires on.
+stall / replica_slow tick delay), ``n`` (burst size).  A rule with no
+``tick`` fires at the first opportunity; a rule with no ``rid`` binds
+to the first live lane of the dispatch it fires on.
 
 The plan string grammar (``--fault-plan``)::
 
@@ -93,6 +108,10 @@ FAULT_KINDS = (
     "slow_client",  # stall the SSE write path for the targeted stream
     "disconnect",  # drop the client connection mid-stream
     "admission_burst",  # inject a burst of synthetic admissions at a tick
+    # ---- replica-level faults (serve/fleet, DESIGN.md §15) ----
+    "replica_kill",  # the replica process exits abruptly (as if kill -9)
+    "replica_hang",  # the engine thread wedges forever (watchdog food)
+    "replica_slow",  # the engine thread stalls ms per tick (degraded)
 )
 
 
@@ -199,6 +218,8 @@ class FaultRule:
             raise ValueError("cancel rules must name a rid")
         if self.kind == "slow_client" and self.ms is None:
             raise ValueError("slow_client rules must set ms= (stall length)")
+        if self.kind == "replica_slow" and self.ms is None:
+            raise ValueError("replica_slow rules must set ms= (tick delay)")
         if self.kind == "admission_burst" and (self.n is None or self.n < 1):
             raise ValueError("admission_burst rules must set n= (burst size)")
 
@@ -351,6 +372,22 @@ class FaultPlan:
             self._record(rule, rid=rid, tokens=n_sent)
             return True
         return False
+
+    def replica_disruption(self) -> Optional[FaultRule]:
+        """The replica-level fault to apply at this tick boundary, or
+        None.  Consulted by the front door's tick loop BEFORE the tick
+        runs, with ``self.tick`` set to the count of completed ticks —
+        so ``tick=N`` disrupts after exactly N clean ticks.  Kills and
+        hangs are terminal for the process; ``replica_slow`` fires up
+        to ``times`` and sleeps ``ms`` per firing."""
+        for rule in self.rules:
+            if rule.kind not in ("replica_kill", "replica_hang",
+                                 "replica_slow") or not rule.armed:
+                continue
+            if not self._tick_match(rule):
+                continue
+            return self._record(rule, ms=rule.ms)
+        return None
 
     def admission_burst(self) -> int:
         """Synthetic admissions the router should inject this tick

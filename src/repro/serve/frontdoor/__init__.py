@@ -14,6 +14,9 @@ Layout
 - :mod:`ladder`    — the load-shedding :class:`DegradationLadder`
   (shrink speculative K → disable speculation → shed lowest class).
 - :mod:`drain`     — :class:`DrainReport` + the KV-pool leak gate.
+- :mod:`wire`      — stdlib HTTP/1.1 wire helpers (request parsing,
+  response framing, client-side ``open_http``) shared with the fleet
+  router and supervisor probes (:mod:`repro.serve.fleet`).
 """
 from repro.serve.frontdoor.admission import parse_tenants, rejection_response
 from repro.serve.frontdoor.drain import DrainReport, leak_gate

@@ -68,10 +68,10 @@ class GenerateParams:
     client-actionable message on anything malformed)."""
 
     __slots__ = ("prompt", "max_new", "tenant", "priority", "stream",
-                 "sampling", "stop_tokens", "deadline_s")
+                 "sampling", "stop_tokens", "deadline_s", "resume_tokens")
 
     def __init__(self, prompt, max_new, tenant, priority, stream,
-                 sampling, stop_tokens, deadline_s):
+                 sampling, stop_tokens, deadline_s, resume_tokens=()):
         self.prompt = prompt
         self.max_new = max_new
         self.tenant = tenant
@@ -80,6 +80,7 @@ class GenerateParams:
         self.sampling = sampling
         self.stop_tokens = stop_tokens
         self.deadline_s = deadline_s
+        self.resume_tokens = resume_tokens
 
 
 def _int_list(v, field: str) -> list:
@@ -96,7 +97,15 @@ def parse_generate_body(raw: bytes) -> GenerateParams:
     Schema: ``{"prompt": [int, ...], "max_new": int, "tenant"?: str,
     "priority"?: int, "stream"?: bool, "temperature"?: float,
     "top_p"?: float, "seed"?: int, "stop_tokens"?: [int, ...],
-    "deadline_s"?: float}``.
+    "deadline_s"?: float, "resume_tokens"?: [int, ...]}``.
+
+    ``resume_tokens`` is the fleet router's failover field (DESIGN.md
+    §15): tokens a previous attempt already emitted.  The engine
+    replays them (prefill covers prompt + resume) and the SSE stream
+    continues at token index ``len(resume_tokens)`` — it never re-sends
+    the resumed prefix.  ``max_new`` keeps its original total-budget
+    meaning, so a resubmitted body differs from the original only by
+    this one field.
     """
     try:
         body = json.loads(raw.decode("utf-8"))
@@ -105,7 +114,8 @@ def parse_generate_body(raw: bytes) -> GenerateParams:
     if not isinstance(body, dict):
         raise ValueError("body must be a JSON object")
     known = {"prompt", "max_new", "tenant", "priority", "stream",
-             "temperature", "top_p", "seed", "stop_tokens", "deadline_s"}
+             "temperature", "top_p", "seed", "stop_tokens", "deadline_s",
+             "resume_tokens"}
     unknown = set(body) - known
     if unknown:
         raise ValueError(f"unknown fields: {sorted(unknown)}")
@@ -147,10 +157,17 @@ def parse_generate_body(raw: bytes) -> GenerateParams:
         deadline_s = float(deadline_s)
         if deadline_s <= 0:
             raise ValueError("'deadline_s' must be > 0")
+    resume_tokens = tuple(_int_list(body.get("resume_tokens", []),
+                                    "resume_tokens"))
+    if len(resume_tokens) >= max_new:
+        raise ValueError(
+            f"'resume_tokens' ({len(resume_tokens)}) must leave room "
+            f"under 'max_new' ({max_new})")
     return GenerateParams(
         prompt=np.asarray(prompt, np.int32), max_new=max_new,
         tenant=tenant, priority=priority, stream=stream,
         sampling=sampling, stop_tokens=stop_tokens, deadline_s=deadline_s,
+        resume_tokens=resume_tokens,
     )
 
 

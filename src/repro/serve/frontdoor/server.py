@@ -25,8 +25,10 @@ from __future__ import annotations
 
 import asyncio
 import json
+import os
 import signal
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -43,17 +45,13 @@ from repro.serve.frontdoor.admission import (
 from repro.serve.frontdoor.drain import DrainReport
 from repro.serve.frontdoor.ladder import DegradationLadder, LadderConfig
 from repro.serve.frontdoor.streaming import StreamTable, sse_event, sse_headers
+from repro.serve.frontdoor.wire import read_request, write_response
 
 __all__ = ["FrontDoor", "run_server"]
 
-_REASONS = {
-    200: "OK", 400: "Bad Request", 404: "Not Found",
-    405: "Method Not Allowed", 413: "Payload Too Large",
-    429: "Too Many Requests", 431: "Request Header Fields Too Large",
-    500: "Internal Server Error", 503: "Service Unavailable",
-}
-_MAX_BODY = 8 << 20
-_MAX_HEADER_LINE = 16 << 10
+# how long a replica_hang fault wedges the engine thread: effectively
+# forever — the process lives until a supervisor hard-kills it
+_HANG_S = 86_400.0
 
 
 class FrontDoor:
@@ -72,7 +70,8 @@ class FrontDoor:
                  ladder: bool = True,
                  ladder_cfg: Optional[LadderConfig] = None,
                  idle_sleep_s: float = 0.001,
-                 stream_idle_timeout_s: float = 120.0):
+                 stream_idle_timeout_s: float = 120.0,
+                 tick_stall_s: float = 10.0):
         self.engine = engine
         self.metrics = engine.metrics
         self.faults = engine.faults
@@ -81,6 +80,11 @@ class FrontDoor:
         self.drain_timeout_s = drain_timeout_s
         self.idle_sleep_s = idle_sleep_s
         self.stream_idle_timeout_s = stream_idle_timeout_s
+        # tick-stall watchdog: past this, /healthz reports 503 "wedged"
+        # (a hung dispatch blocks the engine executor — the event loop
+        # stays responsive, so health checks see the wedge instead of a
+        # silently frozen-but-listening server)
+        self.tick_stall_s = tick_stall_s
         self.ladder = (
             DegradationLadder(engine, ladder_cfg) if ladder else None
         )
@@ -111,6 +115,18 @@ class FrontDoor:
         return await self._loop.run_in_executor(self._exec, fn, *args)
 
     def _tick_once(self):
+        if self.faults.rules:
+            # replica-level chaos fires at the tick boundary, on the
+            # engine thread — a kill takes the whole process down mid-
+            # stream exactly like SIGKILL, a hang wedges this executor
+            # (the watchdog's food), a slow stretches the tick
+            self.faults.tick = self.metrics.counter("steps").value
+            rule = self.faults.replica_disruption()
+            if rule is not None:
+                if rule.kind == "replica_kill":
+                    os._exit(137)
+                time.sleep(_HANG_S if rule.kind == "replica_hang"
+                           else rule.ms / 1000.0)
         if self.ladder is not None:
             self.ladder.observe(self.engine.now())
         return self.engine.tick()
@@ -121,6 +137,7 @@ class FrontDoor:
             p.prompt, p.max_new, arrival=eng.now(), sampling=p.sampling,
             stop_tokens=p.stop_tokens, deadline_s=p.deadline_s,
             tenant=p.tenant, priority=p.priority,
+            resume_tokens=p.resume_tokens,
         )
 
     def _burst_submit(self):
@@ -288,50 +305,43 @@ class FrontDoor:
                 pass
 
     async def _read_request(self, reader) -> Optional[tuple]:
-        line = await reader.readline()
-        if not line:
-            return None
-        try:
-            method, path, _version = line.decode("latin-1").split(None, 2)
-        except ValueError:
-            return None
-        headers = {}
-        while True:
-            hline = await reader.readline()
-            if len(hline) > _MAX_HEADER_LINE:
-                raise ValueError("header line too long")
-            if hline in (b"\r\n", b"\n", b""):
-                break
-            name, _, value = hline.decode("latin-1").partition(":")
-            headers[name.strip().lower()] = value.strip()
-        body = b""
-        n = int(headers.get("content-length", 0) or 0)
-        if n:
-            if n > _MAX_BODY:
-                raise ValueError("body too large")
-            body = await reader.readexactly(n)
-        return method.upper(), path, headers, body
+        return await read_request(reader)
 
     def _respond(self, writer, status: int, body: bytes, *,
                  content_type: str = "application/json",
                  extra_headers=()) -> None:
-        head = [
-            f"HTTP/1.1 {status} {_REASONS.get(status, 'OK')}",
-            f"Content-Type: {content_type}",
-            f"Content-Length: {len(body)}",
-            "Connection: close",
-        ]
-        head.extend(f"{k}: {v}" for k, v in extra_headers)
-        writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + body)
+        write_response(writer, status, body, content_type=content_type,
+                       extra_headers=extra_headers)
+
+    def healthz_payload(self) -> tuple:
+        """(status_code, payload) for ``/healthz``.  Liveness PLUS the
+        tick-progress watchdog: once ``last_tick_age_s`` exceeds
+        ``tick_stall_s`` the engine executor is wedged (a hung dispatch
+        never returns control to the tick loop) and the payload flips to
+        503 ``wedged`` — the signal a fleet supervisor hard-restarts on,
+        and what distinguishes a frozen server from a merely busy one.
+        Also carries the load fields the router's balancer reads:
+        ``inflight`` (live engine requests) and ``pressure`` (the
+        ladder's max of queue fill and pool occupancy)."""
+        eng = self.engine
+        age = eng.last_tick_age_s()
+        wedged = age > self.tick_stall_s
+        payload = {
+            "status": "wedged" if wedged else "ok",
+            "ticks": self.metrics.counter("steps").value,
+            "last_tick_age_s": round(age, 4),
+            "inflight": eng.scheduler.pending + len(eng.running),
+            "pressure": (round(self.ladder.pressure(), 4)
+                         if self.ladder is not None else 0.0),
+            "draining": self._draining,
+        }
+        return (503 if wedged else 200), payload
 
     async def _route(self, writer, method, path, headers, body) -> None:
         path = path.split("?", 1)[0]
         if path == "/healthz" and method == "GET":
-            payload = {
-                "status": "ok",
-                "ticks": self.metrics.counter("steps").value,
-            }
-            self._respond(writer, 200, json.dumps(payload).encode())
+            status, payload = self.healthz_payload()
+            self._respond(writer, status, json.dumps(payload).encode())
         elif path == "/readyz" and method == "GET":
             if self._draining:
                 self._respond(writer, 503, json.dumps(
@@ -410,7 +420,15 @@ class FrontDoor:
             status, hdrs, body = rejection_response(exc)
             self._respond(writer, status, body, extra_headers=hdrs)
             return
-        stream = self.streams.register(req)
+        except ValueError as e:  # e.g. malformed resume_tokens
+            self._respond(writer, 400, json.dumps(
+                {"error": "bad_request", "retryable": False,
+                 "detail": str(e)}
+            ).encode())
+            return
+        # a failover resubmission's resumed prefix was already delivered
+        # by the original stream — start the cursor past it
+        stream = self.streams.register(req, sent=req.resumed)
         try:
             if p.stream:
                 await self._stream_sse(writer, req, stream)
@@ -444,7 +462,10 @@ class FrontDoor:
             ms = self.faults.stall_ms(req.rid)
             if ms:  # chaos: a slow client not draining its socket
                 await asyncio.sleep(ms / 1000.0)
-        n_sent = 0
+        # "i" is the GLOBAL emission index: a resumed request continues
+        # from its resumed prefix, so spliced continuations stay
+        # contiguous with what the original replica already streamed
+        n_sent = stream.sent
         async for tok, done in stream.pump(self.stream_idle_timeout_s):
             if done is not None:
                 writer.write(sse_event("done", self._done_payload(done)))
@@ -473,12 +494,13 @@ class FrontDoor:
 
 def run_server(engine: Engine, *, host: str = "127.0.0.1", port: int = 0,
                drain_timeout_s: float = 5.0, ladder: bool = True,
-               ladder_cfg: Optional[LadderConfig] = None) -> DrainReport:
+               ladder_cfg: Optional[LadderConfig] = None,
+               tick_stall_s: float = 10.0) -> DrainReport:
     """Blocking entry point: serve until SIGTERM/SIGINT drains, return
     the :class:`DrainReport`.  SIGINT is handled as a drain — ^C gives
     summary lines and the leak gate, not a traceback."""
     fd = FrontDoor(
         engine, host=host, port=port, drain_timeout_s=drain_timeout_s,
-        ladder=ladder, ladder_cfg=ladder_cfg,
+        ladder=ladder, ladder_cfg=ladder_cfg, tick_stall_s=tick_stall_s,
     )
     return asyncio.run(fd.serve_forever())

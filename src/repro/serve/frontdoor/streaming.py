@@ -45,12 +45,15 @@ class TokenStream:
     the request is terminal and fully drained.
     """
 
-    def __init__(self, req: "Request"):
+    def __init__(self, req: "Request", sent: int = 0):
         self.req = req
-        self.sent = 0  # out_tokens[:sent] already yielded
+        # out_tokens[:sent] already yielded — nonzero for a failover
+        # resubmission, whose resumed prefix the ORIGINAL stream already
+        # delivered (the router splices; re-sending would duplicate)
+        self.sent = sent
         self._wake = asyncio.Event()
         # catch up work that happened before registration
-        if req.out_tokens or req.state.terminal:
+        if len(req.out_tokens) > sent or req.state.terminal:
             self._wake.set()
 
     def nudge(self) -> None:
@@ -100,8 +103,8 @@ class StreamTable:
     def __init__(self):
         self._streams: dict[int, TokenStream] = {}
 
-    def register(self, req: "Request") -> TokenStream:
-        ts = TokenStream(req)
+    def register(self, req: "Request", sent: int = 0) -> TokenStream:
+        ts = TokenStream(req, sent=sent)
         self._streams[req.rid] = ts
         return ts
 

@@ -11,7 +11,11 @@ holds the in-process driver:
   and optional periodic metrics/canary emission.
 
 The asynchronous driver lives in :mod:`repro.serve.frontdoor.server`,
-where the tick loop shares an event loop with HTTP/SSE I/O.
+where the tick loop shares an event loop with HTTP/SSE I/O.  One level
+up, :mod:`repro.serve.fleet` drives N such servers as a supervised
+replica fleet — each replica still runs this same tick contract, which
+is what makes crash failover resumable (any replica can replay
+prompt + emitted tokens and continue the stream token-identically).
 """
 from __future__ import annotations
 

@@ -187,6 +187,12 @@ class Request:                    # list.remove/in on running queues
     prefill_pos: int = 0  # tokens of ``prefix`` already written to pages
     out_tokens: list = dataclasses.field(default_factory=list)
     n_evictions: int = 0
+    # tokens a PREVIOUS attempt on another replica already emitted
+    # (fleet failover; Engine.submit(resume_tokens=...)): out_tokens is
+    # pre-seeded with them, so emission indices — and the on-device
+    # sampling keys folded from them — continue where the dead replica
+    # stopped.  The stream layer skips re-sending the first ``resumed``.
+    resumed: int = 0
 
     # timing (engine-relative seconds; epoch = Engine construction or the
     # last reset_clock).  ``t_admitted`` is the FIRST admission — an

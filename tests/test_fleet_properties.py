@@ -1,0 +1,107 @@
+"""Hypothesis crash-schedule sweep (ISSUE 10): under RANDOM mid-stream
+replica kills and restarts, every admitted request must either finish
+with the exact token stream of an unkilled single-replica reference or
+fail with a typed, client-actionable rejection — never a mangled or
+silently truncated stream — and the fleet drain's leak gates must be
+clean on every replica, including restarted incarnations.
+
+Deterministic fleet tests live in test_fleet.py (whose in-process
+harness this module reuses); this module holds only the property sweep
+and skips wholesale without hypothesis (repo idiom — scripts/ci.sh
+best-effort installs it)."""
+from __future__ import annotations
+
+import jax
+import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.data import make_calibration
+from repro.models import build_model
+from repro.serve.faults import parse_fault_plan
+from test_fleet import (
+    GEN,
+    PROMPT_LEN,
+    _fleet,
+    _gen_tokens,
+    _get_json,
+    _post,
+    _reference,
+    _wait,
+)
+
+
+@pytest.fixture(scope="module")
+def fp_stack():
+    cfg = get_smoke_config("qwen3-14b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = make_calibration(cfg.vocab, n_segments=2,
+                               seg_len=PROMPT_LEN, seed=3).tokens
+    return cfg, model, params, prompts
+
+
+@settings(max_examples=3, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.function_scoped_fixture])
+@given(data=st.data())
+def test_random_kill_restart_schedules(fp_stack, data):
+    cfg, model, params, prompts = fp_stack
+    refs = [_reference(model, params, p) for p in prompts]
+
+    n = data.draw(st.integers(2, 3), label="replicas")
+    n_kills = data.draw(st.integers(0, 2), label="kills")
+    schedule = [
+        (data.draw(st.integers(0, n - 1), label=f"kill{j}_replica"),
+         data.draw(st.integers(1, GEN - 1), label=f"kill{j}_tokens"))
+        for j in range(n_kills)
+    ]
+    restart_idx = data.draw(
+        st.one_of(st.none(), st.integers(0, n - 1)), label="restart")
+
+    # each scheduled kill is a mid-stream transport death on that
+    # replica's FIRST incarnation (exactly what the router sees when a
+    # process takes kill -9: EOF before the done frame)
+    plans: dict[int, list] = {}
+    for idx, k in schedule:
+        plans.setdefault(idx, []).append(f"disconnect@tokens={k}")
+
+    def fault_for(index, generation):
+        if generation == 0 and index in plans:
+            return parse_fault_plan(";".join(plans[index]))
+        return None
+
+    router = _fleet(model, params, n=n, fault_for=fault_for)
+    try:
+        # every admitted request finishes token-identical to the
+        # unkilled reference, whatever the schedule did
+        for p, ref in zip(prompts, refs):
+            assert _gen_tokens(router.port, p) == ref
+        # the typed-failure arm of the property: an inadmissible
+        # request is rejected with its typed body, never a broken
+        # stream
+        c, r = _post(router.port,
+                     {"prompt": [1, 2, 3], "max_new": 10_000})
+        import json as _json
+        body = _json.loads(r.read())
+        c.close()
+        assert r.status == 413 and body["retryable"] is False
+        if restart_idx is not None:
+            h = router.sup.handles[restart_idx]
+            h.proc.drain_and_join("chaos-kill")
+            assert _wait(
+                lambda: h.state == "healthy" and h.restarts >= 1,
+                timeout=60)
+            # the restarted incarnation serves the same stream
+            assert _gen_tokens(router.port, prompts[0]) == refs[0]
+        _, fz = _get_json(router.port, "/fleetz")
+        assert fz["journal"]["live"] == 0  # nothing left half-open
+    finally:
+        report = router.drain_and_join()
+    # leak gates: every drained replica (restarted incarnations
+    # included) exited 0 — zero leaked pages, zero mapped slots
+    assert report.exit_code == 0
+    assert all(r["exit_code"] in (0, None) for r in report.replicas)
+    assert report.failed == 0
